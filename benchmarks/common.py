@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+FIG5_SPACE = list(range(8, 136, 8))
+
+
+def fig5_sizes(n: int = 50, seed: int = 42):
+    """The paper's Fig. 5 sampling: M,N,K ~ U{8,16,...,128}, 50 draws."""
+    rng = np.random.default_rng(seed)
+    return [(int(rng.choice(FIG5_SPACE)), int(rng.choice(FIG5_SPACE)),
+             int(rng.choice(FIG5_SPACE))) for _ in range(n)]
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """(result, us_per_call) — median of `repeat` timed calls."""
+    times = []
+    result = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return result, float(np.median(times))
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,59 @@
+"""Paper Fig. 5: utilization / power / energy-efficiency distributions.
+
+50 random problem sizes (M,N,K ~ U{8..128}), five cluster
+configurations, matching the paper's methodology (from [6]).  Reports
+min/median/max utilization, median power delta and median
+energy-efficiency delta vs Base32fc, next to the published values.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cyclemodel import SNITCH_CONFIGS, SnitchClusterModel
+from benchmarks.common import emit, fig5_sizes, timed
+
+PAPER = {  # published medians (Fig. 5) and ranges
+    "base32fc": {"util": 0.882, "range": (0.785, 0.940)},
+    "zonl32fc": {"util": 0.934},
+    "zonl64fc": {"util": 0.981},
+    "zonl64dobu": {"util": 0.981},
+    "zonl48dobu": {"util": 0.985},
+}
+
+
+def run() -> dict:
+    sizes = fig5_sizes()
+    rows = {}
+
+    def sweep(cfg):
+        m = SnitchClusterModel(cfg)
+        return [m.matmul(*s) for s in sizes]
+
+    base_med_pow = base_med_eff = None
+    for name, cfg in SNITCH_CONFIGS.items():
+        results, us = timed(sweep, cfg, repeat=1)
+        utils = np.array([r.utilization for r in results])
+        pows = np.array([r.power_mw for r in results])
+        effs = np.array([r.energy_eff_gflops_w for r in results])
+        if name == "base32fc":
+            base_med_pow, base_med_eff = np.median(pows), np.median(effs)
+        row = {
+            "util_min": float(utils.min()),
+            "util_med": float(np.median(utils)),
+            "util_max": float(utils.max()),
+            "pow_delta": float(np.median(pows) / base_med_pow - 1),
+            "eff_delta": float(np.median(effs) / base_med_eff - 1),
+            "paper_util_med": PAPER.get(name, {}).get("util"),
+        }
+        rows[name] = row
+        emit(f"fig5_{name}", us,
+             f"util_med={row['util_med']:.3f} "
+             f"paper={row['paper_util_med']} "
+             f"range=[{row['util_min']:.3f},{row['util_max']:.3f}] "
+             f"powΔ={row['pow_delta']:+.1%} effΔ={row['eff_delta']:+.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

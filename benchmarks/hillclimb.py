@@ -1,0 +1,25 @@
+"""Hillclimb measurement helper: print the three roofline terms for a cell.
+
+  PYTHONPATH=src:. python -m benchmarks.hillclimb <arch> <shape> [multi]
+"""
+import sys
+
+def main():
+    import repro.launch.dryrun as dr
+    dr.SKIP = {}
+    arch, shape = sys.argv[1], sys.argv[2]
+    multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+    row = dr.run_cell(arch, shape, multi_pod=multi)
+    if row["status"] != "ok":
+        print(row)
+        return
+    print(f"CELL {row['cell']}")
+    print(f"  t_compute={row['t_compute_s']:.2f}s t_memory={row['t_memory_s']:.2f}s "
+          f"t_collective={row['t_collective_s']:.2f}s bottleneck={row['bottleneck']}")
+    print(f"  useful/HLO={row['useful_flop_ratio']:.3f} "
+          f"dev_mem={row['dev_bytes_total']/2**30:.2f}GiB "
+          f"(adj {row['dev_bytes_tpu_adj']/2**30:.2f}) fits={row['fits_hbm_tpu_adj']}")
+    print(f"  collectives={row['collectives']}")
+
+if __name__ == "__main__":
+    main()

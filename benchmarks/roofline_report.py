@@ -1,0 +1,80 @@
+"""Render results/dryrun.jsonl into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src:. python -m benchmarks.roofline_report results/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(path: str):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def render(rows, mesh_filter="pod16x16"):
+    ok = [r for r in rows if r.get("status") == "ok"
+          and r["cell"].endswith(mesh_filter)]
+    skipped = [r for r in rows if r.get("status") == "skipped"
+               and r["cell"].endswith(mesh_filter)]
+    print(f"### Roofline table — {mesh_filter} "
+          f"({len(ok)} cells + {len(skipped)} per-spec skips)\n")
+    print("| cell | t_compute | t_memory | t_collective | bottleneck | "
+          "useful/HLO FLOPs | dev mem (TPU-adj) | fits |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: r["cell"]):
+        cell = "/".join(r["cell"].split("/")[:2])
+        print(f"| {cell} | {fmt_s(r['t_compute_s'])} "
+              f"| {fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} "
+              f"| **{r['bottleneck']}** | {r['useful_flop_ratio']:.2f} "
+              f"| {r['dev_bytes_tpu_adj']/2**30:.2f} GiB "
+              f"| {'Y' if r['fits_hbm_tpu_adj'] else 'N'} |")
+    print()
+    for r in sorted(skipped, key=lambda r: r["cell"]):
+        cell = "/".join(r["cell"].split("/")[:2])
+        print(f"- skipped `{cell}`: {r['reason']}")
+    print()
+
+
+def summary(rows):
+    ok = [r for r in rows if r.get("status") == "ok"]
+    by_b = defaultdict(int)
+    for r in ok:
+        by_b[r["bottleneck"]] += 1
+    worst = sorted((r for r in ok if r["cell"].endswith("pod16x16")),
+                   key=lambda r: r["roofline_fraction"])[:5]
+    print("### Summary\n")
+    print(f"- {len(ok)} compiled cells; bottleneck split: {dict(by_b)}")
+    print("- worst roofline fractions (single-pod):")
+    for r in worst:
+        print(f"    - {r['cell']}: {r['roofline_fraction']:.3f} "
+              f"({r['bottleneck']})")
+    colls = sorted((r for r in ok if r["cell"].endswith("pod16x16")),
+                   key=lambda r: -r["t_collective_s"])[:5]
+    print("- largest collective terms (single-pod):")
+    for r in colls:
+        print(f"    - {r['cell']}: {fmt_s(r['t_collective_s'])} "
+              f"{r.get('collectives')}")
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")
+    render(rows, "pod16x16")
+    render(rows, "pod2x16x16")
+    summary(rows)

@@ -1,0 +1,59 @@
+"""Paper Table I analogue: memory-subsystem resource model.
+
+Silicon area cannot be measured in this container; instead we model the
+interconnect complexity terms that Table I varies — crossbar ports
+(cores x banks-per-hyperbank, the dominant area/routing driver) and the
+demux stage (hyperbanks) — and report them next to the published
+area/wire deltas.  For the TPU adaptation, the analogous "resources"
+are the VMEM bytes the dobu revolving buffers claim per kernel.
+"""
+
+from __future__ import annotations
+
+from repro.core.cyclemodel import SNITCH_CONFIGS, TpuPipelineModel
+from benchmarks.common import emit, timed
+
+# Published Table I (MGE / mm): total area and wire-length deltas
+PAPER_T1 = {
+    "base32fc": {"area": 5.26, "wire": 26.6},
+    "zonl32fc": {"area": 5.41, "wire": 27.4},
+    "zonl64fc": {"area": 6.48, "wire": 34.8},
+    "zonl64dobu": {"area": 5.90, "wire": 29.3},
+    "zonl48dobu": {"area": 5.32, "wire": 26.6},
+}
+
+CORE_PORTS = 8 * 3 + 1   # 8 cores x 3 ports + DMA branch
+
+
+def xbar_complexity(cfg) -> float:
+    """Crossbar cost ~ requestors x banks-per-hyperbank + demux stage."""
+    banks_per_hb = cfg.banks // cfg.hyperbanks
+    return CORE_PORTS * banks_per_hb + (CORE_PORTS * cfg.hyperbanks
+                                        if cfg.hyperbanks > 1 else 0)
+
+
+def run() -> dict:
+    rows = {}
+    base = xbar_complexity(SNITCH_CONFIGS["base32fc"])
+    for name, cfg in SNITCH_CONFIGS.items():
+        (rel,), us = timed(lambda: (xbar_complexity(cfg) / base,), repeat=1)
+        paper = PAPER_T1[name]
+        rows[name] = {"xbar_rel": rel, "paper_area": paper["area"],
+                      "paper_wire": paper["wire"]}
+        emit(f"table1_{name}", us,
+             f"xbar_rel={rel:.2f} banks={cfg.banks} "
+             f"hyperbanks={cfg.hyperbanks} "
+             f"paper_area={paper['area']}MGE paper_wire={paper['wire']}mm")
+
+    # TPU analogue: VMEM claimed by the kernel's revolving buffers
+    m = TpuPipelineModel()
+    for bm, bn, bk in [(128, 128, 128), (256, 256, 256), (512, 512, 512)]:
+        for slots, tag in [(1, "single"), (2, "dobu")]:
+            v = m.vmem_footprint(bm, bn, bk, slots=slots)
+            emit(f"table1_vmem_{tag}_{bm}", 0.0,
+                 f"vmem_bytes={v} frac_of_vmem={v / m.p.vmem_bytes:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

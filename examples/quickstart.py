@@ -1,0 +1,58 @@
+"""Quickstart: the paper's zero-stall matmul, end to end.
+
+1. Runs the Pallas dobu kernel (interpret mode on CPU) vs its oracle.
+2. Shows the two mechanisms' predicted effect with the cycle models:
+   Snitch cluster (paper-faithful) and TPU pipeline (our target).
+3. Runs a tiny assigned-architecture model through one forward.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cyclemodel import SNITCH_CONFIGS, SnitchClusterModel, \
+    TpuPipelineModel
+from repro.kernels import ops, ref
+from repro.configs import get_config
+from repro.models import Ctx, build_model
+
+
+def main():
+    # --- 1. the kernel ------------------------------------------------
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    c = ops.matmul(a, b, impl="interpret", bm=32, bn=32, bk=32)
+    err = float(jnp.max(jnp.abs(c - ref.matmul_ref(a, b))))
+    print(f"[kernel] zero-stall matmul (dobu, interpret): maxerr={err:.2e}")
+
+    # --- 2. the paper's result, in model form --------------------------
+    base = SnitchClusterModel(SNITCH_CONFIGS["base32fc"]).matmul(32, 32, 32,
+                                                                 include_dma=False)
+    ours = SnitchClusterModel(SNITCH_CONFIGS["zonl48dobu"]).matmul(32, 32, 32,
+                                                                   include_dma=False)
+    print(f"[paper]  Snitch 32^3 utilization: base {base.utilization:.1%} "
+          f"-> zonl48dobu {ours.utilization:.1%} "
+          f"(paper: 95.3% -> 99.0%)")
+
+    tpu = TpuPipelineModel()
+    db = tpu.matmul(8192, 8192, 8192, 512, 512, 512, double_buffered=True)
+    sb = tpu.matmul(8192, 8192, 8192, 512, 512, 512, double_buffered=False)
+    print(f"[tpu]    8k^3 MXU utilization: single-buffered "
+          f"{sb.mxu_utilization:.1%} -> dobu {db.mxu_utilization:.1%}")
+
+    # --- 3. a model forward -------------------------------------------
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    ctx = Ctx(impl="jnp", dtype=jnp.float32)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+             "targets": jnp.zeros((1, 8), jnp.int32)}
+    loss = model.loss(params, batch, ctx)
+    print(f"[model]  {cfg.name}: one train-loss eval = {float(loss):.3f}")
+
+
+if __name__ == "__main__":
+    main()

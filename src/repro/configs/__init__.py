@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    RunConfig,
+    ShapeSpec,
+    get_config,
+    input_specs,
+    list_configs,
+    register,
+    token_count,
+)
+
+__all__ = ["SHAPES", "ModelConfig", "RunConfig", "ShapeSpec", "get_config",
+           "input_specs", "list_configs", "register", "token_count"]

@@ -1,0 +1,246 @@
+"""Config system: model/run dataclasses, shape registry, input specs.
+
+Every assigned architecture is a ``ModelConfig`` in its own module
+(``src/repro/configs/<id>.py``) carrying the exact published dims, plus
+a ``reduced()`` smoke-test variant of the same family.  Input shapes
+are global; ``input_specs`` builds ShapeDtypeStruct stand-ins (no
+allocation) for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "RunConfig", "ShapeSpec", "SHAPES", "register",
+           "get_config", "list_configs", "input_specs", "token_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    # MLP
+    mlp_type: str = "swiglu"      # swiglu | geglu | mlp(gelu)
+    qkv_bias: bool = False
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    conv_kernel: int = 4
+    # hybrid (zamba2-style shared attention)
+    attn_every: int = 0           # shared attn block every N mamba layers
+    # enc-dec
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+    # modality frontend stub: input_specs provides precomputed embeddings
+    frontend: str = ""            # "" | "patch" | "audio"
+    frontend_tokens: int = 0      # patch/frame positions prepended to text
+    # misc
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    remat: str = "dots"           # none | dots | full
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.n_heads == 0:
+            return 0  # attention-free (pure SSM)
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run 500k-token contexts? (spec: SSM/hybrid only)"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Total parameters (analytic; cross-checked by tests)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        qkv = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.qkv_bias:
+            qkv += (self.n_heads + 2 * self.n_kv_heads) * hd
+        gates = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+        mlp = gates * d * self.d_ff
+        norms = 2 * d
+        if self.family == "moe":
+            moe = self.n_experts * gates * d * self.d_ff + d * self.n_experts
+            per_layer = qkv + moe + norms
+            n_layers = self.n_layers
+        elif self.family == "ssm":
+            per_layer = self._mamba_params() + d
+            n_layers = self.n_layers
+        elif self.family == "hybrid":
+            mamba_layers = self.n_layers
+            shared = qkv + mlp + norms + 2 * d * d  # + concat re-projections
+            return (mamba_layers * (self._mamba_params() + d) + shared
+                    + self.vocab_size * d * (1 if self.tie_embeddings else 2) + d)
+        elif self.family == "encdec":
+            enc = self.encoder_layers * (qkv + mlp + norms)
+            dec = self.decoder_layers * (2 * qkv + mlp + 3 * d)
+            return enc + dec + self.vocab_size * d * (1 if self.tie_embeddings else 2) + 2 * d
+        else:
+            per_layer = qkv + mlp + norms
+            n_layers = self.n_layers
+        if self.family in ("dense", "moe", "ssm", "vlm"):
+            emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+            return n_layers * per_layer + emb + d
+        raise ValueError(self.family)
+
+    def _mamba_params(self) -> int:
+        d, di, n, h = (self.d_model, self.d_inner, self.ssm_state,
+                       self.ssm_heads)
+        g = self.ssm_groups
+        in_proj = d * (2 * di + 2 * g * n + h)
+        conv = (di + 2 * g * n) * self.conv_kernel
+        out = di * d + di  # out_proj + gated norm
+        return in_proj + conv + out + 3 * h  # A_log, D, dt_bias
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        gates = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+        inactive = (self.n_experts - self.experts_per_token) * gates \
+            * self.d_model * self.d_ff * self.n_layers
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Training/serving hyperparameters."""
+    seq_len: int = 1024
+    global_batch: int = 8
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    seed: int = 0
+    microbatches: int = 1          # >1 enables grad accumulation / PP chunks
+    grad_compression: str = "none"  # none | int8 | topk
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 100
+    keep_ckpts: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_REDUCED: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             reduced: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[name] = full
+    _REDUCED[name] = reduced
+
+
+def get_config(name: str, *, reduced: bool = False) -> ModelConfig:
+    _ensure_loaded()
+    table = _REDUCED if reduced else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]()
+
+
+def list_configs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_ARCH_MODULES = [
+    "llava_next_34b", "granite_moe_1b_a400m", "olmoe_1b_7b",
+    "seamless_m4t_large_v2", "mistral_large_123b", "qwen1_5_32b",
+    "gemma_7b", "deepseek_coder_33b", "zamba2_2_7b", "mamba2_130m",
+]
+
+
+def _ensure_loaded() -> None:
+    import importlib
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def token_count(shape: ShapeSpec) -> int:
+    if shape.kind == "decode":
+        return shape.global_batch  # one new token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train/prefill: token ids (+ stub frontend embeddings for vlm/audio).
+    decode: one new token per sequence + the populated caches are built
+    separately by the launcher (cache specs come from the model).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = S
+        if cfg.frontend:
+            s_text = S - cfg.frontend_tokens
+            specs["frontend_embeds"] = sds((B, cfg.frontend_tokens,
+                                            cfg.d_model), dtype)
+        specs["tokens"] = sds((B, s_text), jnp.int32)
+        if shape.kind == "train":
+            specs["targets"] = sds((B, s_text), jnp.int32)
+        if cfg.family == "encdec":
+            # encoder consumes stub audio frames, decoder consumes text
+            specs = {
+                "frontend_embeds": sds((B, S, cfg.d_model), dtype),
+                "tokens": sds((B, S), jnp.int32),
+            }
+            if shape.kind == "train":
+                specs["targets"] = sds((B, S), jnp.int32)
+    else:  # decode
+        specs["tokens"] = sds((B, 1), jnp.int32)
+    return specs

@@ -1,0 +1,36 @@
+"""Core: the paper's contribution, adapted to TPU execution.
+
+- loopnest:   zero-overhead loop-nest IR (FREP sequencer analogue)
+- pipeline:   dobu revolving-buffer schedule (zero-conflict analogue)
+- cyclemodel: Snitch-cluster cycle model (paper-faithful baseline) and
+              TPU MXU/DMA pipeline model
+- roofline:   3-term roofline from compiled XLA artifacts
+"""
+
+from repro.core.loopnest import Loop, LoopNest, matmul_nest
+from repro.core.pipeline import DobuSchedule, Phase
+from repro.core.cyclemodel import (
+    SNITCH_CONFIGS,
+    MatmulResult,
+    SnitchClusterModel,
+    SnitchConfig,
+    TpuParams,
+    TpuPipelineModel,
+)
+from repro.core.roofline import (
+    HW,
+    CollectiveStats,
+    RooflineReport,
+    analyze_compiled,
+    model_flops,
+    parse_collective_bytes,
+)
+
+__all__ = [
+    "Loop", "LoopNest", "matmul_nest",
+    "DobuSchedule", "Phase",
+    "SNITCH_CONFIGS", "MatmulResult", "SnitchClusterModel", "SnitchConfig",
+    "TpuParams", "TpuPipelineModel",
+    "HW", "CollectiveStats", "RooflineReport", "analyze_compiled",
+    "model_flops", "parse_collective_bytes",
+]

@@ -1,0 +1,264 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE, but our
+models scan over layers (an 88-deep scan on mistral-large-123b), so
+FLOPs/bytes/collective-bytes would be undercounted by ~the layer count.
+The compiled HLO annotates loops with
+``backend_config={"known_trip_count":{"n":"88"}}`` — this module parses
+the HLO text, builds per-computation symbol tables (post-optimization
+HLO references operands by name only) and the computation call graph,
+then accumulates
+
+  * dot FLOPs           (2 * prod(result dims) * prod(contracted dims))
+  * op bytes            (result + operand sizes of materializing ops)
+  * collective bytes    (weighted: all-reduce 2x — ring RS+AG)
+
+with while bodies multiplied by their known trip counts (nested loops
+compose).  Fusion computations inherit their caller's multiplier; their
+internal ops count FLOPs only (fusion internals never materialize — the
+fusion call site contributes the bytes).
+
+This is an estimator (XLA's own cost model differs in detail);
+EXPERIMENTS.md reports it alongside raw cost_analysis numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["HloCosts", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# computation headers sit at column 0 and end with "{"; parameter lists
+# may contain nested parens (tuples), so match greedily.
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"n"\s*:\s*"?(\d+)')
+_CALL_SINGLE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_CALL_LIST = re.compile(
+    r"(?:calls|branch_computations)=\{([^}]*)\}")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVE_W = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+# ops whose result/operands don't represent real HBM traffic
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "custom-call", "copy-done", "send", "recv",
+    "reshape", "broadcast",
+}
+
+
+def _type_info(type_str: str) -> tuple[int, list[list[int]]]:
+    """(total bytes, per-array dim lists) for an HLO type string."""
+    total = 0
+    dims_all = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dd = [int(d) for d in dims.split(",")] if dims else []
+        n = 1
+        for d in dd:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        dims_all.append(dd)
+    return total, dims_all
+
+
+def _split_call(op_line: str) -> str:
+    i = op_line.find("(")
+    depth = 0
+    for j in range(i, len(op_line)):
+        if op_line[j] == "(":
+            depth += 1
+        elif op_line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return op_line[i + 1:j]
+    return op_line[i + 1:]
+
+
+@dataclasses.dataclass
+class _Comp:
+    ops: list = dataclasses.field(default_factory=list)   # raw op lines
+    symbols: dict = dataclasses.field(default_factory=dict)  # name -> type str
+    is_entry: bool = False
+
+
+@dataclasses.dataclass
+class _CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    edges: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collective_by_kind: dict[str, float]
+    collective_count: dict[str, int]
+    n_while: int
+    max_trip: int
+    dot_flops_by_shape: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+
+def _parse_computations(hlo: str) -> tuple[dict[str, _Comp], str | None]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        hdr = _COMP_HDR.match(raw)
+        if hdr:
+            name = hdr.group(2)
+            cur = comps.setdefault(name, _Comp())
+            if hdr.group(1):
+                cur.is_entry = True
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(raw)
+        if m:
+            cur.ops.append(raw)
+            cur.symbols[m.group(1)] = m.group(2)
+    return comps, entry
+
+
+def _operand_bytes(call_text: str, symbols: dict) -> float:
+    total = 0.0
+    for name in _OPERAND_NAME.findall(call_text):
+        t = symbols.get(name)
+        if t:
+            total += _type_info(t)[0]
+    return total
+
+
+def analyze_hlo(hlo: str) -> HloCosts:
+    comps, entry = _parse_computations(hlo)
+    stats: dict[str, _CompStats] = {}
+    fused: set[str] = set()
+    n_while = 0
+    max_trip = 1
+    dot_by_shape: dict[str, float] = defaultdict(float)
+
+    for name, comp in comps.items():
+        st = stats.setdefault(name, _CompStats())
+        for line in comp.ops:
+            m = _OP_RE.match(line)
+            op_name, result_type, opcode = m.groups()
+            call_text = _split_call(line)
+
+            mult = 1
+            if opcode == "while":
+                n_while += 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    mult = int(tm.group(1))
+                    max_trip = max(max_trip, mult)
+            children = [c for c in _CALL_SINGLE.findall(line)]
+            for cm in _CALL_LIST.finditer(line):
+                children.extend(_OPERAND_NAME.findall(cm.group(1)))
+            for child in children:
+                st.edges.append((child, mult))
+                if opcode == "fusion":
+                    fused.add(child)
+
+            if opcode.endswith("-done"):
+                continue
+            base_op = opcode[:-6] if opcode.endswith("-start") else opcode
+
+            if opcode == "dot":
+                rb, rdims = _type_info(result_type)
+                lhs_name = _OPERAND_NAME.search(call_text)
+                contract = 1
+                if lhs_name:
+                    lt = comp.symbols.get(lhs_name.group(1))
+                    if lt:
+                        _, ldims = _type_info(lt)
+                        cm2 = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                                        line)
+                        if cm2 and cm2.group(1) and ldims:
+                            for d in cm2.group(1).split(","):
+                                di = int(d)
+                                if di < len(ldims[0]):
+                                    contract *= ldims[0][di]
+                res = 1
+                for d in (rdims[0] if rdims else []):
+                    res *= d
+                fl = 2.0 * res * contract
+                st.flops += fl
+                dot_by_shape[result_type.split("{")[0]] += fl
+                st.bytes += rb + _operand_bytes(call_text, comp.symbols)
+            elif base_op in _COLLECTIVE_W:
+                ob = _operand_bytes(call_text, comp.symbols)
+                rb, _ = _type_info(result_type)
+                # traffic model: all-gather moves ~the gathered output;
+                # reduce-scatter/permute/a2a move ~the input; all-reduce
+                # ~2x input (ring RS+AG).
+                moved = rb if base_op == "all-gather" else ob
+                st.coll_bytes[base_op] += _COLLECTIVE_W[base_op] * moved
+                st.coll_count[base_op] += 1
+                st.bytes += rb + ob
+            elif opcode not in _SKIP_BYTES_OPS:
+                rb, _ = _type_info(result_type)
+                st.bytes += rb + _operand_bytes(call_text, comp.symbols)
+
+    for name in fused:
+        if name in stats:
+            stats[name].bytes = 0.0
+
+    memo: dict[str, tuple] = {}
+
+    def visit(name: str, seen: frozenset):
+        if name in memo:
+            return memo[name]
+        if name not in stats or name in seen:
+            return 0.0, 0.0, {}, {}
+        st = stats[name]
+        f, b = st.flops, st.bytes
+        cb = dict(st.coll_bytes)
+        cc = dict(st.coll_count)
+        for child, mult in st.edges:
+            cf, cbt, ccb, ccc = visit(child, seen | {name})
+            f += mult * cf
+            b += mult * cbt
+            for kk, vv in ccb.items():
+                cb[kk] = cb.get(kk, 0.0) + mult * vv
+            for kk, vv in ccc.items():
+                cc[kk] = cc.get(kk, 0) + mult * vv
+        memo[name] = (f, b, cb, cc)
+        return memo[name]
+
+    if entry is None:
+        entry = next(iter(stats), None)
+    f, b, cb, cc = visit(entry, frozenset()) if entry else (0.0, 0.0, {}, {})
+    return HloCosts(
+        flops=f, bytes=b,
+        collective_bytes=sum(cb.values()),
+        collective_by_kind=cb, collective_count=cc,
+        n_while=n_while, max_trip=max_trip,
+        dot_flops_by_shape=dict(dot_by_shape),
+    )

@@ -1,0 +1,61 @@
+"""Dobu revolving-buffer schedule.
+
+The paper's zero-conflict memory subsystem works because double
+buffering statically separates producer (DMA) and consumer (cores)
+into different hyperbanks.  The TPU-native analogue is an N-slot
+revolving VMEM buffer: while compute consumes slot ``t % N``, the DMA
+engine fills slot ``(t+1) % N``.  This module is the single source of
+truth for that schedule — the Pallas kernels, the cycle model, and the
+property tests all derive slot assignments from here, so the invariant
+("producer and consumer never touch the same slot in the same step")
+is checked once and holds everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+__all__ = ["DobuSchedule", "Phase"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    step: int              # compute step index (grid step)
+    compute_slot: int      # slot holding this step's operands ("hyperbank" A)
+    prefetch_step: int | None  # step whose operands are DMA'd now (None = none)
+    prefetch_slot: int | None  # slot being filled ("hyperbank" B)
+
+
+@dataclasses.dataclass(frozen=True)
+class DobuSchedule:
+    """Steady-state schedule for `steps` tiles over `slots` buffers."""
+
+    steps: int
+    slots: int = 2
+
+    def __post_init__(self):
+        if self.slots < 2:
+            raise ValueError("dobu needs >= 2 slots (one per 'hyperbank')")
+        if self.steps < 1:
+            raise ValueError("steps must be >= 1")
+
+    def slot_of(self, step: int) -> int:
+        return step % self.slots
+
+    def phases(self) -> Iterator[Phase]:
+        for t in range(self.steps):
+            nxt = t + 1 if t + 1 < self.steps else None
+            yield Phase(
+                step=t,
+                compute_slot=self.slot_of(t),
+                prefetch_step=nxt,
+                prefetch_slot=None if nxt is None else self.slot_of(nxt),
+            )
+
+    def conflict_free(self) -> bool:
+        """The Dobu invariant (what the hyperbanks guarantee in silicon)."""
+        return all(
+            ph.prefetch_slot is None or ph.prefetch_slot != ph.compute_slot
+            for ph in self.phases()
+        )

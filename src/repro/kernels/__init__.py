@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+zero_stall_matmul — the paper's technique (dobu 2-slot VMEM revolving
+buffer + grid loop nest); grouped_matmul — same machinery for MoE
+experts; flash_attention — blocked online-softmax attention.  Each has
+a pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.zero_stall_matmul import zero_stall_matmul
+from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = ["ops", "ref", "zero_stall_matmul", "grouped_zero_stall_matmul",
+           "flash_attention"]

@@ -1,0 +1,122 @@
+"""Blocked flash attention with dobu-style K/V tile streaming.
+
+Attention is the second matmul hot-spot of the assigned architectures
+(32k prefill).  The kernel streams K/V tiles through VMEM with online
+softmax.  Here the revolving-buffer schedule is delegated to the Pallas
+grid pipeline (BlockSpec-driven, double-buffered by construction) — the
+paper's insight "producer/consumer must not contend" is expressed by
+tiling the kv loop as the innermost grid dimension, so tile t+1's fetch
+overlaps tile t's MXU work, and the zero-overhead loop nest is again
+the grid itself.
+
+Layout: q (B, H, S, D) -> grid (B*H, S/bq, S_kv/bkv), kv innermost.
+Running max/denominator/accumulator live in VMEM scratch and are
+carried across kv steps (the "revisiting output" pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bkv: int):
+    iq, ikv = pl.program_id(1), pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(ikv == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                       # (bq, D)
+    k = k_ref[0]                       # (bkv, D)
+    v = v_ref[0]                       # (bkv, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+
+    if causal:
+        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        cols = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_scr[...]                # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)             # (bq, bkv)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ikv == nkv - 1)
+    def _():
+        # rows with no valid kv position (fully masked) produce l == 0
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bkv", "causal", "scale", "interpret"))
+def flash_attention(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, H, Skv, D)
+    v: jax.Array,   # (B, H, Skv, D)
+    *,
+    bq: int = 128,
+    bkv: int = 128,
+    causal: bool = True,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    if Sq % bq or Skv % bkv:
+        raise ValueError(f"seq lens {(Sq, Skv)} not multiples of {(bq, bkv)}")
+    scale = scale if scale is not None else D ** -0.5
+    bh = B * H
+    qf = q.reshape(bh, Sq, D)
+    kf = k.reshape(bh, Skv, D)
+    vf = v.reshape(bh, Skv, D)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               bq=bq, bkv=bkv)
+    of = pl.pallas_call(
+        kernel,
+        grid=(bh, Sq // bq, Skv // bkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom
+            pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="flash_attention",
+    )(qf, kf, vf)
+    return of.reshape(B, H, Sq, D)

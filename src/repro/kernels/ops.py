@@ -1,0 +1,129 @@
+"""Public jit'd kernel wrappers with backend dispatch and padding.
+
+Model code calls these entry points; they route to
+
+  * the Pallas zero-stall kernels on TPU (``impl="pallas"``),
+  * the same kernels under ``interpret=True`` for CPU validation
+    (``impl="interpret"``),
+  * identical-math jnp (``impl="jnp"``) — used by the dry-run, whose
+    XLA-CPU backend cannot lower Pallas-TPU kernels (DESIGN.md §3).
+
+``impl="auto"`` picks pallas on TPU and jnp elsewhere, so the same
+model code runs in tests, the dry-run and on real hardware.
+
+Arbitrary shapes are zero-padded up to tile multiples before the
+kernel and sliced back after — padding contributes zeros to the
+contraction, so results are exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.zero_stall_matmul import zero_stall_matmul
+from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
+from repro.kernels.flash_attention import flash_attention as _flash
+
+__all__ = ["matmul", "grouped_matmul", "attention", "host_tiled_matmul",
+           "resolve_impl"]
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, m in zip(x.shape, mults):
+        pads.append((0, (-dim) % m if m else 0))
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
+           bm: int = 128, bn: int = 128, bk: int = 128,
+           variant: str = "dobu", out_dtype=None) -> jax.Array:
+    """C = A @ B through the zero-stall engine."""
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.matmul_ref(a, b, out_dtype)
+    M, N = a.shape[0], b.shape[1]
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    c = zero_stall_matmul(ap, bp, bm=bm, bn=bn, bk=bk, variant=variant,
+                          interpret=(impl == "interpret"),
+                          out_dtype=out_dtype)
+    return c[:M, :N]
+
+
+def grouped_matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
+                   bm: int = 128, bn: int = 128, bk: int = 128,
+                   variant: str = "dobu", out_dtype=None) -> jax.Array:
+    """(G,M,K) @ (G,K,N) -> (G,M,N) per-expert matmul."""
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.grouped_matmul_ref(a, b, out_dtype)
+    G, M, _ = a.shape
+    N = b.shape[2]
+    ap = _pad_to(a, (1, bm, bk))
+    bp = _pad_to(b, (1, bk, bn))
+    c = grouped_zero_stall_matmul(ap, bp, bm=bm, bn=bn, bk=bk,
+                                  variant=variant,
+                                  interpret=(impl == "interpret"),
+                                  out_dtype=out_dtype)
+    return c[:, :M, :N]
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              impl: str = "auto", causal: bool = True,
+              bq: int = 128, bkv: int = 128,
+              scale: float | None = None) -> jax.Array:
+    """(B,H,S,D) flash attention; ref oracle for jnp path."""
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    Sq, Skv = q.shape[2], k.shape[2]
+    bq_ = min(bq, Sq)
+    bkv_ = min(bkv, Skv)
+    if Sq % bq_ or Skv % bkv_:
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return _flash(q, k, v, bq=bq_, bkv=bkv_, causal=causal, scale=scale,
+                  interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def host_tiled_matmul(a: jax.Array, b: jax.Array, *,
+                      bm: int = 128, bn: int = 128, bk: int = 128
+                      ) -> jax.Array:
+    """Pre-ZONL baseline: software-managed tile loop.
+
+    The tile loop nest runs as `lax.fori_loop` bookkeeping (index
+    arithmetic, bounds tests, dynamic slices) instead of the grid
+    sequencer — the analogue of Snitch's 2-instructions-per-outer-
+    iteration overhead.  Used by benchmarks to quantify the ZONL win;
+    math is identical.
+    """
+    (M, K), (_, N) = a.shape, b.shape
+    gm, gn, gk = M // bm, N // bn, K // bk
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+
+    def body(t, c):
+        i = t // (gn * gk)
+        j = (t // gk) % gn
+        k = t % gk
+        a_t = jax.lax.dynamic_slice(a, (i * bm, k * bk), (bm, bk))
+        b_t = jax.lax.dynamic_slice(b, (k * bk, j * bn), (bk, bn))
+        prod = jnp.dot(a_t, b_t, preferred_element_type=jnp.float32)
+        c_t = jax.lax.dynamic_slice(c, (i * bm, j * bn), (bm, bn))
+        return jax.lax.dynamic_update_slice(c, c_t + prod, (i * bm, j * bn))
+
+    c = jnp.zeros((M, N), jnp.float32)
+    c = jax.lax.fori_loop(0, gm * gn * gk, body, c)
+    return c.astype(a.dtype)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "grouped_matmul_ref", "flash_attention_ref",
+           "ssd_scan_ref"]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """Oracle for the zero-stall matmul.
+
+    The result dtype is requested directly from the dot (not computed
+    f32 then converted): on TPU the MXU accumulates in f32 in hardware
+    regardless, while an explicit f32 result would materialize a 2x
+    buffer and double the bytes of any TP all-reduce fused behind the
+    matmul (measured in the dry-run — DESIGN.md §7).
+    """
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=out_dtype)
+
+
+def grouped_matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """a: (G, M, K), b: (G, K, N) -> (G, M, N) per-group matmul."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.einsum("gmk,gkn->gmn", a, b,
+                      preferred_element_type=out_dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, scale: float | None = None
+                        ) -> jax.Array:
+    """q,k,v: (B, H, S, D) -> (B, H, S, D). Numerically-stable softmax."""
+    S = q.shape[-2]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, k.shape[-2]), dtype=bool),
+                        k=k.shape[-2] - S)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
+
+
+def ssd_scan_ref(x: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array,
+                 *, h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD reference: sequential recurrence (the ground truth).
+
+    Shapes (single head):
+      x: (S, P)        inputs (already gated/discretized values)
+      a_log: (S,)      per-step log decay (a_t = exp(a_log_t) in (0,1])
+      b: (S, N)        input->state projection per step
+      c: (S, N)        state->output projection per step
+      h0: (N, P)       initial state
+    Returns (y: (S, P), h_final: (N, P)) with
+      h_t = a_t * h_{t-1} + b_t^T x_t ;  y_t = c_t h_t
+    """
+    S, P = x.shape
+    N = b.shape[-1]
+    h = jnp.zeros((N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, alt, bt, ct = inp
+        h = jnp.exp(alt) * h + jnp.outer(bt, xt).astype(jnp.float32)
+        y = (ct @ h).astype(x.dtype)
+        return h, y
+
+    h_f, ys = jax.lax.scan(step, h, (x, a_log, b, c))
+    return ys, h_f

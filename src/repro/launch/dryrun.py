@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 TPU v5e pods.
+For every assigned architecture and its shape set we build the real
+step function (train_step with optimizer update / serving prefill /
+one-token decode against populated caches), shard it with the
+production rules, `.lower().compile()` it, and extract
+
+  * memory_analysis()   — proves the per-device footprint fits HBM,
+  * trip-count-corrected HLO FLOPs / bytes / collective bytes
+    (core.hlo_costs) — feeds the §Roofline table.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, input_specs, list_configs, RunConfig
+from repro.configs.base import ShapeSpec, token_count
+from repro.core.roofline import HW, analyze_compiled, model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.models import Ctx, build_model
+from repro.optim import adamw_update, init_opt_state
+from repro.runtime import sharding as shr
+
+SKIP = {}  # (arch, shape) -> reason, filled below
+
+
+def _skips():
+    out = {}
+    for name in list_configs():
+        cfg = get_config(name)
+        if not cfg.sub_quadratic:
+            out[(name, "long_500k")] = (
+                "full self-attention is super-quadratic at 512k; "
+                "per-spec skip (DESIGN.md §5)")
+    return out
+
+
+# Gradient-accumulation defaults for the train_4k cells: global batch
+# 256 x 4096 tokens does not fit v5e HBM in one shot for the >=7B dense
+# archs (the per-layer backward working set scales with microbatch) —
+# exactly how production runs are configured.
+TRAIN_MICROBATCHES = {
+    "mistral-large-123b": 8,
+    "llava-next-34b": 4,
+    "deepseek-coder-33b": 4,
+    "qwen1.5-32b": 4,
+    "gemma-7b": 2,
+    "seamless-m4t-large-v2": 2,
+    # MoE: the top-k dispatch scatter working set is O(tokens * k) and
+    # partially replicated under GSPMD — bound it per microbatch.
+    "granite-moe-1b-a400m": 8,
+    "olmoe-1b-7b": 32,
+    "zamba2-2.7b": 8,
+}
+
+# Batch-chunked prefill for the same reason (no optimizer state in
+# serving, so chunking the request batch is free).
+PREFILL_MICROBATCHES = {
+    "granite-moe-1b-a400m": 8,
+    "olmoe-1b-7b": 16,
+    "zamba2-2.7b": 4,
+}
+
+# int8-quantized KV cache for decode (§Perf It-4): qwen1.5-32b is full
+# MHA (40 kv heads) — its bf16 cache alone is 21.5 GiB/dev at 128x32k
+# on 256 chips; int8 halves it (validated: 1% rel logit error, 100%
+# argmax agreement vs the bf16 cache path in tests).
+KV_INT8_ARCHS = {"qwen1.5-32b"}
+
+
+def make_train_step(model, ctx, run: RunConfig):
+    """Train step with optional scanned gradient accumulation."""
+    mbs = run.microbatches
+
+    def train_step(params, opt, batch):
+        if mbs == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, ctx))(params)
+        else:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(mbs, x.shape[0] // mbs, *x.shape[1:]),
+                batch)
+
+            def mb_step(acc, mb):
+                l, g = jax.value_and_grad(
+                    lambda p: model.loss(p, mb, ctx))(params)
+                acc_l, acc_g = acc
+                return (acc_l + l / mbs,
+                        jax.tree.map(lambda a, b: a + b / mbs, acc_g, g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(jnp.zeros_like, params))
+            (loss, grads), _ = jax.lax.scan(mb_step, zero, mb_batch)
+        params, opt, metrics = adamw_update(params, grads, opt, run)
+        return params, opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, run: RunConfig | None = None):
+    """Returns (jitted_fn, arg_shape_structs, model_flops_useful)."""
+    cfg = get_config(arch)
+    import os as _os2, dataclasses as _dc
+    if _os2.environ.get("REPRO_REMAT"):
+        cfg = _dc.replace(cfg, remat=_os2.environ["REPRO_REMAT"])
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    # ctx.mesh enables sequence-parallel activation constraints
+    ctx = Ctx(impl="jnp", dtype=jnp.bfloat16, mesh=mesh)
+    import os as _os
+    mb_env = _os.environ.get("REPRO_MB")
+    run = run or RunConfig(
+        seq_len=shape.seq_len, global_batch=shape.global_batch,
+        microbatches=(int(mb_env) if mb_env else
+                      TRAIN_MICROBATCHES.get(arch, 1))
+        if shape.kind == "train" else 1)
+
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+    p_sh = shr.param_shardings(mesh, params_sds)
+
+    specs = input_specs(cfg, shape)
+    b_sh = shr.batch_shardings(mesh, specs)
+    tokens = token_count(shape)
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        import os as _os
+        # bf16 Adam moments by default (§Perf-3): halves optimizer HBM
+        # (update math stays f32); opt out with REPRO_MOMENTS_FP32=1.
+        mdt = None if _os.environ.get("REPRO_MOMENTS_FP32") else jnp.bfloat16
+        opt_sds = jax.eval_shape(
+            lambda p: init_opt_state(p, moments_dtype=mdt), params_sds)
+        o_sh = type(opt_sds)(mu=shr.param_shardings(mesh, opt_sds.mu),
+                             nu=shr.param_shardings(mesh, opt_sds.nu),
+                             step=shr.replicated(mesh))
+        train_step = make_train_step(model, ctx, run)
+        jitted = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, specs)
+        useful = model_flops(n_active, tokens, train=True)
+
+    elif shape.kind == "prefill":
+        pmb = PREFILL_MICROBATCHES.get(arch, 1)
+
+        def prefill_step(params, batch):
+            if pmb == 1:
+                return model.prefill_logits(params, batch, ctx)
+            # batch-chunked prefill (vLLM-style): bounds the MoE dispatch
+            # / SSD working set; requests are independent across batch.
+            mb = jax.tree.map(
+                lambda x: x.reshape(pmb, x.shape[0] // pmb, *x.shape[1:]),
+                batch)
+            return jax.lax.map(
+                lambda b: model.prefill_logits(params, b, ctx), mb)
+
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                         out_shardings=None)
+        args = (params_sds, specs)
+        useful = model_flops(n_active, tokens, train=False)
+
+    else:  # decode
+        # int8 KV cache for the MHA arch whose bf16 cache exceeds
+        # single-pod HBM (EXPERIMENTS.md §Perf It-4).
+        quant = arch in KV_INT8_ARCHS and cfg.family in ("dense", "vlm")
+        def _mk_cache():
+            if quant:
+                from repro.models import transformer as _tr
+                return _tr.init_cache(cfg, shape.global_batch,
+                                      shape.seq_len, jnp.bfloat16,
+                                      quantize_kv=True)
+            return model.init_cache(shape.global_batch, shape.seq_len,
+                                    jnp.bfloat16)
+        cache_sds = jax.eval_shape(_mk_cache)
+        c_sh = shr.cache_shardings(mesh, cache_sds)
+
+        def decode_step(params, cache, tokens_in):
+            return model.decode(params, cache, tokens_in, ctx)
+
+        jitted = jax.jit(decode_step, in_shardings=(p_sh, c_sh, b_sh["tokens"]),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+        args = (params_sds, cache_sds, specs["tokens"])
+        useful = model_flops(n_active, tokens, train=False)
+
+    return jitted, args, useful
+
+
+def kv_cache_dev_bytes(arch: str, shape_name: str, mesh) -> int:
+    """Per-device bytes of the bf16 KV-cache leaves under their shardings.
+
+    Quantifies the XLA-*CPU* artifact in the decode cells: the CPU
+    backend cannot execute bf16 dots, so it upcasts the (loop-invariant)
+    stacked cache to f32 and hoists that out of the decode scan — an
+    allocation that does not exist on TPU, where the MXU consumes bf16
+    operands natively.  The dry-run reports raw and TPU-adjusted bytes.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    if arch in KV_INT8_ARCHS and cfg.family in ("dense", "vlm"):
+        from repro.models import transformer as _tr
+        cache_sds = jax.eval_shape(
+            lambda: _tr.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                   jnp.bfloat16, quantize_kv=True))
+    else:
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     jnp.bfloat16))
+    c_sh = shr.cache_shardings(mesh, cache_sds)
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(cache_sds)[0]
+    sh_leaves = jax.tree.leaves(c_sh, is_leaf=lambda x: hasattr(x, "spec"))
+    for (path, leaf), sh in zip(flat, sh_leaves):
+        name = shr.path_str(path)
+        if name.split("/")[-1] in ("k", "v", "cross_k", "cross_v"):
+            n = 1
+            for d in sh.shard_shape(leaf.shape):
+                n *= d
+            total += n * leaf.dtype.itemsize
+    return total
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             hw: HW | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}/{shape_name}/{mesh_name}"
+    if (arch, shape_name) in SKIP:
+        return {"cell": cell, "status": "skipped",
+                "reason": SKIP[(arch, shape_name)]}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        with mesh:
+            jitted, args, useful = build_cell(arch, shape_name, mesh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            rep = analyze_compiled(cell, compiled, chips,
+                                   model_flops_useful=useful, hw=hw)
+        hbm = (hw or HW()).hbm_bytes
+        dev_bytes = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+        # TPU-adjusted: subtract the XLA-CPU-only f32 upcast copies of
+        # the bf16 KV cache (2x its bf16 bytes; see kv_cache_dev_bytes).
+        adj_bytes = dev_bytes
+        if SHAPES[shape_name].kind == "decode":
+            adj_bytes = dev_bytes - 2 * kv_cache_dev_bytes(
+                arch, shape_name, mesh)
+        row = rep.row()
+        row.update({
+            "status": "ok",
+            "kind": SHAPES[shape_name].kind,
+            "t_lower_s": round(t_lower, 1),
+            "t_compile_s": round(t_compile, 1),
+            "arg_bytes_dev": ma.argument_size_in_bytes,
+            "temp_bytes_dev": ma.temp_size_in_bytes,
+            "out_bytes_dev": ma.output_size_in_bytes,
+            "alias_bytes_dev": ma.alias_size_in_bytes,
+            "dev_bytes_total": dev_bytes,
+            "dev_bytes_tpu_adj": adj_bytes,
+            "fits_hbm": bool(dev_bytes <= hbm),
+            "fits_hbm_tpu_adj": bool(adj_bytes <= hbm),
+            "collectives": {k: int(v) for k, v in
+                            rep.collectives.count_by_kind.items()},
+        })
+        return row
+    except Exception as e:
+        return {"cell": cell, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    global SKIP
+    SKIP = _skips()
+
+    archs = list_configs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_f = open(args.out, "a") if args.out else None
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                row = run_cell(arch, shape, multi_pod=multi)
+                status = row["status"]
+                if status == "ok":
+                    print(f"[OK]   {row['cell']:50s} "
+                          f"compile={row['t_compile_s']:6.1f}s "
+                          f"bottleneck={row['bottleneck']:10s} "
+                          f"roofline={row['roofline_fraction']:.3f} "
+                          f"dev_mem={row['dev_bytes_total']/2**30:6.2f}GiB "
+                          f"(tpu_adj={row['dev_bytes_tpu_adj']/2**30:6.2f}) "
+                          f"fits={row['fits_hbm_tpu_adj']}", flush=True)
+                elif status == "skipped":
+                    print(f"[SKIP] {row['cell']:50s} {row['reason']}",
+                          flush=True)
+                else:
+                    print(f"[ERR]  {row['cell']:50s} {row['error']}",
+                          flush=True)
+                if out_f:
+                    out_f.write(json.dumps(
+                        {k: v for k, v in row.items() if k != "trace"}) + "\n")
+                    out_f.flush()
+    if out_f:
+        out_f.close()
+
+
+if __name__ == "__main__":
+    main()

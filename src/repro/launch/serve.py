@@ -1,0 +1,86 @@
+"""Batched serving driver: continuous prefill + decode.
+
+A minimal production-shaped server loop: requests arrive with prompts,
+are prefilled (populating KV/SSM caches), then decoded in lock-step
+batches.  Decode uses the model's O(1)-state or KV-cache step; greedy
+sampling.  On TPU the matmul path is the zero-stall Pallas engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --reduced \
+      --batch 4 --prompt-len 32 --gen-len 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import Ctx, build_model
+
+__all__ = ["serve_batch"]
+
+
+def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
+                prompt_len: int = 32, gen_len: int = 32, seed: int = 0,
+                dtype=jnp.float32) -> dict:
+    cfg = get_config(arch, reduced=reduced)
+    model = build_model(cfg)
+    ctx = Ctx(impl="jnp", dtype=dtype)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key, dtype=jnp.float32)
+
+    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    max_len = prompt_len + gen_len
+
+    # prefill: run prompt tokens through the decode path one-by-one via
+    # scan (family-uniform; the dense family also has a fused prefill).
+    cache = model.init_cache(batch, max_len, dtype)
+    decode = jax.jit(lambda p, c, t: model.decode(p, c, t, ctx),
+                     donate_argnums=(1,))
+
+    t0 = time.time()
+    logits = None
+    for i in range(prompt_len):
+        logits, cache = decode(params, cache, prompts[:, i:i + 1])
+    t_prefill = time.time() - t0
+
+    # greedy decode
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(gen_len):
+        out_tokens.append(tok)
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    return {
+        "generated": gen,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "tokens_per_s": batch * gen_len / max(t_decode, 1e-9),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+    out = serve_batch(args.arch, reduced=args.reduced, batch=args.batch,
+                      prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print(f"generated shape: {out['generated'].shape}")
+    print(f"prefill: {out['prefill_s']:.2f}s  decode: {out['decode_s']:.2f}s "
+          f"({out['tokens_per_s']:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.layers import Ctx, Params
+from repro.models.model import Model, build_model
+
+__all__ = ["Ctx", "Params", "Model", "build_model"]

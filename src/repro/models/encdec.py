@@ -1,0 +1,179 @@
+"""Encoder-decoder backbone (seamless-m4t style).
+
+Encoder: bidirectional self-attention over stub frame embeddings
+(the speech frontend is replaced by precomputed embeddings per the
+assignment).  Decoder: causal self-attention + cross-attention.
+Decode shape = one decoder step against a self-KV cache plus the
+precomputed cross-attention K/V of the encoded source.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import Ctx, Params
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "encode"]
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k2, cfg, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "self_attn": L.init_attention(k1, cfg, dtype),
+        "cross_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "cross_attn": L.init_attention(k2, cfg, dtype),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k3, cfg, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+        jax.random.split(kenc, cfg.encoder_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+        jax.random.split(kdec, cfg.decoder_layers))
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def _cross_attention(p: Params, x, enc_k, enc_v, cfg: ModelConfig,
+                     ctx: Ctx) -> jax.Array:
+    """Cross-attention without rope: q from x, k/v precomputed."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.linear(p["wq"], x, ctx).reshape(B, S, cfg.n_heads, hd)
+    o = L._gqa_full(q, enc_k, enc_v, causal=False,
+                    impl=L.ops.resolve_impl(ctx.impl), ctx=ctx)
+    return L.linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd), ctx)
+
+
+def _enc_kv(p: Params, enc_out, cfg: ModelConfig, ctx: Ctx):
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = L.linear(p["wk"], enc_out, ctx).reshape(B, S, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], enc_out, ctx).reshape(B, S, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           ctx: Ctx) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder output."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = frames.astype(ctx.dtype)
+
+    from repro.models.transformer import remat_policy
+    policy = remat_policy(cfg)
+
+    def body(x, lp):
+        x = L.shard_act(x, ctx)
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        x = x + L.attention(lp["attn"], h, cfg, ctx, positions=positions,
+                            causal=False)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        return x + L.mlp(lp["mlp"], h, cfg, ctx), None
+
+    f = body if policy is None else jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(f, x, params["encoder"])
+    return L.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params: Params, tokens: jax.Array, frames: jax.Array,
+            cfg: ModelConfig, ctx: Ctx, *, last_only: bool = False) -> jax.Array:
+    """Teacher-forced decode over the full target sequence."""
+    enc_out = encode(params, frames, cfg, ctx)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = L.embed(params["embed"], tokens, ctx)
+
+    from repro.models.transformer import remat_policy
+    policy = remat_policy(cfg)
+
+    def body(x, lp):
+        x = L.shard_act(x, ctx)
+        h = L.rms_norm(lp["self_norm"], x, cfg.norm_eps)
+        x = x + L.attention(lp["self_attn"], h, cfg, ctx,
+                            positions=positions, causal=True)
+        h = L.rms_norm(lp["cross_norm"], x, cfg.norm_eps)
+        ek, ev = _enc_kv(lp["cross_attn"], enc_out, cfg, ctx)
+        x = x + _cross_attention(lp["cross_attn"], h, ek, ev, cfg, ctx)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        return x + L.mlp(lp["mlp"], h, cfg, ctx), None
+
+    f = body if policy is None else jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(f, x, params["decoder"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, ctx)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig,
+            ctx: Ctx) -> jax.Array:
+    logits = forward(params, batch["tokens"], batch["frontend_embeds"],
+                     cfg, ctx)
+    return L.cross_entropy(logits, batch["targets"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, *, enc_len: int | None = None) -> Params:
+    hd = cfg.resolved_head_dim
+    Ld = cfg.decoder_layers
+    enc_len = enc_len or max_len
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                cfg: ModelConfig, ctx: Ctx) -> tuple[jax.Array, Params]:
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens, ctx)
+
+    def body(x, layer):
+        lp, lc = layer
+        h = L.rms_norm(lp["self_norm"], x, cfg.norm_eps)
+        a, new_kv = L.attention_decode(lp["self_attn"], h, cfg, ctx,
+                                       cache={"k": lc["k"], "v": lc["v"]},
+                                       pos=pos)
+        x = x + a
+        h = L.rms_norm(lp["cross_norm"], x, cfg.norm_eps)
+        x = x + _cross_attention(lp["cross_attn"], h, lc["cross_k"],
+                                 lc["cross_v"], cfg, ctx)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h, cfg, ctx)
+        return x, new_kv
+
+    lc = {"k": cache["k"], "v": cache["v"],
+          "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    x, new_kv = jax.lax.scan(body, x, (params["decoder"], lc))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, ctx)
+    return logits, {"k": new_kv["k"], "v": new_kv["v"],
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+                    "pos": pos + 1}

@@ -1,0 +1,149 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one shared attention block.
+
+The backbone is `n_layers` Mamba2 blocks; after every `attn_every` of
+them, a single *shared* transformer block (one set of weights, invoked
+repeatedly) attends over the sequence, taking concat(hidden, original
+embedding) through an input projection (arXiv:2411.15242).
+
+Structure for scan-friendliness: mamba layers are stacked and reshaped
+to (n_groups, attn_every, ...); we scan over groups, each step scanning
+its `attn_every` mamba layers then applying the shared block (whose
+params ride in the closure — constants across scan steps).  long_500k
+decode works because mamba state is O(1) and shared-attention decode is
+O(S) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.layers import Ctx, Params
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step"]
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    if cfg.n_layers % cfg.attn_every:
+        raise ValueError("n_layers must divide by attn_every")
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ke, km, ks1, ks2, ks3 = jax.random.split(key, 5)
+    stacked = jax.vmap(lambda k: {
+        "norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "mamba": ssm.init_mamba(k, cfg, dtype),
+    })(jax.random.split(km, cfg.n_layers))
+    ng = _n_groups(cfg)
+    grouped = jax.tree.map(
+        lambda a: a.reshape(ng, cfg.attn_every, *a.shape[1:]), stacked)
+    shared = {
+        "pre_proj": L.init_linear(ks1, 2 * cfg.d_model, cfg.d_model, dtype=dtype),
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(ks2, cfg, dtype),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks3, cfg, dtype),
+    }
+    return {"embed": L.init_embed(ke, cfg, dtype), "layers": grouped,
+            "shared": shared,
+            "final_norm": L.init_rmsnorm(cfg.d_model, dtype)}
+
+
+def _shared_block(sp: Params, x, x0, cfg: ModelConfig, ctx: Ctx,
+                  positions) -> jax.Array:
+    h = L.linear(sp["pre_proj"], jnp.concatenate([x, x0], axis=-1), ctx)
+    h = h + L.attention(sp["attn"], L.rms_norm(sp["attn_norm"], h,
+                                               cfg.norm_eps),
+                        cfg, ctx, positions=positions)
+    h = h + L.mlp(sp["mlp"], L.rms_norm(sp["mlp_norm"], h, cfg.norm_eps),
+                  cfg, ctx)
+    return x + h
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            ctx: Ctx, *, last_only: bool = False) -> jax.Array:
+    x0 = L.embed(params["embed"], tokens, ctx)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    sp = params["shared"]
+
+    def mamba_body(x, lp):
+        x = L.shard_act(x, ctx)
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        return x + ssm.mamba_forward(lp["mamba"], h, cfg, ctx), None
+
+    from repro.models.transformer import remat_policy
+    policy = remat_policy(cfg)
+    mb = mamba_body if policy is None else jax.checkpoint(mamba_body,
+                                                          policy=policy)
+
+    def group_body(x, group_params):
+        x, _ = jax.lax.scan(mb, x, group_params)
+        x = _shared_block(sp, x, x0, cfg, ctx, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x0, params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, ctx)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig,
+            ctx: Ctx) -> jax.Array:
+    logits = forward(params, batch["tokens"], cfg, ctx)
+    return L.cross_entropy(logits, batch["targets"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    ng = _n_groups(cfg)
+    st = ssm.init_ssm_state(cfg, batch, jnp.float32)
+    hd = cfg.resolved_head_dim
+    return {
+        "conv": jnp.zeros((ng, cfg.attn_every) + st["conv"].shape, jnp.float32),
+        "ssm": jnp.zeros((ng, cfg.attn_every) + st["ssm"].shape, jnp.float32),
+        "k": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                cfg: ModelConfig, ctx: Ctx) -> tuple[jax.Array, Params]:
+    pos = cache["pos"]
+    x0 = L.embed(params["embed"], tokens, ctx)
+    sp = params["shared"]
+
+    def mamba_body(x, layer):
+        lp, st = layer
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        y, new_st = ssm.mamba_decode(lp["mamba"], h, cfg, ctx, st)
+        return x + y, new_st
+
+    def group_body(x, group):
+        gp, g_state, g_kv = group
+        x, new_state = jax.lax.scan(
+            mamba_body, x, (gp, g_state))
+        h = L.linear(sp["pre_proj"], jnp.concatenate([x, x0], axis=-1), ctx)
+        a, new_kv = L.attention_decode(
+            sp["attn"], L.rms_norm(sp["attn_norm"], h, cfg.norm_eps),
+            cfg, ctx, cache=g_kv, pos=pos)
+        h = h + a
+        h = h + L.mlp(sp["mlp"], L.rms_norm(sp["mlp_norm"], h, cfg.norm_eps),
+                      cfg, ctx)
+        return x + h, (new_state, new_kv)
+
+    x, (new_states, new_kvs) = jax.lax.scan(
+        group_body, x0,
+        (params["layers"],
+         {"conv": cache["conv"], "ssm": cache["ssm"]},
+         {"k": cache["k"], "v": cache["v"]}))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, ctx)
+    return logits, {"conv": new_states["conv"], "ssm": new_states["ssm"],
+                    "k": new_kvs["k"], "v": new_kvs["v"], "pos": pos + 1}

@@ -1,0 +1,608 @@
+"""Model building blocks (pure functional JAX).
+
+Every matmul routes through :mod:`repro.kernels.ops`, so the paper's
+zero-stall engine is the compute path on TPU while the dry-run lowers
+the identical-math jnp path (DESIGN.md §3).  Params are plain nested
+dicts (pytrees); init fns return params, apply fns are pure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call execution context."""
+    impl: str = "auto"            # kernel dispatch: auto | jnp | pallas | interpret
+    dtype: Any = jnp.bfloat16     # compute dtype
+    decode: bool = False
+    mesh: Any = None              # when set, activation sharding constraints
+                                  # (sequence parallelism) are applied
+
+
+def shard_seq(x: jax.Array, ctx: "Ctx") -> jax.Array:
+    """Sequence-parallel constraint on a (B, S, d) activation.
+
+    Applied at layer boundaries AND on the attention/MLP block outputs:
+    the output-side constraint is what makes GSPMD emit the Megatron
+    reduce-scatter form at the TP boundary instead of a full-activation
+    all-reduce followed by a slice (measured: the AR form costs ~16x
+    the RS bytes on deepseek train_4k).
+    """
+    if ctx.mesh is None or x.ndim != 3:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    names = ctx.mesh.axis_names
+    sizes = dict(zip(names, ctx.mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+    b_ax = dp if dp_size > 1 and x.shape[0] >= dp_size else None
+    s_ax = ("model" if "model" in names and x.shape[1] >= sizes["model"]
+            else None)
+    if b_ax is None and s_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(b_ax, s_ax, None)))
+
+
+def shard_act(x: jax.Array, ctx: "Ctx") -> jax.Array:
+    """Sequence-parallel activation constraint at layer boundaries.
+
+    Residual activations (B, S, d) are the dominant live state of the
+    backward pass (one per layer under the scan).  Sharding batch over
+    the DP axes and *sequence over the 'model' axis* (Megatron-style SP
+    — GSPMD inserts the all-gather before attention and the
+    reduce-scatter after) cuts that term by the model-axis size.
+    """
+    y = shard_seq(x, ctx)
+    if y is x:
+        return x
+    # Pin the carry at the layer boundary: without this, XLA hoists the
+    # fp32 upcast of the *whole* (layers, B, S, d) saved-residual stack
+    # out of the backward loop (measured: +16.5 GiB/device on
+    # mistral-large-123b).  The barrier keeps per-layer slices inside.
+    return jax.lax.optimization_barrier(y)
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+def _dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = d_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32) -> Params:
+    p = {"w": _dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
+    """x: (..., d_in) @ w -> (..., d_out) through the zero-stall engine."""
+    w = p["w"].astype(ctx.dtype)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = ops.matmul(x2, w, impl=ctx.impl, out_dtype=ctx.dtype)
+    y = y.reshape(*lead, w.shape[-1])
+    if "b" in p:
+        y = y + p["b"].astype(ctx.dtype)
+    return y
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings
+# ----------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention (GQA / MQA, optional QKV bias)
+# ----------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype=dtype),
+    }
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x, ctx).reshape(B, S, cfg.n_heads, hd)
+    k = linear(p["wk"], x, ctx).reshape(B, S, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x, ctx).reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+# chunk threshold: materialize S x T scores only below this element count
+_ATTN_CHUNK_ELEMS = 1024 * 1024
+_Q_CHUNK = 1024
+_KV_CHUNK = 1024
+
+
+def _head_shard(t: jax.Array, ctx: "Ctx | None") -> jax.Array:
+    """Constrain a (B, S, H, D) attention tensor to head-TP layout.
+
+    Without this GSPMD may split the score einsum over the contraction
+    dim and emit partial-sum all-reduces of the scores (measured 96 s
+    collective term on deepseek train_4k; §Perf-2)."""
+    if ctx is None or ctx.mesh is None or "model" not in ctx.mesh.axis_names:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    if t.shape[2] % sizes["model"] != 0:
+        return t
+    dp = tuple(a for a in ("pod", "data") if a in ctx.mesh.axis_names)
+    dps = 1
+    for a in dp:
+        dps *= sizes[a]
+    b_ax = dp if t.shape[0] % dps == 0 and dps > 1 else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(ctx.mesh, P(b_ax, None, "model", None)))
+
+
+def _seq_shard4(t: jax.Array, ctx: "Ctx | None") -> jax.Array:
+    """Pin a (B, S, KV, D) tensor to the SP layout (S over 'model').
+
+    Applied to k/v BEFORE the head repeat: otherwise the head-layout
+    demand on the repeat output propagates into its 8-KV-head input,
+    which cannot shard 16-way — GSPMD falls back to involuntary full
+    rematerialization (measured 592 s collective term on the multi-pod
+    mistral train cell).  With the input pinned, the repeat runs local
+    and the S<->H transpose happens on the clean 96-head output.
+    """
+    if ctx is None or ctx.mesh is None or "model" not in ctx.mesh.axis_names:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    if t.shape[1] % sizes["model"] != 0:
+        return t
+    dp = tuple(a for a in ("pod", "data") if a in ctx.mesh.axis_names)
+    dps = 1
+    for a in dp:
+        dps *= sizes[a]
+    b_ax = dp if t.shape[0] % dps == 0 and dps > 1 else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(ctx.mesh, P(b_ax, "model", None, None)))
+
+
+def _gqa_full(q, k, v, *, causal: bool, impl: str,
+              ctx: "Ctx | None" = None) -> jax.Array:
+    """q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D).
+
+    Under a mesh, KV heads are repeated up to H ("merged-head" form) so
+    the single head dim shards cleanly over the 16-way 'model' axis —
+    at train/prefill sizes the repeated K/V cost is trivial per device
+    (T*H*D/16 elements), while the grouped (KV, rep) form cannot express
+    a 16-way sharding across its two small head dims and forces GSPMD
+    into score all-reduces.  Decode keeps the unrepeated form (the KV
+    cache dominates there).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    T = k.shape[1]
+    if impl in ("pallas", "interpret"):
+        # flash kernel wants (B, H, S, D) with matched head counts
+        kr = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
+        vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
+        o = ops.attention(q.transpose(0, 2, 1, 3), kr, vr,
+                          impl=impl, causal=causal)
+        return o.transpose(0, 2, 1, 3)
+    # merged-head path (callers gate via _merged_head_plan):
+    if ctx is not None and ctx.mesh is not None:
+        kr = _head_shard(jnp.repeat(k, rep, axis=2), ctx)
+        vr = _head_shard(jnp.repeat(v, rep, axis=2), ctx)
+        q = _head_shard(q, ctx)
+        if (S * T > _ATTN_CHUNK_ELEMS and S % _Q_CHUNK == 0
+                and T % _KV_CHUNK == 0):
+            return _mha_chunked(q, kr, vr, causal=causal)
+        logits = jnp.einsum("bshd,bthd->bhst", q, kr,
+                            preferred_element_type=jnp.float32) * (D ** -0.5)
+        if causal:
+            mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+            logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhst,bthd->bshd", probs.astype(vr.dtype), vr)
+    if (S * T > _ATTN_CHUNK_ELEMS and S % _Q_CHUNK == 0
+            and T % _KV_CHUNK == 0):
+        return _gqa_chunked(q, k, v, causal=causal)
+    # native grouped einsum (no kv-head materialization)
+    qg = q.reshape(B, S, KV, rep, D)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, k,
+                        preferred_element_type=jnp.float32) * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrst,btkd->bskrd", probs.astype(v.dtype), v)
+    return o.reshape(B, S, H, D)
+
+
+def _mha_chunked(q, k, v, *, causal: bool,
+                 q_chunk: int = _Q_CHUNK, kv_chunk: int = _KV_CHUNK
+                 ) -> jax.Array:
+    """Merged-head blockwise attention (q/k/v all (B, S|T, H, D))."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    nq, nkv = S // q_chunk, T // kv_chunk
+    scale = D ** -0.5
+    qg = q.reshape(B, nq, q_chunk, H, D)
+
+    def q_block(qi, q_blk):
+        m0 = jnp.full((B, H, q_chunk, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk,
+                                                 kv_chunk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk,
+                                                 kv_chunk, 1)
+            s = jnp.einsum("bqhd,bthd->bhqt", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                rows = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+                cols = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                s = jnp.where((rows >= cols)[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhqt,bthd->bhqd", p.astype(v.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,qc,H,D)
+
+    def outer(_, qi):
+        return None, q_block(qi, qg[:, qi])
+
+    q_block = jax.checkpoint(
+        q_block, policy=jax.checkpoint_policies.nothing_saveable)
+    _, blocks = jax.lax.scan(outer, None, jnp.arange(nq))
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def _gqa_chunked(q, k, v, *, causal: bool,
+                 q_chunk: int = _Q_CHUNK, kv_chunk: int = _KV_CHUNK
+                 ) -> jax.Array:
+    """Flash-style blockwise attention for the jnp (dry-run/XLA) path.
+
+    Never materializes the (S, T) score matrix: double scan over
+    q-chunks (outer, rematerialized) and kv-chunks (inner, online
+    softmax).  This is the XLA transcription of the Pallas
+    flash_attention kernel — same dobu idea: stream kv tiles through a
+    small working set instead of allocating the full score buffer.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    T = k.shape[1]
+    nq, nkv = S // q_chunk, T // kv_chunk
+    scale = D ** -0.5
+    qg = q.reshape(B, nq, q_chunk, KV, rep, D)
+
+    def q_block(qi, q_blk):
+        """q_blk: (B, qc, KV, rep, D) -> attended output block."""
+        m0 = jnp.full((B, KV, rep, q_chunk, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, q_chunk, D), jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk,
+                                                 kv_chunk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk,
+                                                 kv_chunk, 1)
+            s = jnp.einsum("bqkrd,btkd->bkrqt", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                rows = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+                cols = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                s = jnp.where((rows >= cols)[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bkrqt,btkd->bkrqd", p.astype(v.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        # cast before stacking: the outer scan materializes these blocks
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    q_block = jax.checkpoint(
+        q_block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def outer(_, qi):
+        return None, q_block(qi, qg[:, qi])
+
+    _, blocks = jax.lax.scan(outer, None, jnp.arange(nq))
+    # blocks: (nq, B, qc, KV, rep, D)
+    return blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D)
+
+
+def _merged_head_plan(n_heads: int, kv_heads: int, ctx: Ctx) -> int | None:
+    """Decide whether to use merged-head TP attention; return pad count.
+
+    Use it only where the grouped form is pathological AND padding is
+    cheap: heads not divisible by the TP axis (GSPMD otherwise falls
+    back to involuntary full rematerialization — measured 87-164 s
+    collective terms on deepseek/llava, whose 56 heads pad to 64 for
+    +14% attention FLOPs) while archs whose KV heads already shard
+    cleanly (olmoe 16, granite 16) or whose pad would be >25% (qwen
+    40 -> 80) measurably regress with it and keep the grouped form
+    (§Perf It-2b/2c and the v3->v4 cell comparison in perf_log.md).
+    Multi-pod meshes always keep the grouped form (repeat-backward
+    resharding pathology, §Perf It-2c).
+    """
+    if ctx.mesh is None or "model" not in ctx.mesh.axis_names             or "pod" in ctx.mesh.axis_names:
+        return None
+    tp = ctx.mesh.devices.shape[ctx.mesh.axis_names.index("model")]
+    if n_heads % tp == 0 or kv_heads % tp == 0:
+        return None          # grouped form shards fine already
+    target = n_heads
+    while target % tp or (kv_heads and (target % kv_heads)):
+        target += 1
+    if target > n_heads * 1.25:
+        return None          # padding too expensive (e.g. 40 -> 80)
+    return target - n_heads
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
+              positions: jax.Array, causal: bool = True,
+              kv_override: tuple | None = None) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, ctx)
+    if kv_override is not None:          # cross-attention: use encoder k/v
+        k, v = kv_override
+        q = rope(q, positions, cfg.rope_theta)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    n_pad = _merged_head_plan(cfg.n_heads, k.shape[2], ctx)
+    if n_pad is not None:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, n_pad), (0, 0)))
+    o = _gqa_full(q, k, v, causal=causal, impl=ops.resolve_impl(ctx.impl),
+                  ctx=ctx if n_pad is not None else None)
+    if n_pad:
+        o = o[:, :, :cfg.n_heads]
+    return linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd), ctx)
+
+
+def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
+                     cache: Params, pos: jax.Array) -> tuple[jax.Array, Params]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d); cache: {"k": (B, S_max, KV, D), "v": ..., } ; pos: (B,)
+    or scalar — the index the new token is written at.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, ctx)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    q = rope(q, pos_b[:, None], cfg.rope_theta)
+    k = rope(k, pos_b[:, None], cfg.rope_theta)
+    ck = _scatter_at(cache["k"], k, pos_b)
+    cv = _scatter_at(cache["v"], v, pos_b)
+    KV = ck.shape[2]
+    rep = cfg.n_heads // KV
+    qg = q.reshape(B, 1, KV, rep, hd)
+    # Score dot stays in the cache dtype: requesting an f32 result makes
+    # XLA upcast the operand — and the (loop-invariant) stacked cache
+    # upcast gets hoisted out of the decode scan, materializing an f32
+    # copy of the whole KV cache (+15 GiB/dev at 32k decode).  Only the
+    # tiny (B,KV,rep,1,S) logits are upcast for the softmax.  On TPU the
+    # MXU accumulates in f32 in hardware regardless.
+    scores = jnp.einsum("bskrd,btkd->bkrst", qg, ck)
+    logits = scores.astype(jnp.float32) * (hd ** -0.5)
+    t_idx = jnp.arange(ck.shape[1])
+    mask = t_idx[None, :] <= pos_b[:, None]            # (B, S_max)
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrst,btkd->bskrd", probs.astype(cv.dtype), cv)
+    o = o.reshape(B, 1, cfg.n_heads * hd)
+    return linear(p["wo"], o, ctx), {"k": ck, "v": cv}
+
+
+def attention_decode_quantized(p: Params, x: jax.Array, cfg: ModelConfig,
+                               ctx: Ctx, *, cache: Params, pos: jax.Array
+                               ) -> tuple[jax.Array, Params]:
+    """One-token decode against an int8-quantized KV cache.
+
+    cache: {"k","v": int8 (B,S,KV,D), "k_scale","v_scale": (B,S,KV,1)}.
+    New K/V are quantized with per-(position, kv-head) absmax scales;
+    scores use the dequantized-in-register form (int8 reads from HBM —
+    half the decode memory term of bf16; the dequant multiply fuses
+    into the dot on TPU).
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, ctx)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    q = rope(q, pos_b[:, None], cfg.rope_theta)
+    k = rope(k, pos_b[:, None], cfg.rope_theta)
+
+    def quant(t):
+        scale = (jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+                 .astype(jnp.float32) / 127.0 + 1e-8)
+        qt = jnp.clip(jnp.round(t.astype(jnp.float32) / scale),
+                      -127, 127).astype(jnp.int8)
+        return qt, scale.astype(ctx.dtype)
+
+    qk, ks = quant(k)
+    qv, vs = quant(v)
+    ck = _scatter_at(cache["k"], qk, pos_b)
+    cks = _scatter_at(cache["k_scale"], ks, pos_b)
+    cv = _scatter_at(cache["v"], qv, pos_b)
+    cvs = _scatter_at(cache["v_scale"], vs, pos_b)
+
+    KV = ck.shape[2]
+    rep = cfg.n_heads // KV
+    qg = q.reshape(B, 1, KV, rep, hd)
+    # int8 dot then per-position scale (exactly equal to dequant-first)
+    raw = jnp.einsum("bskrd,btkd->bkrst", qg.astype(ctx.dtype),
+                     ck.astype(ctx.dtype))
+    scores = raw * cks[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
+    logits = scores.astype(jnp.float32) * (hd ** -0.5)
+    t_idx = jnp.arange(ck.shape[1])
+    mask = t_idx[None, :] <= pos_b[:, None]
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fold v scales into the probabilities (per t position)
+    pv = probs * cvs[:, :, :, 0].transpose(0, 2, 1)[
+        :, :, None, None, :].astype(probs.dtype)
+    o = jnp.einsum("bkrst,btkd->bskrd", pv.astype(ctx.dtype),
+                   cv.astype(ctx.dtype))
+    o = o.reshape(B, 1, cfg.n_heads * hd)
+    out = linear(p["wo"], o, ctx)
+    return out, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+
+
+def _scatter_at(c: jax.Array, new: jax.Array, pos_b: jax.Array) -> jax.Array:
+    """c: (B, S, KV, D); new: (B, 1, KV, D); write new at per-batch pos.
+
+    Uniform decode position (pos_b broadcast from a scalar) uses a
+    dynamic-update-slice — XLA updates the donated cache in place; a
+    full-cache `where` rewrite would materialize a second cache-sized
+    buffer per layer (measured +13 GiB/dev on the 32k decode cells).
+    """
+    if pos_b.ndim == 0 or (pos_b.ndim == 1 and isinstance(
+            pos_b, jax.Array) and pos_b.shape[0] == c.shape[0]):
+        # all sequences decode at the same step in our serving loop
+        pos = pos_b.reshape(-1)[0] if pos_b.ndim else pos_b
+        zero = jnp.zeros((), jnp.int32)
+        return jax.lax.dynamic_update_slice(
+            c, new.astype(c.dtype), (zero, pos, zero, zero))
+    oh = (jnp.arange(c.shape[1])[None, :] == pos_b[:, None])  # (B,S)
+    return jnp.where(oh[:, :, None, None], new.astype(c.dtype), c)
+
+
+# ----------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / vanilla GELU)
+# ----------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32,
+             d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": init_linear(ks[0], cfg.d_model, d_ff, dtype=dtype),
+            "wg": init_linear(ks[1], cfg.d_model, d_ff, dtype=dtype),
+            "wo": init_linear(ks[2], d_ff, cfg.d_model, dtype=dtype),
+        }
+    return {
+        "wi": init_linear(ks[0], cfg.d_model, d_ff, dtype=dtype),
+        "wo": init_linear(ks[2], d_ff, cfg.d_model, dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
+    h = linear(p["wi"], x, ctx)
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x, ctx)) * h
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(linear(p["wg"], x, ctx)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return linear(p["wo"], h, ctx)
+
+
+# ----------------------------------------------------------------------
+# embeddings / lm head
+# ----------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"tokens": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, ctx: Ctx) -> jax.Array:
+    return p["tokens"].astype(ctx.dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
+    if "lm_head" in p:
+        w = p["lm_head"].astype(ctx.dtype)
+    else:
+        w = p["tokens"].astype(ctx.dtype).T
+    return jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean token NLL; logits fp32 (B,S,V), targets (B,S) int.
+
+    Label logits are extracted with a one-hot contraction instead of a
+    gather: under GSPMD a gather along the vocab dim would replicate
+    the (tokens x vocab) logits across the 'model' axis, while the
+    one-hot einsum keeps V sharded (elementwise + reduce).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,128 @@
+"""build_model: one entry point per assigned architecture family.
+
+Returns a `Model` bundle of pure functions with uniform signatures so
+the launcher / dry-run / tests treat every family identically:
+
+    init(key, dtype)                      -> params
+    loss(params, batch, ctx)              -> scalar (train step objective)
+    init_cache(batch, max_len, dtype)     -> decode cache pytree
+    decode(params, cache, tokens, ctx)    -> (logits, new cache)
+    prefill_logits(params, batch, ctx)    -> logits (prefill shape)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, moe, ssm, transformer
+from repro.models.layers import Ctx, Params
+
+__all__ = ["Model", "build_model", "Ctx"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Params]
+    loss: Callable[..., Any]
+    init_cache: Callable[..., Params]
+    decode: Callable[..., tuple]
+    prefill_logits: Callable[..., Any]
+
+
+def _moe_mlp_fn(cfg: ModelConfig, ctx: Ctx):
+    def fn(p, x):
+        return moe.moe_mlp(p, x, cfg, ctx, return_aux=True)
+    return fn
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        def loss(params, batch, ctx):
+            return transformer.loss_fn(params, batch, cfg, ctx)
+
+        def prefill_logits(params, batch, ctx):
+            return transformer.forward(
+                params, batch["tokens"], cfg, ctx,
+                frontend_embeds=batch.get("frontend_embeds"),
+                last_only=True)
+
+        return Model(
+            cfg=cfg,
+            init=functools.partial(transformer.init_params, cfg=cfg),
+            loss=loss,
+            init_cache=functools.partial(transformer.init_cache, cfg),
+            decode=lambda params, cache, tokens, ctx: transformer.decode_step(
+                params, cache, tokens, cfg, ctx),
+            prefill_logits=prefill_logits,
+        )
+
+    if fam == "moe":
+        def init(key, dtype=jnp.float32):
+            return transformer.init_params(
+                key, cfg=cfg, dtype=dtype,
+                init_mlp_fn=lambda k: moe.init_moe_mlp(k, cfg, dtype))
+
+        def loss(params, batch, ctx):
+            return transformer.loss_fn(params, batch, cfg, ctx,
+                                       mlp_fn=_moe_mlp_fn(cfg, ctx))
+
+        def prefill_logits(params, batch, ctx):
+            return transformer.forward(params, batch["tokens"], cfg, ctx,
+                                       mlp_fn=_moe_mlp_fn(cfg, ctx),
+                                       last_only=True)
+
+        def decode(params, cache, tokens, ctx):
+            fn = _moe_mlp_fn(cfg, ctx)
+            return transformer.decode_step(params, cache, tokens, cfg, ctx,
+                                           mlp_fn=fn)
+
+        return Model(cfg=cfg, init=init, loss=loss,
+                     init_cache=functools.partial(transformer.init_cache, cfg),
+                     decode=decode, prefill_logits=prefill_logits)
+
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(ssm.init_params, cfg=cfg),
+            loss=lambda params, batch, ctx: ssm.loss_fn(params, batch, cfg, ctx),
+            init_cache=functools.partial(ssm.init_cache, cfg),
+            decode=lambda params, cache, tokens, ctx: ssm.decode_step(
+                params, cache, tokens, cfg, ctx),
+            prefill_logits=lambda params, batch, ctx: ssm.forward(
+                params, batch["tokens"], cfg, ctx, last_only=True),
+        )
+
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(hybrid.init_params, cfg=cfg),
+            loss=lambda params, batch, ctx: hybrid.loss_fn(params, batch, cfg, ctx),
+            init_cache=functools.partial(hybrid.init_cache, cfg),
+            decode=lambda params, cache, tokens, ctx: hybrid.decode_step(
+                params, cache, tokens, cfg, ctx),
+            prefill_logits=lambda params, batch, ctx: hybrid.forward(
+                params, batch["tokens"], cfg, ctx, last_only=True),
+        )
+
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(encdec.init_params, cfg=cfg),
+            loss=lambda params, batch, ctx: encdec.loss_fn(params, batch, cfg, ctx),
+            init_cache=functools.partial(encdec.init_cache, cfg),
+            decode=lambda params, cache, tokens, ctx: encdec.decode_step(
+                params, cache, tokens, cfg, ctx),
+            prefill_logits=lambda params, batch, ctx: encdec.forward(
+                params, batch["tokens"], batch["frontend_embeds"], cfg, ctx,
+                last_only=True),
+        )
+
+    raise ValueError(f"unknown family {fam!r}")

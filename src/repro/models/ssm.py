@@ -1,0 +1,303 @@
+"""Mamba2 (SSD — state-space duality) blocks and the pure-SSM LM.
+
+Training path: the chunked SSD algorithm — intra-chunk work is batched
+matmuls (exactly the workload the paper's zero-stall engine targets;
+arXiv:2405.21060 §6), inter-chunk state is a short `lax.scan`.
+Decode path: the O(1) recurrence h_t = a_t h_{t-1} + dt_t (B_t ⊗ x_t),
+y_t = C_t h_t — this is what makes `long_500k` runnable (DESIGN.md §5).
+
+Validated against the sequential oracle `kernels.ref.ssd_scan_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import Ctx, Params
+
+__all__ = ["ssd_chunked", "init_mamba", "mamba_forward", "mamba_decode",
+           "init_ssm_state", "init_params", "forward", "loss_fn",
+           "decode_step", "init_cache"]
+
+DEFAULT_CHUNK = 64
+
+
+# ----------------------------------------------------------------------
+# chunked SSD
+# ----------------------------------------------------------------------
+def ssd_chunked(x: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array,
+                *, chunk: int = DEFAULT_CHUNK,
+                h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel SSD.
+
+    x: (B,S,H,P) inputs (dt already folded in), a_log: (B,S,H) log-decays
+    (<= 0), b/c: (B,S,H,N).  Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"seq {S} not divisible by chunk {Q}")
+    nc = S // Q
+    xr = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    br = b.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    cr = c.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    al = a_log.reshape(B, nc, Q, H).astype(jnp.float32)
+
+    cum = jnp.cumsum(al, axis=2)                       # (B,nc,Q,H)
+    # intra-chunk: y_q += sum_{k<=q} exp(cum_q - cum_k) (c_q . b_k) x_k
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,K,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of the masked (q<k) entries would overflow and
+    # poison gradients through the discarded `where` branch.
+    lmat = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    g = jnp.einsum("bnqhd,bnkhd->bnqkh", cr, br)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", g * lmat, xr)
+
+    # per-chunk state contribution and total decay
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bnkh,bnkhd,bnkhp->bnhdp", decay_end, br, xr)
+    total = jnp.exp(cum[:, :, -1, :])                        # (B,nc,H)
+
+    h_init = (jnp.zeros((B, H, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        s_n, tot_n, c_n, cum_n = inp
+        y_inter = jnp.einsum("bqhd,bhdp->bqhp",
+                             c_n * jnp.exp(cum_n)[..., None], h)
+        h_new = tot_n[:, :, None, None] * h + s_n
+        return h_new, y_inter
+
+    xs = (s_chunk.transpose(1, 0, 2, 3, 4),   # (nc,B,H,N,P)
+          total.transpose(1, 0, 2),           # (nc,B,H)
+          cr.transpose(1, 0, 2, 3, 4),        # (nc,B,Q,H,N)
+          cum.transpose(1, 0, 2, 3))          # (nc,B,Q,H)
+    h_final, y_inter = jax.lax.scan(step, h_init, xs)
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4).reshape(B, nc, Q, H, P)
+    return y.reshape(B, S, H, P).astype(x.dtype), h_final
+
+
+# ----------------------------------------------------------------------
+# mamba2 block
+# ----------------------------------------------------------------------
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, g, ck = cfg.ssm_heads, cfg.ssm_groups, cfg.conv_kernel
+    conv_dim = di + 2 * g * N
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": L.init_linear(ks[0], d, 2 * di + 2 * g * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (ck, conv_dim), jnp.float32)
+                   * ck ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": L.init_rmsnorm(di, dtype),
+        "out_proj": L.init_linear(ks[2], di, d, dtype=dtype),
+    }
+
+
+def _split_zxbcdt(zxbcdt, cfg: ModelConfig):
+    di, gN, H = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gN]
+    dt = zxbcdt[..., di + di + 2 * gN:]
+    assert dt.shape[-1] == H
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: xbc (B,S,Cd), w (ck,Cd).
+
+    Implemented as one lax.conv (feature-grouped) rather than ck shifted
+    adds: under sequence sharding GSPMD partitions a convolution with a
+    (ck-1)-element halo exchange, while the shifted-add form emitted
+    full-length collective-permutes per tap (measured 40k permutes /
+    21 s collective term on zamba2 train_4k; §Perf-1).
+    """
+    ck, cd = w.shape
+    out = jax.lax.conv_general_dilated(
+        xbc, w.reshape(ck, 1, cd),
+        window_strides=(1,), padding=[(ck - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=cd)
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssm_inputs(p: Params, xbc_conv, dt_raw, cfg: ModelConfig):
+    di, N, H, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    P = cfg.ssm_head_dim
+    x = xbc_conv[..., :di]
+    bc = xbc_conv[..., di:]
+    lead = x.shape[:-1]
+    b_ = bc[..., :g * N].reshape(*lead, g, N)
+    c_ = bc[..., g * N:].reshape(*lead, g, N)
+    rep = H // g
+    b_ = jnp.repeat(b_, rep, axis=-2)
+    c_ = jnp.repeat(c_, rep, axis=-2)
+    xh = x.reshape(*lead, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt
+    return xh, dt, a_log, b_, c_
+
+
+def _head_constraint(t: jax.Array, ctx: Ctx) -> jax.Array:
+    """Shard the SSD head dim (axis 2 of (B,S,H[,*])) over 'model'.
+
+    Two effects: (1) the intra-chunk SSD tensors (decay matrices, c.b
+    scores, O(B*nc*H*Q^2)) stop replicating across the model axis
+    (measured 63 GiB/dev on zamba2 train_4k); (2) the sequence dim goes
+    LOCAL, so the inter-chunk scan iterates an unsharded chunk axis —
+    leaving S sequence-sharded makes GSPMD rotate shards with
+    collective-permutes on every scan step (measured 40k permutes /
+    21 s collective term; §Perf-1).  Handles 3D (a_log) and 4D (x,b,c).
+    """
+    if ctx.mesh is None or t.ndim not in (3, 4)             or "model" not in ctx.mesh.axis_names:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    if t.shape[2] % sizes["model"] != 0:
+        return t
+    spec = (P(None, None, "model") if t.ndim == 3
+            else P(None, None, "model", None))
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(ctx.mesh, spec))
+
+
+def mamba_forward(p: Params, u: jax.Array, cfg: ModelConfig, ctx: Ctx,
+                  *, chunk: int = DEFAULT_CHUNK) -> jax.Array:
+    """u: (B,S,d) -> (B,S,d)."""
+    zxbcdt = L.linear(p["in_proj"], u, ctx)
+    z, xbc, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(ctx.dtype),
+                       p["conv_b"].astype(ctx.dtype))
+    xh, dt, a_log, b_, c_ = _ssm_inputs(p, xbc, dt_raw, cfg)
+    xh = _head_constraint(xh, ctx)
+    b_ = _head_constraint(b_, ctx)
+    c_ = _head_constraint(c_, ctx)
+    a_log = _head_constraint(a_log, ctx)
+    y, _ = ssd_chunked(xh * dt[..., None].astype(xh.dtype), a_log, b_, c_,
+                       chunk=chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    B, S = u.shape[:2]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return L.linear(p["out_proj"], y, ctx)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, u: jax.Array, cfg: ModelConfig, ctx: Ctx,
+                 state: Params) -> tuple[jax.Array, Params]:
+    """One-token recurrent step. u: (B,1,d)."""
+    zxbcdt = L.linear(p["in_proj"], u, ctx)
+    z, xbc, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+    window = jnp.concatenate([state["conv"], xbc.astype(state["conv"].dtype)],
+                             axis=1)                     # (B, ck, Cd)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xbc_t = conv_out[:, None, :].astype(ctx.dtype)       # (B,1,Cd)
+    xh, dt, a_log, b_, c_ = _ssm_inputs(p, xbc_t, dt_raw, cfg)
+    # recurrence (fp32 state)
+    xt = (xh * dt[..., None].astype(xh.dtype))[:, 0]     # (B,H,P)
+    at = jnp.exp(a_log[:, 0])                            # (B,H)
+    bt = b_[:, 0].astype(jnp.float32)                    # (B,H,N)
+    ct = c_[:, 0].astype(jnp.float32)
+    h = state["ssm"] * at[:, :, None, None] \
+        + jnp.einsum("bhd,bhp->bhdp", bt, xt.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdp->bhp", ct, h).astype(ctx.dtype)
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xh[:, 0]
+    B = u.shape[0]
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y, ctx)
+    return out, {"conv": window[:, 1:], "ssm": h}
+
+
+# ----------------------------------------------------------------------
+# pure-SSM LM (mamba2-130m)
+# ----------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, dtype) -> Params:
+    return {"norm": L.init_rmsnorm(cfg.d_model, dtype),
+            "mamba": init_mamba(key, cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ke, kl = jax.random.split(key)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(
+        jax.random.split(kl, cfg.n_layers))
+    return {"embed": L.init_embed(ke, cfg, dtype),
+            "layers": stacked,
+            "final_norm": L.init_rmsnorm(cfg.d_model, dtype)}
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            ctx: Ctx, *, last_only: bool = False) -> jax.Array:
+    x = L.embed(params["embed"], tokens, ctx)
+
+    def body(x, lp):
+        x = L.shard_act(x, ctx)
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        return x + mamba_forward(lp["mamba"], h, cfg, ctx), None
+
+    from repro.models.transformer import remat_policy
+    policy = remat_policy(cfg)
+    f = body if policy is None else jax.checkpoint(
+        lambda x, lp: body(x, lp), policy=policy)
+    x, _ = jax.lax.scan(f, x, params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return L.unembed(params["embed"], x, ctx)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig,
+            ctx: Ctx) -> jax.Array:
+    logits = forward(params, batch["tokens"], cfg, ctx)
+    return L.cross_entropy(logits, batch["targets"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    del max_len  # O(1) state — the point of the SSM families
+    state = init_ssm_state(cfg, batch, jnp.float32)
+    return {
+        "conv": jnp.zeros((cfg.n_layers,) + state["conv"].shape, jnp.float32),
+        "ssm": jnp.zeros((cfg.n_layers,) + state["ssm"].shape, jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                cfg: ModelConfig, ctx: Ctx) -> tuple[jax.Array, Params]:
+    x = L.embed(params["embed"], tokens, ctx)
+
+    def body(x, layer):
+        lp, st = layer
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        y, new_st = mamba_decode(lp["mamba"], h, cfg, ctx, st)
+        return x + y, new_st
+
+    x, new_states = jax.lax.scan(
+        body, x, (params["layers"],
+                  {"conv": cache["conv"], "ssm": cache["ssm"]}))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, ctx)
+    return logits, {"conv": new_states["conv"], "ssm": new_states["ssm"],
+                    "pos": cache["pos"] + 1}

@@ -1,0 +1,228 @@
+"""Dense decoder-only LM with scan-over-layers and KV-cache decode.
+
+Shared by the dense / vlm / moe families (moe swaps the MLP).  Layers
+are stacked along a leading axis and executed with `jax.lax.scan`, so
+HLO size and compile time are O(1) in depth — required to lower the
+88-layer mistral-large-123b in this container (DESIGN.md §7.3).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import Ctx, Params
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "remat_policy"]
+
+
+def remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, dtype,
+                init_mlp_fn: Callable | None = None) -> Params:
+    k1, k2 = jax.random.split(key)
+    mlp_init = init_mlp_fn or (lambda k: L.init_mlp(k, cfg, dtype))
+    return {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": mlp_init(k2),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32,
+                init_mlp_fn: Callable | None = None) -> Params:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype, init_mlp_fn))(layer_keys)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# forward (train / prefill)
+# ----------------------------------------------------------------------
+def _layer_fwd(cfg: ModelConfig, ctx: Ctx, mlp_fn: Callable | None,
+               x: jax.Array, lp: Params, positions: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """One block.  mlp_fn protocol: (params, x) -> (y, aux_loss)."""
+    x = L.shard_act(x, ctx)   # SP: sequence-sharded residual (DESIGN.md §4)
+    h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+    # output-side SP constraints make GSPMD emit the reduce-scatter
+    # (not all-reduce+slice) form at the TP boundaries — L.shard_seq.
+    # NOT applied around MoE blocks: it fights the EP dispatch layout
+    # (measured olmoe train collective 25 s -> 68 s; perf_log.md).
+    x = x + L.shard_seq(
+        L.attention(lp["attn"], h, cfg, ctx, positions=positions), ctx)
+    h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+    if mlp_fn is None:
+        y = L.shard_seq(L.mlp(lp["mlp"], h, cfg, ctx), ctx)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        y, aux = mlp_fn(lp["mlp"], h)
+    return x + y, aux
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
+            *, frontend_embeds: jax.Array | None = None,
+            mlp_fn: Callable | None = None,
+            return_aux: bool = False,
+            last_only: bool = False):
+    """tokens: (B, S_text) -> logits (B, S_text, V).
+
+    For vlm/audio families, `frontend_embeds` (B, P, d) are prepended;
+    logits are returned for text positions only.  With return_aux, also
+    returns the mean per-layer auxiliary loss (MoE load balancing).
+    """
+    x = L.embed(params["embed"], tokens, ctx)
+    n_front = 0
+    if frontend_embeds is not None:
+        n_front = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(ctx.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    body = functools.partial(_layer_fwd, cfg, ctx, mlp_fn)
+    policy = remat_policy(cfg)
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+
+    def scan_body(x, lp):
+        x, aux = body(x, lp, positions)
+        return x, aux
+
+    x, auxes = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:]
+    if last_only:   # serving prefill: only the next-token logits
+        x = x[:, -1:]
+    logits = L.unembed(params["embed"], x, ctx)
+    if return_aux:
+        return logits, jnp.mean(auxes)
+    return logits
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig, ctx: Ctx,
+            *, mlp_fn: Callable | None = None,
+            aux_coef: float = 0.01) -> jax.Array:
+    logits, aux = forward(params, batch["tokens"], cfg, ctx,
+                          frontend_embeds=batch.get("frontend_embeds"),
+                          mlp_fn=mlp_fn, return_aux=True)
+    return L.cross_entropy(logits, batch["targets"]) + aux_coef * aux
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, *, quantize_kv: bool = False) -> Params:
+    """quantize_kv: int8 cache storage with per-(position, kv-head)
+    scales — halves (vs bf16) the dominant decode memory term and
+    capacity (EXPERIMENTS.md §Perf: qwen decode_32k carries 5.5 TB of
+    global MHA KV at 128x32k).  Dequantization happens per layer inside
+    the score/PV dots (fused on TPU)."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    if quantize_kv:
+        sshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, 1)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, dtype),
+                "v_scale": jnp.zeros(sshape, dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def _layer_decode(cfg: ModelConfig, ctx: Ctx, mlp_fn: Callable | None,
+                  x: jax.Array, lp: Params, layer_cache: Params,
+                  pos: jax.Array) -> tuple[jax.Array, Params]:
+    h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+    if "k_scale" in layer_cache:
+        a, new_cache = L.attention_decode_quantized(
+            lp["attn"], h, cfg, ctx, cache=layer_cache, pos=pos)
+    else:
+        a, new_cache = L.attention_decode(lp["attn"], h, cfg, ctx,
+                                          cache=layer_cache, pos=pos)
+    x = x + a
+    h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+    fn = mlp_fn or (lambda p, v: (L.mlp(p, v, cfg, ctx), 0.0))
+    y, _ = fn(lp["mlp"], h)
+    return x + y, new_cache
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                cfg: ModelConfig, ctx: Ctx,
+                *, mlp_fn: Callable | None = None
+                ) -> tuple[jax.Array, Params]:
+    """tokens: (B, 1) -> (logits (B, 1, V), updated cache)."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens, ctx)
+
+    def scan_body(x, layer):
+        lp, lc = layer
+        x, new_lc = _layer_decode(cfg, ctx, mlp_fn, x, lp, lc, pos)
+        return x, new_lc
+
+    lc = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_kv = jax.lax.scan(scan_body, x, (params["layers"], lc))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, ctx)
+    return logits, {**new_kv, "pos": pos + 1}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
+            max_len: int, *, mlp_fn: Callable | None = None
+            ) -> tuple[jax.Array, Params]:
+    """Run the prompt, returning last-position logits + populated cache."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    hd = cfg.resolved_head_dim
+
+    def scan_body(x, lp):
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], h, cfg, ctx)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        o = L._gqa_full(q, k, v, causal=True,
+                        impl=L.ops.resolve_impl(ctx.impl), ctx=ctx)
+        x = x + L.linear(lp["attn"]["wo"],
+                         o.reshape(B, S, cfg.n_heads * hd), ctx)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        fn = mlp_fn or (lambda p, v_: (L.mlp(p, v_, cfg, ctx), 0.0))
+        y, _ = fn(lp["mlp"], h)
+        x = x + y
+        return x, {"k": k, "v": v}
+
+    x, kv = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], ctx)
+
+    pad = max_len - S
+    cache = {
+        "k": jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(ctx.dtype),
+        "v": jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(ctx.dtype),
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache

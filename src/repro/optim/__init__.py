@@ -1,0 +1,4 @@
+from repro.optim.adamw import OptState, adamw_update, init_opt_state, make_schedule, global_norm, clip_by_global_norm
+from repro.optim import compression
+
+__all__ = ["OptState", "adamw_update", "init_opt_state", "make_schedule", "global_norm", "clip_by_global_norm", "compression"]

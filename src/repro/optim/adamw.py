@@ -1,0 +1,95 @@
+"""AdamW + LR schedules + global-norm clipping (pure JAX, no optax)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+__all__ = ["OptState", "init_opt_state", "adamw_update", "make_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptState:
+    mu: Params
+    nu: Params
+    step: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.mu, s.nu, s.step), None),
+    lambda aux, c: OptState(*c),
+)
+
+
+def init_opt_state(params: Params, *, moments_dtype=None) -> OptState:
+    """moments_dtype: e.g. jnp.bfloat16 halves optimizer HBM (8-bit-Adam
+    style capacity trick; update math still runs in f32)."""
+    def z(p):
+        return jnp.zeros(p.shape, moments_dtype or p.dtype)
+    return OptState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def make_schedule(run: RunConfig) -> Callable[[jax.Array], jax.Array]:
+    """Linear warmup + cosine decay to 10% of peak."""
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, run.warmup_steps))
+        prog = jnp.clip((step - run.warmup_steps)
+                        / max(1, run.total_steps - run.warmup_steps), 0.0, 1.0)
+        cos = 0.55 + 0.45 * jnp.cos(jnp.pi * prog)
+        return run.lr * warm * cos
+    return sched
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params: Params, grads: Params, state: OptState,
+                 run: RunConfig, *, lr: jax.Array | None = None
+                 ) -> tuple[Params, OptState, dict]:
+    """One AdamW step (decoupled weight decay, bias-corrected moments)."""
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    step = state.step + 1
+    lr = make_schedule(run)(step) if lr is None else lr
+    b1, b2 = run.b1, run.b2
+
+    mu = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32)
+                      + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+        state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: (b2 * v.astype(jnp.float32)
+                      + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                      ).astype(v.dtype),
+        state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m.astype(jnp.float32) / bc1
+        vhat = v.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + 1e-8) + run.weight_decay * p
+        return (p - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(mu=mu, nu=nu, step=step), metrics

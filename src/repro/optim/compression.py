@@ -1,0 +1,88 @@
+"""Gradient compression for the slow (cross-pod / DCN) axis.
+
+Two standard schemes, both with error feedback so compression noise is
+carried to the next step instead of lost (convergence-preserving):
+
+  * int8 — per-tensor symmetric quantization (4x traffic cut vs fp32);
+  * topk — magnitude sparsification keeping a fraction of entries.
+
+Usage in the train step: residual-corrected gradients are compressed,
+all-reduced over the 'pod' axis at the compressed width, decompressed,
+and the quantization error is kept as the next step's residual.  The
+compressed representative is what crosses the slow links; DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_residuals", "compress_int8", "decompress_int8",
+           "compress_topk", "decompress_topk", "apply_error_feedback"]
+
+Params = Any
+
+
+def init_residuals(grads: Params) -> Params:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+# --- int8 ------------------------------------------------------------
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# --- top-k -----------------------------------------------------------
+def compress_topk(x: jax.Array, frac: float = 0.05
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Returns (values, flat indices); k = max(1, frac * size)."""
+    flat = x.reshape(-1)
+    k = max(1, int(frac * flat.size))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def decompress_topk(vals: jax.Array, idx: jax.Array, shape, dtype
+                    ) -> jax.Array:
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), dtype)
+    return flat.at[idx].set(vals.astype(dtype)).reshape(shape)
+
+
+# --- error feedback --------------------------------------------------
+def apply_error_feedback(grads: Params, residuals: Params, *,
+                         scheme: str = "int8", topk_frac: float = 0.05
+                         ) -> tuple[Params, Params]:
+    """(compressed-then-decompressed grads, new residuals).
+
+    The returned grads are the values that actually cross the slow
+    links; residuals carry the compression error to the next step.
+    """
+    if scheme == "none":
+        return grads, residuals
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            q, s = compress_int8(corrected)
+            approx = decompress_int8(q, s)
+        elif scheme == "topk":
+            v, i = compress_topk(corrected, topk_frac)
+            approx = decompress_topk(v, i, corrected.shape, jnp.float32)
+        else:
+            raise ValueError(scheme)
+        return approx.astype(g.dtype), corrected - approx
+
+    out = jax.tree.map(one, grads, residuals)
+    new_grads = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return new_grads, new_res

@@ -1,0 +1,175 @@
+"""Fault tolerance: retrying executor, heartbeats, stragglers, elastic.
+
+What 1000+-node runs actually need (DESIGN.md §4), built so every part
+is exercisable in tests on this single-host container:
+
+  * ``ResilientExecutor`` — wraps the jitted train step: transient
+    failures (preemption, DMA timeout, flaky host) are retried;
+    persistent failures trigger checkpoint-restart via the caller's
+    restore_fn.  Injectable failure hooks make this testable.
+  * heartbeat files — one per host per step; an external watchdog (or
+    the test) can detect a wedged host by mtime.
+  * ``StragglerDetector`` — EWMA of step wall-time; hosts slower than
+    `factor`x the fleet EWMA are flagged for microbatch rebalancing /
+    replacement (the mitigation hook is returned to the launcher).
+  * ``elastic_restore`` — restore the latest checkpoint onto a *new*
+    mesh (fewer/more devices) by re-placing logical arrays under
+    freshly derived shardings: pod loss -> shrink to single-pod mesh
+    and continue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.runtime import sharding as shard_rules
+
+__all__ = ["ResilientExecutor", "StragglerDetector", "Heartbeat",
+           "elastic_restore", "TransientError"]
+
+
+class TransientError(RuntimeError):
+    """Failure class that is retried in place (preemption, link flap)."""
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host_id: int = 0):
+        self.path = os.path.join(directory, f"heartbeat_{host_id}.json")
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "t": time.time()}, f)
+        os.replace(tmp, self.path)
+
+    def last(self) -> dict | None:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+
+    def stale(self, timeout_s: float) -> bool:
+        hb = self.last()
+        return hb is None or (time.time() - hb["t"]) > timeout_s
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Per-host EWMA step-time tracking with a slowness factor flag."""
+    alpha: float = 0.2
+    factor: float = 2.0
+    _ewma: dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def observe(self, host_id: int, step_time_s: float) -> None:
+        prev = self._ewma.get(host_id)
+        self._ewma[host_id] = (step_time_s if prev is None
+                               else self.alpha * step_time_s
+                               + (1 - self.alpha) * prev)
+
+    def fleet_ewma(self) -> float:
+        if not self._ewma:
+            return 0.0
+        vals = sorted(self._ewma.values())
+        return vals[len(vals) // 2]  # median of per-host EWMAs
+
+    def stragglers(self) -> list[int]:
+        base = self.fleet_ewma()
+        if base <= 0:
+            return []
+        return [h for h, v in self._ewma.items() if v > self.factor * base]
+
+    def rebalance_weights(self) -> dict[int, float]:
+        """Suggested relative microbatch share per host (inverse speed)."""
+        if not self._ewma:
+            return {}
+        inv = {h: 1.0 / max(v, 1e-9) for h, v in self._ewma.items()}
+        total = sum(inv.values())
+        return {h: v / total for h, v in inv.items()}
+
+
+class ResilientExecutor:
+    """Run steps with retry + checkpoint-restart semantics."""
+
+    def __init__(self, step_fn: Callable, *, max_retries: int = 3,
+                 restore_fn: Callable[[], Any] | None = None,
+                 heartbeat: Heartbeat | None = None,
+                 detector: StragglerDetector | None = None,
+                 host_id: int = 0,
+                 failure_hook: Callable[[int], None] | None = None):
+        self.step_fn = step_fn
+        self.max_retries = max_retries
+        self.restore_fn = restore_fn
+        self.heartbeat = heartbeat
+        self.detector = detector
+        self.host_id = host_id
+        self.failure_hook = failure_hook  # test injection point
+        self.retries_total = 0
+        self.restarts_total = 0
+
+    def run_step(self, step: int, state, *args):
+        attempt = 0
+        while True:
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(step)   # may raise TransientError
+                t0 = time.monotonic()
+                out = self.step_fn(state, *args)
+                jax.block_until_ready(out)
+                dt = time.monotonic() - t0
+                if self.detector is not None:
+                    self.detector.observe(self.host_id, dt)
+                if self.heartbeat is not None:
+                    self.heartbeat.beat(step)
+                return out
+            except TransientError:
+                attempt += 1
+                self.retries_total += 1
+                if attempt <= self.max_retries:
+                    continue
+                if self.restore_fn is None:
+                    raise
+                state = self.restore_fn()   # checkpoint restart
+                self.restarts_total += 1
+                attempt = 0
+
+
+def elastic_restore(ckpt: Checkpointer, template_state: Any, new_mesh,
+                    *, params_path: str = "params"):
+    """Restore the latest checkpoint onto a different mesh.
+
+    template_state: pytree of arrays/ShapeDtypeStructs in the *logical*
+    (unsharded) shapes.  Param-rule shardings are re-derived for
+    `new_mesh`; everything else is replicated.  Returns (state, step).
+    """
+    def shardings_for(tree):
+        return shard_rules.param_shardings(new_mesh, tree)
+
+    shardings = jax.tree.map(lambda _: None, template_state,
+                             is_leaf=lambda x: x is None)
+    # derive param shardings for the params subtree when present
+    if isinstance(template_state, dict) and params_path in template_state:
+        shardings = dict(shardings)
+        shardings[params_path] = shardings_for(template_state[params_path])
+        flat_sh = []
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template_state)
+        sh_map = {shard_rules.path_str(p): None for p, _ in flat}
+        for p, leaf in flat:
+            ps = shard_rules.path_str(p)
+            if ps.startswith(params_path):
+                sub = ps[len(params_path) + 1:]
+                flat_sh.append(jax.sharding.NamedSharding(
+                    new_mesh, shard_rules.spec_for_param(new_mesh, sub,
+                                                         leaf.shape)))
+            else:
+                flat_sh.append(shard_rules.replicated(new_mesh))
+        shardings = jax.tree_util.tree_unflatten(treedef, flat_sh)
+    return ckpt.restore(template_state, shardings=shardings)

@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules -> NamedShardings (DP/FSDP/TP/EP/SP).
+
+Mesh axes: ('pod', 'data', 'model') multi-pod or ('data', 'model')
+single-pod (launch/mesh.py).  Parallelism mapping (DESIGN.md §4):
+
+  batch               -> ('pod', 'data')     data parallel across pods
+  d_model dim of W    -> 'data'              FSDP / ZeRO-3 weight shard
+  heads*hd / d_ff / V -> 'model'             tensor parallel
+  MoE expert dim      -> 'model'             expert parallel
+  long-context S dim  -> 'data'              sequence parallel (caches)
+
+Rules are path-pattern based over the param pytree, with a divisibility
+guard: an axis is applied only when the dim divides evenly by the axis
+size (pjit rejects uneven shards — e.g. vocab 49155 or 40 KV heads on
+a 16-way axis fall back to replication / an alternate dim).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "batch_axes", "spec_for_param", "path_str", "replicated"]
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying data parallelism ('pod' included if present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names) or (None,)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+# (pattern, spec-for-trailing-dims) — first match wins.  Specs are given
+# for the *parameter's own* dims; stacked layer/group leading dims are
+# detected by rank surplus and padded with None on the left.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/tokens$",        ("model", "data")),   # (V, d)
+    (r"embed/lm_head$",       ("data", "model")),   # (d, V)
+    (r"router$",              ("data", None)),      # (d, E)
+    (r"(wi|wg)$",             ("model", "data", None)),  # MoE (E, d, f) — EP
+    (r"wo$",                  ("model", "data", None)),  # MoE (E, f, d) — EP
+    (r"attn/w[qkv]/w$",       ("data", "model")),   # (d, H*hd) TP
+    (r"attn/w[qkv]/b$",       ("model",)),
+    (r"attn/wo/w$",           ("model", "data")),   # (H*hd, d)
+    (r"attn/wo/b$",           (None,)),
+    (r"mlp/(wi|wg)/w$",       ("data", "model")),   # (d, f) TP
+    (r"mlp/wo/w$",            ("model", "data")),   # (f, d)
+    (r"pre_proj/w$",          ("data", "model")),   # (2d, d) zamba shared
+    (r"in_proj/w$",           ("data", "model")),   # mamba (d, ...)
+    (r"out_proj/w$",          ("model", "data")),   # mamba (di, d)
+    (r"conv_w$",              (None, "model")),     # (ck, conv_dim)
+    (r"conv_b$",              ("model",)),
+    (r"(A_log|D|dt_bias)$",   (None,)),             # tiny per-head vectors
+    (r"(scale|norm/scale)$",  (None,)),
+    (r".*/b$",                (None,)),
+]
+
+
+def _apply_axes(mesh: Mesh, shape, spec: tuple) -> P:
+    """Pad spec to rank; drop axes that don't fit the dim; resolve
+    'data' to the FSDP axis."""
+    rank = len(shape)
+    spec = tuple(spec)
+    if len(spec) < rank:  # stacked layer/group leading dims
+        spec = (None,) * (rank - len(spec)) + spec
+    elif len(spec) > rank:
+        spec = spec[len(spec) - rank:]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, spec):
+        # pjit in_shardings require exact divisibility (verified: uneven
+        # dims are a hard error, e.g. vocab 49155 on a 16-way axis).
+        if ax is None or ax not in sizes or dim % sizes[ax] != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def spec_for_param(mesh: Mesh, path: str, shape) -> P:
+    for pattern, spec in _PARAM_RULES:
+        if re.search(pattern, path):
+            # MoE expert weights are 3D; dense mlp rule would mis-rank —
+            # rank adaptation in _apply_axes handles both.
+            return _apply_axes(mesh, shape, spec)
+    return P()  # replicate by default (small/unknown leaves)
+
+
+def param_shardings(mesh: Mesh, tree: Any) -> Any:
+    """NamedSharding pytree matching `tree` (arrays or ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = spec_for_param(mesh, path_str(path), leaf.shape)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    size = 1
+    for a in axes:
+        if a is not None and a in mesh.axis_names:
+            size *= mesh.devices.shape[mesh.axis_names.index(a)]
+    return size > 1 and dim % size == 0
+
+
+def batch_shardings(mesh: Mesh, batch: Any) -> Any:
+    """Shard the leading (batch) dim over ('pod','data') when it fits."""
+    dp = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return replicated(mesh)
+        if _fits(leaf.shape[0], mesh, dp):
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return replicated(mesh)
+
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: Any, *, seq_axis_threshold: int = 65536
+                    ) -> Any:
+    """Decode-cache shardings.
+
+    KV caches (..., B, S, KV, hd): batch over DP axes when divisible;
+    heads over 'model'; for long-context single-sequence decode
+    (B unshardable, S >= threshold) the sequence dim shards over 'data'
+    — sequence parallelism (DESIGN.md §4 SP).
+    """
+    dp = batch_axes(mesh)
+
+    def one(path, leaf):
+        name = path_str(path)
+        if leaf.ndim == 0 or name.endswith("pos"):
+            return replicated(mesh)
+        if name.endswith(("k", "v", "cross_k", "cross_v",
+                          "k_scale", "v_scale")):
+            # (L?, B, S, KV, hd|1) — int8-KV scale leaves shard like KV
+            spec = [None] * leaf.ndim
+            b_ax, s_ax, kv_ax = leaf.ndim - 4, leaf.ndim - 3, leaf.ndim - 2
+            model_size = mesh.devices.shape[mesh.axis_names.index("model")]
+            if _fits(leaf.shape[b_ax], mesh, dp):
+                spec[b_ax] = dp
+            elif leaf.shape[s_ax] >= seq_axis_threshold and "data" in mesh.axis_names:
+                spec[s_ax] = "data"   # SP for long_500k-style caches
+            if leaf.shape[kv_ax] % model_size == 0:
+                spec[kv_ax] = "model"
+            elif leaf.shape[s_ax] % model_size == 0 and spec[s_ax] is None:
+                # GQA with few KV heads (8 < 16-way TP): shard the cache
+                # sequence over 'model' instead — decode attention over a
+                # sharded context ("flash-decode" style partial softmax,
+                # GSPMD inserts the reductions).
+                spec[s_ax] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name.endswith("conv"):     # (L?, B, ck-1, conv_dim)
+            spec = [None] * leaf.ndim
+            if _fits(leaf.shape[-3], mesh, dp):
+                spec[-3] = dp
+            spec[-1] = ("model" if leaf.shape[-1] % mesh.devices.shape[
+                mesh.axis_names.index("model")] == 0 else None)
+            return NamedSharding(mesh, P(*spec))
+        if name.endswith("ssm"):      # (L?, B, H, N, P)
+            spec = [None] * leaf.ndim
+            if _fits(leaf.shape[-4], mesh, dp):
+                spec[-4] = dp
+            if leaf.shape[-3] % mesh.devices.shape[
+                    mesh.axis_names.index("model")] == 0:
+                spec[-3] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return replicated(mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run's 512-device
+# override must NOT leak here).  Distributed behaviour is exercised in
+# tests/test_distributed.py via subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,72 @@
+"""Trip-count-aware HLO cost analyzer: exactness on known programs."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hlo_costs import analyze_hlo
+from repro.core.roofline import parse_collective_bytes
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x):
+        def body(c, w):
+            return c @ w + 1.0, jnp.sum(c)
+        c, s = jax.lax.scan(body, x, jnp.ones((7, 16, 16)))
+        return c.sum() + s.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    c = analyze_hlo(comp.as_text())
+    assert c.flops == 2 * 16 * 16 * 16 * 7     # exact dot count x trips
+    assert c.n_while == 1
+    assert c.max_trip == 7
+
+
+def test_nested_scan_composes():
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    c = analyze_hlo(comp.as_text())
+    assert c.flops == 2 * 8 * 8 * 8 * 3 * 5
+    assert c.max_trip == 5
+
+
+def test_unrolled_matches_scan_total():
+    w = jnp.ones((4, 12, 12))
+
+    def scanned(x):
+        c, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return c.sum()
+
+    def unrolled(x):
+        for i in range(4):
+            x = x @ w[i]
+        return x.sum()
+
+    sds = jax.ShapeDtypeStruct((12, 12), jnp.float32)
+    cs = analyze_hlo(jax.jit(scanned).lower(sds).compile().as_text())
+    cu = analyze_hlo(jax.jit(unrolled).lower(sds).compile().as_text())
+    assert cs.flops == cu.flops == 2 * 12 * 12 * 12 * 4
+
+
+def test_collective_text_parser():
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[512,64]{1,0} all-gather(bf16[256,64]{1,0} %y), dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(f32[256]{0} %z), dimensions={0}
+"""
+    c = parse_collective_bytes(hlo)
+    # traffic model: AR = 2x input (ring), AG = gathered output, RS = input
+    assert c.bytes_by_kind["all-reduce"] == 2 * 128 * 256 * 4
+    assert c.bytes_by_kind["all-gather"] == 512 * 64 * 2
+    assert c.bytes_by_kind["reduce-scatter"] == 256 * 4
+    assert c.count_by_kind == {"all-reduce": 1, "all-gather": 1,
+                               "reduce-scatter": 1}

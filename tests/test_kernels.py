@@ -1,0 +1,96 @@
+"""Kernel allclose sweeps vs the pure-jnp oracles (interpret mode).
+
+Every Pallas kernel is executed with interpret=True (the kernel body —
+including the manual DMA revolving buffer — runs in Python on CPU) and
+compared against ref.py across shapes, dtypes and both pipeline
+variants.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.zero_stall_matmul import zero_stall_matmul
+from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("variant", ["dobu", "single"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn,tiles", [
+    ((16, 16, 16), (8, 8, 8)),
+    ((32, 48, 16), (16, 16, 16)),
+    ((24, 16, 40), (8, 8, 8)),
+    ((8, 64, 8), (8, 8, 8)),
+])
+def test_zero_stall_matmul(rng, mkn, tiles, dtype, variant):
+    M, K, N = mkn
+    bm, bn, bk = tiles
+    a = jnp.asarray(rng.standard_normal((M, K)), dtype)
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype)
+    got = zero_stall_matmul(a, b, bm=bm, bn=bn, bk=bk, variant=variant,
+                            interpret=True)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_zero_stall_matmul_rejects_ragged(rng):
+    a = jnp.zeros((12, 16), jnp.float32)
+    b = jnp.zeros((16, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        zero_stall_matmul(a, b, bm=8, bn=8, bk=8, interpret=True)
+
+
+def test_ops_matmul_pads_ragged(rng):
+    a = jnp.asarray(rng.standard_normal((13, 21)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((21, 9)), jnp.float32)
+    got = ops.matmul(a, b, impl="interpret", bm=8, bn=8, bk=8)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), atol=2e-5)
+
+
+@pytest.mark.parametrize("variant", ["dobu", "single"])
+@pytest.mark.parametrize("g,mkn", [(1, (8, 8, 8)), (3, (16, 24, 16)),
+                                   (5, (8, 16, 8))])
+def test_grouped_matmul(rng, g, mkn, variant):
+    M, K, N = mkn
+    a = jnp.asarray(rng.standard_normal((g, M, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((g, K, N)), jnp.float32)
+    got = grouped_zero_stall_matmul(a, b, bm=8, bn=8, bk=8,
+                                    variant=variant, interpret=True)
+    np.testing.assert_allclose(got, ref.grouped_matmul_ref(a, b), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("s,d,bq,bkv", [(32, 16, 8, 8), (64, 32, 16, 16),
+                                        (32, 8, 32, 8)])
+def test_flash_attention(rng, s, d, bq, bkv, causal):
+    q = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
+    got = ops.attention(q, k, v, impl="interpret", causal=causal,
+                        bq=bq, bkv=bkv)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+def test_host_tiled_matmul_matches(rng):
+    """The pre-ZONL baseline is numerically identical — only slower."""
+    a = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    got = ops.host_tiled_matmul(a, b, bm=8, bn=8, bk=8)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), atol=1e-4)
+
+
+def test_dispatch_jnp_path(rng):
+    a = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
+    assert ops.resolve_impl("auto") == "jnp"    # CPU container
+    np.testing.assert_allclose(ops.matmul(a, b, impl="auto"),
+                               ref.matmul_ref(a, b), atol=1e-6)
