@@ -32,6 +32,14 @@ def _kernel_correctness():
     err, us = timed(check, repeat=1)
     emit("kernel_zero_stall_matmul", us, f"interpret_maxerr={err:.2e}")
 
+    def check_tuned():
+        """Tuned path (repro.tune resolves tiles/slots/grid order)."""
+        got = ops.matmul(a, b, impl="interpret", tiling="auto")
+        return float(jnp.max(jnp.abs(got - ref.matmul_ref(a, b))))
+
+    err, us = timed(check_tuned, repeat=1)
+    emit("kernel_zero_stall_matmul_tuned", us, f"interpret_maxerr={err:.2e}")
+
     q = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
 
     def check_flash():

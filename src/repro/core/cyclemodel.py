@@ -354,11 +354,23 @@ class TpuPipelineModel:
     Mirrors the paper's two mechanisms on TPU terms:
       * ``double_buffered`` — Dobu analogue: tile t+1 DMA overlaps tile
         t compute (2-slot VMEM revolving buffer).  Per-step time is
-        max(compute, dma).
-      * single-buffered — copy -> wait -> compute serialization
-        (the "bank conflict" analogue: producer and consumer contend).
+        max(compute, dma).  ``slots`` generalizes this to the N-slot
+        revolving buffer of the refactored kernels: a deeper ring
+        averages HBM burstiness (the ``dma_cv`` jitter term) over more
+        in-flight transfers; its cost is VMEM footprint (compute still
+        blocks only on tile 0's fill — the extra slots prime in the
+        background), so depth trades against the tile sizes that still
+        fit the budget.
+      * single-buffered (``slots=1``) — copy -> wait -> compute
+        serialization (the "bank conflict" analogue: producer and
+        consumer contend).
       * ``grid`` vs ``host`` loop — ZONL analogue: grid steps cost zero
         control; a host-driven tile loop pays dispatch per step.
+
+    This model is the default cost oracle of :mod:`repro.tune`, which
+    searches (bm, bn, bk, slots, grid order) per problem shape under
+    the ``vmem_footprint`` budget and feeds the winner back into the
+    Pallas kernels via ``ops.matmul(..., tiling="auto")``.
     """
 
     def __init__(self, params: TpuParams | None = None):
@@ -372,8 +384,26 @@ class TpuPipelineModel:
         dtype_bytes: int = 2,
         double_buffered: bool = True,
         grid_loop: bool = True,
+        slots: int | None = None,
+        dma_cv: float = 0.0,
         name: str = "matmul",
     ) -> TpuKernelEstimate:
+        """Estimate one tiled matmul.
+
+        ``slots`` overrides ``double_buffered`` when given (1 =
+        serialized, >= 2 = revolving buffer of that depth).  ``dma_cv``
+        is the coefficient of variation of per-tile HBM latency; it is
+        charged to every configuration — a serialized pipeline exposes
+        the full ``dma_cv * t_dma`` per step, while a depth-N ring
+        averages it to ``dma_cv * t_dma / N`` (hyperbank-parity
+        argument at arbitrary depth).  That slope versus the VMEM bill
+        (deeper rings crowd out bigger tiles) is what makes buffer
+        depth a non-trivial axis for :mod:`repro.tune`.
+        """
+        if slots is None:
+            slots = 2 if double_buffered else 1
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
         gm, gn, gk = map(math.ceil, (M / bm, N / bn, K / bk))
         steps = gm * gn * gk
         # per-step tile traffic: A tile + B tile; C written once per (m,n)
@@ -384,12 +414,23 @@ class TpuPipelineModel:
         t_comp_step = (2 * bm * bn * bk) / self.p.peak_flops
         oh = self.p.grid_step_overhead_s if grid_loop else self.p.host_step_overhead_s
 
-        if double_buffered:
-            # prologue: first tile DMA; steady state: max(comp, dma)
-            body = steps * (max(t_comp_step, t_dma_step) + oh)
-            total = t_dma_step + body + gm * gn * t_dma_c
+        if slots >= 2:
+            # pipeline: compute blocks on tile 0's fill (deeper slots
+            # prime in the background, overlapped with early steps),
+            # then steps-1 overlapped steps of max(comp, dma) plus the
+            # residual jitter a depth-N ring cannot hide, then the last
+            # tile's compute drains.  Depth's cost is VMEM, not time —
+            # the tuner's trade-off is slots vs the tile sizes that
+            # still fit the budget.
+            jitter = dma_cv * t_dma_step / slots
+            total = (t_dma_step * (1.0 + dma_cv)
+                     + (steps - 1) * (max(t_comp_step, t_dma_step) + jitter)
+                     + t_comp_step + steps * oh
+                     + gm * gn * t_dma_c)
         else:
-            total = steps * (t_comp_step + t_dma_step + oh) + gm * gn * t_dma_c
+            # serialized: full jitter exposure on every transfer
+            total = (steps * (t_comp_step + t_dma_step * (1.0 + dma_cv) + oh)
+                     + gm * gn * t_dma_c)
 
         flops = 2.0 * M * N * K
         bytes_moved = steps * a_b + gm * gn * c_b

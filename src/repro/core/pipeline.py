@@ -1,14 +1,25 @@
-"""Dobu revolving-buffer schedule.
+"""Dobu revolving-buffer schedules.
 
 The paper's zero-conflict memory subsystem works because double
 buffering statically separates producer (DMA) and consumer (cores)
 into different hyperbanks.  The TPU-native analogue is an N-slot
 revolving VMEM buffer: while compute consumes slot ``t % N``, the DMA
-engine fills slot ``(t+1) % N``.  This module is the single source of
-truth for that schedule — the Pallas kernels, the cycle model, and the
-property tests all derive slot assignments from here, so the invariant
-("producer and consumer never touch the same slot in the same step")
-is checked once and holds everywhere.
+engine fills a slot no in-flight step touches.  This module is the
+single source of truth for those schedules — the Pallas kernels, the
+cycle model, and the property tests all derive slot assignments from
+here, so the invariant ("producer and consumer never touch the same
+slot in the same step") is checked once and holds everywhere.
+
+Two schedules live here:
+
+* :class:`DobuSchedule` — the paper's exact 2(+)-slot scheme with a
+  single outstanding prefetch (step t fetches step t+1).
+* :class:`RevolvingSchedule` — the depth-N generalization the kernels
+  implement since the N-slot refactor: a prologue fills every slot,
+  then step t (t >= 1) prefetches step ``t + N - 1`` into slot
+  ``(t-1) % N`` — the slot drained one step earlier.  ``slots=1``
+  degenerates to the serialized ("single"/conflicted) baseline.
+  :mod:`repro.tune` searches over N.
 """
 
 from __future__ import annotations
@@ -16,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
-__all__ = ["DobuSchedule", "Phase"]
+__all__ = ["DobuSchedule", "RevolvingSchedule", "Phase"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,5 +68,76 @@ class DobuSchedule:
         """The Dobu invariant (what the hyperbanks guarantee in silicon)."""
         return all(
             ph.prefetch_slot is None or ph.prefetch_slot != ph.compute_slot
+            for ph in self.phases()
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RevolvingSchedule:
+    """Depth-N revolving-buffer schedule (the N-slot kernels' contract).
+
+    Mirrors ``zero_stall_matmul``/``grouped_zero_stall_matmul``:
+
+      * step 0 issues DMAs for steps ``0 .. min(slots, steps)-1``
+        (prologue — every slot primed);
+      * step t >= 1 issues the DMA for step ``t + slots - 1`` into slot
+        ``(t + slots - 1) % slots == (t - 1) % slots``;
+      * step t computes from slot ``t % slots``.
+
+    ``slots=1`` is the serialized baseline: the "prefetch" for step
+    t+1 reuses the only slot and must wait for step t's compute —
+    modeled here as a prefetch into the compute slot (a conflict, by
+    design: that is the Base32fc analogue).
+    """
+
+    steps: int
+    slots: int = 2
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("revolving buffer needs >= 1 slot")
+        if self.steps < 1:
+            raise ValueError("steps must be >= 1")
+
+    def slot_of(self, step: int) -> int:
+        return step % self.slots
+
+    def prologue_steps(self) -> list[int]:
+        """Steps whose DMAs are issued before any compute."""
+        return list(range(min(self.slots, self.steps)))
+
+    def phases(self) -> Iterator[Phase]:
+        look = self.slots - 1 if self.slots > 1 else 1
+        for t in range(self.steps):
+            if t == 0 and self.slots > 1:
+                nxt = None          # prologue already primed every slot
+            else:
+                nxt = t + look if t + look < self.steps else None
+            yield Phase(
+                step=t,
+                compute_slot=self.slot_of(t),
+                prefetch_step=nxt,
+                prefetch_slot=None if nxt is None else self.slot_of(nxt),
+            )
+
+    def live_slots(self, t: int) -> set[int]:
+        """Slots still holding un-consumed operands when step t issues
+        its prefetch: this step's own slot plus the slots primed for
+        steps ``t+1 .. t+slots-2`` by earlier issue phases (clipped)."""
+        hi = min(t + self.slots - 1, self.steps) if self.slots > 1 else t + 1
+        return {self.slot_of(s) for s in range(t, hi)}
+
+    def conflict_free(self) -> bool:
+        """Depth-N Dobu invariant: no prefetch lands in a live slot.
+
+        "Live" at step t = the compute slot plus every already-primed,
+        not-yet-consumed step (the prefetch's own target step is not
+        yet primed, so it is not in the set).  True for all
+        ``slots >= 2``; False for ``slots == 1`` (the serialized
+        baseline *is* the conflict).
+        """
+        return all(
+            ph.prefetch_slot is None
+            or ph.prefetch_slot not in self.live_slots(ph.step)
             for ph in self.phases()
         )

@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-zero_stall_matmul — the paper's technique (dobu 2-slot VMEM revolving
+zero_stall_matmul — the paper's technique (dobu N-slot VMEM revolving
 buffer + grid loop nest); grouped_matmul — same machinery for MoE
 experts; flash_attention — blocked online-softmax attention.  Each has
 a pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py.
+Execution configuration (tile sizes, buffer depth, grid order) is
+searched per problem shape by :mod:`repro.tune` — pass
+``tiling="auto"`` to the ops wrappers.
 """
 
 from repro.kernels import ops, ref

@@ -1,0 +1,12 @@
+"""Version shims for jax.experimental.pallas.tpu.
+
+Import side-effect-free; kernel modules import from here so each jax
+rename is absorbed in exactly one place.
+"""
+
+import jax.experimental.pallas.tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

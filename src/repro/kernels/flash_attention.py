@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["flash_attention"]
 
 NEG_INF = -1e30
@@ -114,7 +116,7 @@ def flash_attention(
             pltpu.VMEM((bq, 1), jnp.float32),    # running denom
             pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
         name="flash_attention",

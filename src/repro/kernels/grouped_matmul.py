@@ -3,12 +3,17 @@
 Per-expert FFN matmuls (x_g @ W_g for every expert g) are the dominant
 compute of the assigned MoE architectures (granite-moe 32e, olmoe 64e).
 The kernel extends :mod:`zero_stall_matmul`'s dobu pipeline with a
-leading group dimension: the revolving 2-slot VMEM buffer ("hyperbank"
-parity) streams *across expert boundaries*, so the MXU never waits for
-an expert switch — expert g+1's first tiles are DMA'd while expert g's
-last tiles are multiplied.  This is exactly the paper's zero-conflict
-double-buffering, applied where a specialized accelerator could not
-reach (dynamic expert dispatch).
+leading group dimension: the revolving N-slot VMEM buffer ("hyperbank"
+parity at arbitrary depth) streams *across expert boundaries*, so the
+MXU never waits for an expert switch — expert g+1's first tiles are
+DMA'd while expert g's last tiles are multiplied.  This is exactly the
+paper's zero-conflict double-buffering, applied where a specialized
+accelerator could not reach (dynamic expert dispatch).
+
+Buffer depth (``slots``) is a search axis of :mod:`repro.tune`; the
+schedule is the same generalized revolving buffer as
+``zero_stall_matmul`` (prologue fills every slot, steady state
+prefetches step t+slots-1 into the slot drained at step t-1).
 """
 
 from __future__ import annotations
@@ -21,31 +26,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.zero_stall_matmul import resolve_slots
+
 __all__ = ["grouped_zero_stall_matmul"]
 
 
-def _next_gijk(g, i, j, k, gg, gm, gn, gk):
-    k_n = k + 1
-    roll_k = k_n == gk
-    j_n = jnp.where(roll_k, j + 1, j)
-    k_n = jnp.where(roll_k, 0, k_n)
-    roll_j = j_n == gn
-    i_n = jnp.where(roll_j, i + 1, i)
-    j_n = jnp.where(roll_j, 0, j_n)
-    roll_i = i_n == gm
-    g_n = jnp.where(roll_i, g + 1, g)
-    i_n = jnp.where(roll_i, 0, i_n)
-    return g_n, i_n, j_n, k_n
-
-
 def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
-            bm, bn, bk, slots, out_dtype):
+            bm, bn, bk, slots, out_dtype,
+            grid_shape: tuple[int, int, int, int]):
     g, i, j, k = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
                   pl.program_id(3))
-    gg, gm, gn, gk = (pl.num_programs(0), pl.num_programs(1),
-                      pl.num_programs(2), pl.num_programs(3))
-    t = ((g * gm + i) * gn + j) * gk + k
+    gg, gm, gn, gk = grid_shape       # static (wrapper-provided)
     total = gg * gm * gn * gk
+    t = ((g * gm + i) * gn + j) * gk + k
+
+    def gijk_of(tt):
+        """(g, i, j, k) of linear step `tt` (k fastest)."""
+        return (tt // (gm * gn * gk), (tt // (gn * gk)) % gm,
+                (tt // gk) % gn, tt % gk)
 
     def tile_copy(ggi, ii, jj, kk, slot):
         cp_a = pltpu.make_async_copy(
@@ -58,17 +57,22 @@ def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
 
     slot = jax.lax.rem(t, slots)
 
+    # prologue: first step fills every slot (steps 0..slots-1)
     @pl.when(t == 0)
     def _():
-        for cp in tile_copy(g, i, j, k, slot):
-            cp.start()
+        for s in range(min(slots, total)):
+            g_s, i_s, j_s, k_s = gijk_of(jnp.int32(s))
+            for cp in tile_copy(g_s, i_s, j_s, k_s, s):
+                cp.start()
 
+    # revolving prefetch: fill the slot step t+slots-1 will consume
     if slots > 1:
-        @pl.when(t + 1 < total)
+        look = slots - 1
+        @pl.when(jnp.logical_and(t > 0, t + look < total))
         def _():
-            nxt = jax.lax.rem(t + 1, slots)
-            g_n, i_n, j_n, k_n = _next_gijk(g, i, j, k, gg, gm, gn, gk)
-            for cp in tile_copy(g_n, i_n, j_n, k_n, nxt):
+            t_n = t + look
+            g_n, i_n, j_n, k_n = gijk_of(t_n)
+            for cp in tile_copy(g_n, i_n, j_n, k_n, jax.lax.rem(t_n, slots)):
                 cp.start()
 
     for cp in tile_copy(g, i, j, k, slot):
@@ -92,14 +96,15 @@ def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
     if slots == 1:
         @pl.when(t + 1 < total)
         def _():
-            g_n, i_n, j_n, k_n = _next_gijk(g, i, j, k, gg, gm, gn, gk)
+            g_n, i_n, j_n, k_n = gijk_of(t + 1)
             for cp in tile_copy(g_n, i_n, j_n, k_n, slot):
                 cp.start()
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "variant", "interpret", "out_dtype"))
+    static_argnames=("bm", "bn", "bk", "variant", "slots", "interpret",
+                     "out_dtype"))
 def grouped_zero_stall_matmul(
     a: jax.Array,                 # (G, M, K)
     b: jax.Array,                 # (G, K, N)
@@ -108,6 +113,7 @@ def grouped_zero_stall_matmul(
     bn: int = 128,
     bk: int = 128,
     variant: Literal["dobu", "single"] = "dobu",
+    slots: int | None = None,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
@@ -117,11 +123,12 @@ def grouped_zero_stall_matmul(
     if M % bm or N % bn or K % bk:
         raise ValueError(f"{(M, K, N)} not multiples of {(bm, bk, bn)}")
     out_dtype = out_dtype or a.dtype
-    slots = 2 if variant == "dobu" else 1
+    slots = resolve_slots(variant, slots)
     gm, gn, gk = M // bm, N // bn, K // bk
 
     kernel = functools.partial(
-        _kernel, bm=bm, bn=bn, bk=bk, slots=slots, out_dtype=out_dtype)
+        _kernel, bm=bm, bn=bn, bk=bk, slots=slots, out_dtype=out_dtype,
+        grid_shape=(G, gm, gn, gk))
 
     return pl.pallas_call(
         kernel,
@@ -137,8 +144,8 @@ def grouped_zero_stall_matmul(
             pltpu.SemaphoreType.DMA((slots,)),
             pltpu.SemaphoreType.DMA((slots,)),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",) * 4),
         interpret=interpret,
-        name=f"grouped_zero_stall_matmul_{variant}",
+        name=f"grouped_zero_stall_matmul_s{slots}",
     )(a, b)

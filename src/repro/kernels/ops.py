@@ -1,4 +1,4 @@
-"""Public jit'd kernel wrappers with backend dispatch and padding.
+"""Public jit'd kernel wrappers with backend dispatch, padding, tuning.
 
 Model code calls these entry points; they route to
 
@@ -10,6 +10,17 @@ Model code calls these entry points; they route to
 
 ``impl="auto"`` picks pallas on TPU and jnp elsewhere, so the same
 model code runs in tests, the dry-run and on real hardware.
+
+Execution configuration (``tiling``):
+
+  * ``tiling=None``     — the explicit ``bm/bn/bk/variant/slots``
+    keyword arguments (historical behavior, default 128³ dobu).
+  * ``tiling=(bm, bn, bk)`` — explicit tile triple.
+  * ``tiling="auto"``   — resolve (bm, bn, bk, slots, grid order)
+    through :mod:`repro.tune`: analytic-model search over the legal
+    configuration space, memoized in a persistent cache.  The tuned
+    path returns bit-identical results (tiling only changes the
+    execution schedule, never the math — padding contributes zeros).
 
 Arbitrary shapes are zero-padded up to tile multiples before the
 kernel and sliced back after — padding contributes zeros to the
@@ -47,17 +58,42 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
     return x
 
 
+def _resolve_tiling(tiling, op, M, N, K, dtype, impl, *, groups=1,
+                    bm=128, bn=128, bk=128, variant="dobu", slots=None,
+                    grid_order="ijk"):
+    """(bm, bn, bk, variant, slots, grid_order) after `tiling` dispatch."""
+    if tiling is None:
+        return bm, bn, bk, variant, slots, grid_order
+    if tiling == "auto":
+        from repro import tune
+        c = tune.best_config(op, M, N, K, dtype=dtype, backend=impl,
+                             groups=groups)
+        return c.bm, c.bn, c.bk, c.variant, c.slots, c.grid_order
+    if isinstance(tiling, (tuple, list)) and len(tiling) == 3:
+        tm, tn, tk = map(int, tiling)
+        return tm, tn, tk, variant, slots, grid_order
+    raise ValueError(f"tiling must be None, 'auto' or a (bm, bn, bk) "
+                     f"triple, got {tiling!r}")
+
+
 def matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
            bm: int = 128, bn: int = 128, bk: int = 128,
-           variant: str = "dobu", out_dtype=None) -> jax.Array:
+           variant: str = "dobu", slots: int | None = None,
+           grid_order: str = "ijk", tiling=None,
+           out_dtype=None) -> jax.Array:
     """C = A @ B through the zero-stall engine."""
     impl = resolve_impl(impl)
     if impl == "jnp":
         return _ref.matmul_ref(a, b, out_dtype)
     M, N = a.shape[0], b.shape[1]
+    bm, bn, bk, variant, slots, grid_order = _resolve_tiling(
+        tiling, "matmul", M, N, a.shape[1], a.dtype, impl,
+        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
+        grid_order=grid_order)
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
     c = zero_stall_matmul(ap, bp, bm=bm, bn=bn, bk=bk, variant=variant,
+                          slots=slots, grid_order=grid_order,
                           interpret=(impl == "interpret"),
                           out_dtype=out_dtype)
     return c[:M, :N]
@@ -65,17 +101,21 @@ def matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
 
 def grouped_matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
                    bm: int = 128, bn: int = 128, bk: int = 128,
-                   variant: str = "dobu", out_dtype=None) -> jax.Array:
+                   variant: str = "dobu", slots: int | None = None,
+                   tiling=None, out_dtype=None) -> jax.Array:
     """(G,M,K) @ (G,K,N) -> (G,M,N) per-expert matmul."""
     impl = resolve_impl(impl)
     if impl == "jnp":
         return _ref.grouped_matmul_ref(a, b, out_dtype)
     G, M, _ = a.shape
     N = b.shape[2]
+    bm, bn, bk, variant, slots, _ = _resolve_tiling(
+        tiling, "grouped_matmul", M, N, a.shape[2], a.dtype, impl,
+        groups=G, bm=bm, bn=bn, bk=bk, variant=variant, slots=slots)
     ap = _pad_to(a, (1, bm, bk))
     bp = _pad_to(b, (1, bk, bn))
     c = grouped_zero_stall_matmul(ap, bp, bm=bm, bn=bn, bk=bk,
-                                  variant=variant,
+                                  variant=variant, slots=slots,
                                   interpret=(impl == "interpret"),
                                   out_dtype=out_dtype)
     return c[:, :M, :N]
@@ -83,13 +123,23 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               impl: str = "auto", causal: bool = True,
-              bq: int = 128, bkv: int = 128,
+              bq: int = 128, bkv: int = 128, tiling=None,
               scale: float | None = None) -> jax.Array:
     """(B,H,S,D) flash attention; ref oracle for jnp path."""
     impl = resolve_impl(impl)
     if impl == "jnp":
         return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
     Sq, Skv = q.shape[2], k.shape[2]
+    if tiling == "auto":
+        from repro import tune
+        bq, bkv = tune.best_attention_config(
+            Sq, Skv, q.shape[3], dtype=q.dtype, backend=impl,
+            batch_heads=q.shape[0] * q.shape[1])
+    elif isinstance(tiling, (tuple, list)) and len(tiling) == 2:
+        bq, bkv = map(int, tiling)
+    elif tiling is not None:
+        raise ValueError(f"attention tiling must be None, 'auto' or "
+                         f"(bq, bkv), got {tiling!r}")
     bq_ = min(bq, Sq)
     bkv_ = min(bkv, Skv)
     if Sq % bq_ or Skv % bkv_:

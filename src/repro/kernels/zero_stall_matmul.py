@@ -10,23 +10,33 @@ Mapping of the paper's two mechanisms (DESIGN.md §2):
   per tile — lives in ``ops.host_tiled_matmul``.)
 
 * **Zero-conflict (Dobu) memory subsystem** → operands stay in HBM
-  (`memory_space=ANY`) and are explicitly DMA'd into a **2-slot VMEM
+  (`memory_space=ANY`) and are explicitly DMA'd into an **N-slot VMEM
   revolving buffer** (`pltpu.make_async_copy` + DMA semaphores).  While
-  the MXU consumes slot ``t % 2``, the DMA engine fills slot
-  ``(t+1) % 2`` — the slot parity IS the hyperbank parity: producer and
-  consumer are structurally separated, so they never contend.  The
-  ``single``-buffered variant (copy → wait → compute serialization) is
-  the "conflicted" baseline (Base32fc analogue).
+  the MXU consumes slot ``t % N``, the DMA engine fills the slot that
+  step ``t + N - 1`` will consume — the slot residue IS the hyperbank
+  parity, generalized to arbitrary depth: producer and consumer are
+  structurally separated, so they never contend.  ``slots=2`` is the
+  paper's exact 2-hyperbank scheme; ``slots>2`` keeps more DMAs in
+  flight (tolerates HBM latency jitter at the price of VMEM).  The
+  ``slots=1`` (``single``) variant — copy → wait → compute
+  serialization — is the "conflicted" baseline (Base32fc analogue).
 
-The schedule follows :class:`repro.core.pipeline.DobuSchedule`; grid
-step ``t`` (linearized over (i, j, k), k fastest):
+Buffer depth is a first-class search axis of :mod:`repro.tune`, which
+picks ``(bm, bn, bk, slots, grid_order)`` per problem shape under the
+VMEM budget.
 
-    t == 0:        start DMA(step 0 → slot 0)
-    t + 1 < T:     start DMA(step t+1 → slot (t+1) % 2)
-    wait  DMA(slot t % 2)
-    k == 0:        acc  = A·B          (paper: peeled fmul iteration)
-    else:          acc += A·B
-    k == gk-1:     C_tile = acc        (paper: writeback-SSR fmadd)
+The N-slot schedule; grid step ``t`` (linearized, k fastest):
+
+    t == 0:            start DMA(step s → slot s) for s < slots
+    t > 0, t+slots-1 < T:  start DMA(step t+slots-1 → slot (t+slots-1) % N)
+    wait  DMA(slot t % N)
+    k == 0:            acc  = A·B          (paper: peeled fmul iteration)
+    else:              acc += A·B
+    k == gk-1:         C_tile = acc        (paper: writeback-SSR fmadd)
+
+Slot ``(t+slots-1) % N == (t-1) % N`` was consumed at step ``t-1``, so
+the prefetch never lands in a live slot (the Dobu invariant, checked by
+:class:`repro.core.pipeline.RevolvingSchedule`).
 
 All grid dimensions are declared "arbitrary" (sequential) because the
 cross-step prefetch carries state between steps — the same reason the
@@ -43,30 +53,48 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["zero_stall_matmul", "DEFAULT_TILES"]
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+__all__ = ["zero_stall_matmul", "DEFAULT_TILES", "resolve_slots"]
 
 DEFAULT_TILES = (128, 128, 128)  # MXU-aligned (multiples of 128)
 
 
-def _next_ijk(i, j, k, gm, gn, gk):
-    """Grid indices of the next linear step (row-major, k fastest)."""
-    k_n = k + 1
-    roll_k = k_n == gk
-    j_n = jnp.where(roll_k, j + 1, j)
-    k_n = jnp.where(roll_k, 0, k_n)
-    roll_j = j_n == gn
-    i_n = jnp.where(roll_j, i + 1, i)
-    j_n = jnp.where(roll_j, 0, j_n)
-    return i_n, j_n, k_n
+def resolve_slots(variant: str, slots: int | None) -> int:
+    """Buffer depth from the (variant, slots) pair; slots wins if given.
+
+    ``variant`` is the paper's two-point vocabulary ("dobu" = 2-slot
+    revolving buffer, "single" = serialized); ``slots`` generalizes it.
+    Contradictory combinations are rejected rather than guessed.
+    """
+    if slots is None:
+        return 2 if variant == "dobu" else 1
+    if slots < 1:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    if variant == "single" and slots != 1:
+        raise ValueError(f"variant='single' means slots=1, got slots={slots}")
+    if variant == "dobu" and slots < 2:
+        raise ValueError("variant='dobu' needs slots >= 2 "
+                         "(use variant='single' for the serialized baseline)")
+    return slots
 
 
 def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
-            bm: int, bn: int, bk: int, slots: int, out_dtype):
+            bm: int, bn: int, bk: int, slots: int, out_dtype,
+            grid_shape: tuple[int, int, int], order: str):
     """Kernel body; a_vmem/b_vmem have a leading `slots` dimension."""
-    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
-    gm, gn, gk = pl.num_programs(0), pl.num_programs(1), pl.num_programs(2)
-    t = (i * gn + j) * gk + k
-    total = gm * gn * gk
+    p0, p1, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    g0, g1, gk = grid_shape          # static (wrapper-provided)
+    total = g0 * g1 * gk
+    i, j = (p0, p1) if order == "ijk" else (p1, p0)
+    t = (p0 * g1 + p1) * gk + k
+
+    def ijk_of(tt):
+        """(i, j, k) of linear step `tt` under this grid order."""
+        q0 = tt // (g1 * gk)
+        q1 = (tt // gk) % g1
+        kk = tt % gk
+        return ((q0, q1, kk) if order == "ijk" else (q1, q0, kk))
 
     def tile_copy(ii, jj, kk, slot):
         """DMA descriptors for step (ii,jj,kk) into `slot`."""
@@ -80,20 +108,25 @@ def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
 
     slot = jax.lax.rem(t, slots)
 
-    # --- prologue: the very first step issues its own DMA -------------
+    # --- prologue: first step fills every slot (steps 0..slots-1) -----
     @pl.when(t == 0)
     def _():
-        cp_a, cp_b = tile_copy(i, j, k, slot)
-        cp_a.start()
-        cp_b.start()
+        for s in range(min(slots, total)):
+            i_s, j_s, k_s = ijk_of(jnp.int32(s))
+            cp_a, cp_b = tile_copy(i_s, j_s, k_s, s)
+            cp_a.start()
+            cp_b.start()
 
-    # --- dobu prefetch: fill the *other* slot for step t+1 ------------
+    # --- revolving prefetch: fill the slot step t+slots-1 will use ----
+    # That slot, (t-1) % slots, was drained at step t-1 — the Dobu
+    # hyperbank invariant at depth N (RevolvingSchedule.conflict_free).
     if slots > 1:
-        @pl.when(t + 1 < total)
+        look = slots - 1
+        @pl.when(jnp.logical_and(t > 0, t + look < total))
         def _():
-            i_n, j_n, k_n = _next_ijk(i, j, k, gm, gn, gk)
-            nxt = jax.lax.rem(t + 1, slots)
-            cp_a, cp_b = tile_copy(i_n, j_n, k_n, nxt)
+            t_n = t + look
+            i_n, j_n, k_n = ijk_of(t_n)
+            cp_a, cp_b = tile_copy(i_n, j_n, k_n, jax.lax.rem(t_n, slots))
             cp_a.start()
             cp_b.start()
 
@@ -124,7 +157,7 @@ def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
     if slots == 1:
         @pl.when(t + 1 < total)
         def _():
-            i_n, j_n, k_n = _next_ijk(i, j, k, gm, gn, gk)
+            i_n, j_n, k_n = ijk_of(t + 1)
             cp_a, cp_b = tile_copy(i_n, j_n, k_n, slot)
             cp_a.start()
             cp_b.start()
@@ -132,7 +165,8 @@ def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "variant", "interpret", "out_dtype"))
+    static_argnames=("bm", "bn", "bk", "variant", "slots", "grid_order",
+                     "interpret", "out_dtype"))
 def zero_stall_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -141,6 +175,8 @@ def zero_stall_matmul(
     bn: int = DEFAULT_TILES[1],
     bk: int = DEFAULT_TILES[2],
     variant: Literal["dobu", "single"] = "dobu",
+    slots: int | None = None,
+    grid_order: Literal["ijk", "jik"] = "ijk",
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
@@ -148,27 +184,38 @@ def zero_stall_matmul(
 
     A: (M, K), B: (K, N); M, N, K must be multiples of the tile sizes
     (``ops.matmul`` pads arbitrary shapes before calling this).
+
+    ``slots`` sets the revolving-buffer depth (None → 2 for "dobu",
+    1 for "single"); ``grid_order`` picks which output dimension the
+    outermost grid loop walks ("ijk" = rows outer, "jik" = cols outer —
+    k stays fastest in both, as the accumulator requires).
     """
     (M, K), (K2, N) = a.shape, b.shape
     if K != K2:
         raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
     if M % bm or N % bn or K % bk:
         raise ValueError(f"shapes {(M, K, N)} not multiples of tiles {(bm, bk, bn)}")
+    if grid_order not in ("ijk", "jik"):
+        raise ValueError(f"grid_order must be 'ijk' or 'jik', got {grid_order!r}")
     out_dtype = out_dtype or a.dtype
-    slots = 2 if variant == "dobu" else 1
+    slots = resolve_slots(variant, slots)
     gm, gn, gk = M // bm, N // bn, K // bk
+    grid = (gm, gn, gk) if grid_order == "ijk" else (gn, gm, gk)
+    out_map = ((lambda i, j, k: (i, j)) if grid_order == "ijk"
+               else (lambda j, i, k: (i, j)))
 
     kernel = functools.partial(
-        _kernel, bm=bm, bn=bn, bk=bk, slots=slots, out_dtype=out_dtype)
+        _kernel, bm=bm, bn=bn, bk=bk, slots=slots, out_dtype=out_dtype,
+        grid_shape=grid, order=grid_order)
 
     return pl.pallas_call(
         kernel,
-        grid=(gm, gn, gk),
+        grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),   # A stays in HBM
             pl.BlockSpec(memory_space=pl.ANY),   # B stays in HBM
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), out_map),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[
             pltpu.VMEM((slots, bm, bk), a.dtype),   # "hyperbank" slots for A
@@ -177,9 +224,9 @@ def zero_stall_matmul(
             pltpu.SemaphoreType.DMA((slots,)),
             pltpu.SemaphoreType.DMA((slots,)),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-        name=f"zero_stall_matmul_{variant}",
+        name=f"zero_stall_matmul_s{slots}_{grid_order}",
     )(a, b)

@@ -64,7 +64,8 @@ def _cross_attention(p: Params, x, enc_k, enc_v, cfg: ModelConfig,
     hd = cfg.resolved_head_dim
     q = L.linear(p["wq"], x, ctx).reshape(B, S, cfg.n_heads, hd)
     o = L._gqa_full(q, enc_k, enc_v, causal=False,
-                    impl=L.ops.resolve_impl(ctx.impl), ctx=ctx)
+                    impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
+                    tiling=L.attn_tiling(ctx))
     return L.linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd), ctx)
 
 

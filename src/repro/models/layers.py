@@ -29,6 +29,9 @@ class Ctx:
     decode: bool = False
     mesh: Any = None              # when set, activation sharding constraints
                                   # (sequence parallelism) are applied
+    tiling: Any = "auto"          # kernel config: "auto" (repro.tune) |
+                                  # None (hardcoded 128³) | explicit triple;
+                                  # ignored on the jnp path
 
 
 def shard_seq(x: jax.Array, ctx: "Ctx") -> jax.Array:
@@ -74,7 +77,29 @@ def shard_act(x: jax.Array, ctx: "Ctx") -> jax.Array:
     # fp32 upcast of the *whole* (layers, B, S, d) saved-residual stack
     # out of the backward loop (measured: +16.5 GiB/device on
     # mistral-large-123b).  The barrier keeps per-layer slices inside.
-    return jax.lax.optimization_barrier(y)
+    return _opt_barrier(y)
+
+
+@jax.custom_vjp
+def _opt_barrier(x: jax.Array) -> jax.Array:
+    """optimization_barrier with reverse-mode AD on any jax version.
+
+    jax < 0.5 has no differentiation rule for the primitive; this vjp
+    mirrors the upstream rule (barrier the cotangent too, so the
+    backward pass gets the same hoisting protection).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
 
 
 # ----------------------------------------------------------------------
@@ -99,7 +124,8 @@ def linear(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
     w = p["w"].astype(ctx.dtype)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = ops.matmul(x2, w, impl=ctx.impl, out_dtype=ctx.dtype)
+    y = ops.matmul(x2, w, impl=ctx.impl, tiling=ctx.tiling,
+                   out_dtype=ctx.dtype)
     y = y.reshape(*lead, w.shape[-1])
     if "b" in p:
         y = y + p["b"].astype(ctx.dtype)
@@ -211,8 +237,15 @@ def _seq_shard4(t: jax.Array, ctx: "Ctx | None") -> jax.Array:
         t, NamedSharding(ctx.mesh, P(b_ax, "model", None, None)))
 
 
+def attn_tiling(ctx: "Ctx") -> "str | None":
+    """Ctx.tiling projected onto attention: matmul-shaped (bm, bn, bk)
+    triples don't apply to attention's (bq, bkv) tiles; None and
+    "auto" pass through so a Ctx-level opt-out is honored everywhere."""
+    return ctx.tiling if ctx.tiling in (None, "auto") else None
+
+
 def _gqa_full(q, k, v, *, causal: bool, impl: str,
-              ctx: "Ctx | None" = None) -> jax.Array:
+              ctx: "Ctx | None" = None, tiling="auto") -> jax.Array:
     """q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D).
 
     Under a mesh, KV heads are repeated up to H ("merged-head" form) so
@@ -232,7 +265,7 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
         kr = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
         vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
         o = ops.attention(q.transpose(0, 2, 1, 3), kr, vr,
-                          impl=impl, causal=causal)
+                          impl=impl, causal=causal, tiling=tiling)
         return o.transpose(0, 2, 1, 3)
     # merged-head path (callers gate via _merged_head_plan):
     if ctx is not None and ctx.mesh is not None:
@@ -421,7 +454,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     if n_pad is not None:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, n_pad), (0, 0)))
     o = _gqa_full(q, k, v, causal=causal, impl=ops.resolve_impl(ctx.impl),
-                  ctx=ctx if n_pad is not None else None)
+                  ctx=ctx if n_pad is not None else None,
+                  tiling=attn_tiling(ctx))
     if n_pad:
         o = o[:, :, :cfg.n_heads]
     return linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd), ctx)

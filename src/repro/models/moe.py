@@ -120,16 +120,19 @@ def moe_mlp(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx,
     # expert FFN via the grouped zero-stall engine
     wi = p["wi"].astype(ctx.dtype)
     wo = p["wo"].astype(ctx.dtype)
-    h = ops.grouped_matmul(buf, wi, impl=ctx.impl, out_dtype=ctx.dtype)
+    h = ops.grouped_matmul(buf, wi, impl=ctx.impl, tiling=ctx.tiling,
+                           out_dtype=ctx.dtype)
     h = _ep_constraint(h, ctx, ("model", None, None))
     if "wg" in p:
         g = ops.grouped_matmul(buf, p["wg"].astype(ctx.dtype),
-                               impl=ctx.impl, out_dtype=ctx.dtype)
+                               impl=ctx.impl, tiling=ctx.tiling,
+                               out_dtype=ctx.dtype)
         act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
         h = act(g) * h
     else:
         h = jax.nn.gelu(h)
-    y = ops.grouped_matmul(h, wo, impl=ctx.impl, out_dtype=ctx.dtype)
+    y = ops.grouped_matmul(h, wo, impl=ctx.impl, tiling=ctx.tiling,
+                           out_dtype=ctx.dtype)
     y = _ep_constraint(y, ctx, ("model", None, None))
 
     # combine: out[tok] += gate * y[expert, rank]

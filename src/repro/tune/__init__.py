@@ -1,0 +1,171 @@
+"""Model-guided kernel autotuning (`repro.tune`).
+
+Closes the loop between the analytic performance models
+(:class:`repro.core.cyclemodel.TpuPipelineModel`, the roofline
+machinery) and the Pallas zero-stall kernels: instead of the
+historical hardcoded ``bm=bn=bk=128, slots=2``, every kernel entry
+point can ask this package for the best legal configuration of its
+problem shape.
+
+    from repro import tune
+    cand = tune.best_config("matmul", M, N, K,
+                            dtype=jnp.bfloat16, backend="pallas")
+    # -> Candidate(bm, bn, bk, slots, grid_order)
+
+or, one level up, simply ``ops.matmul(a, b, tiling="auto")``.
+
+Pieces (each its own module):
+
+* :mod:`repro.tune.space`  — `KernelSpace`: legal (bm, bn, bk, slots,
+  grid_order) candidates under MXU alignment + VMEM budget.
+* :mod:`repro.tune.oracle` — pluggable cost oracles: `AnalyticOracle`
+  (TpuPipelineModel; default, hardware-free) and `MeasuredOracle`
+  (wall-clock on real TPUs).
+* :mod:`repro.tune.search` — exhaustive / hill-climbing drivers.
+* :mod:`repro.tune.cache`  — persistent JSON memo keyed by
+  (op, shape-bucket, dtype, backend); ``$REPRO_TUNE_CACHE`` overrides
+  the location.
+
+Results are deterministic given (space, oracle, problem) and cached
+persistently, so the search runs once per (op, shape-bucket, dtype,
+backend) per machine.
+"""
+
+from __future__ import annotations
+
+from repro.tune.cache import TuneCache, default_cache_path, shape_bucket
+from repro.tune.oracle import AnalyticOracle, CostOracle, MeasuredOracle
+from repro.tune.search import SearchResult, exhaustive_search, hill_climb, search
+from repro.tune.space import (Candidate, DEFAULT_SPACE, INTERPRET_SPACE,
+                              KernelSpace, Problem)
+
+__all__ = [
+    "Candidate", "Problem", "KernelSpace", "DEFAULT_SPACE", "INTERPRET_SPACE",
+    "CostOracle", "AnalyticOracle", "MeasuredOracle",
+    "SearchResult", "search", "exhaustive_search", "hill_climb",
+    "TuneCache", "default_cache_path", "shape_bucket",
+    "best_config", "best_attention_config", "autotune",
+    "get_cache", "set_cache",
+]
+
+_CACHE: TuneCache | None = None
+
+
+def get_cache() -> TuneCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = TuneCache()
+    return _CACHE
+
+
+def set_cache(cache: TuneCache | None) -> None:
+    """Swap the process-wide cache (tests point it at a tmp path)."""
+    global _CACHE
+    _CACHE = cache
+
+
+def _dtype_info(dtype) -> tuple[str, int]:
+    """(canonical name, itemsize bytes) for a jnp/np dtype or string."""
+    import numpy as np
+    try:
+        d = np.dtype(dtype)
+        return d.name, d.itemsize
+    except TypeError:
+        # jnp.bfloat16 & friends: not a numpy dtype on older stacks
+        name = getattr(dtype, "__name__", None) or str(dtype)
+        return name, 2 if "16" in name else 4
+
+
+def space_for_backend(backend: str) -> KernelSpace:
+    """pallas → MXU-aligned production space; interpret → tiny CPU space."""
+    return INTERPRET_SPACE if backend == "interpret" else DEFAULT_SPACE
+
+
+def autotune(problem: Problem, *, backend: str = "pallas",
+             dtype_name: str = "bfloat16",
+             space: KernelSpace | None = None,
+             oracle: CostOracle | None = None,
+             cache: TuneCache | None = None,
+             force: bool = False) -> Candidate:
+    """Resolve `problem` to its best Candidate, through the cache."""
+    space = space or space_for_backend(backend)
+    cache = cache or get_cache()
+    key = TuneCache.key(problem, backend=backend, dtype=dtype_name)
+    if not force:
+        hit = cache.get(key)
+        if hit is not None and space.feasible(hit, problem):
+            return hit
+    oracle = oracle or AnalyticOracle()
+    res = search(space, oracle, problem)
+    cache.put(key, res.best, predicted_s=res.predicted_s)
+    return res.best
+
+
+def best_attention_config(s_q: int, s_kv: int, head_dim: int, *,
+                          dtype, backend: str, batch_heads: int = 1,
+                          space: KernelSpace | None = None,
+                          oracle: AnalyticOracle | None = None,
+                          cache: TuneCache | None = None,
+                          force: bool = False) -> tuple[int, int]:
+    """Tuned (bq, bkv) for the flash-attention kernel.
+
+    The revolving buffer of attention is the grid pipeline itself
+    (BlockSpec-driven), so the search axes are just the q/kv tile
+    sizes; candidates must divide the sequence lengths (ops.attention
+    falls back to the reference path otherwise) and fit VMEM.
+    """
+    name, itemsize = _dtype_info(dtype)
+    space = space or space_for_backend(backend)
+    cache = cache or get_cache()
+    problem = Problem(op="attention", M=int(s_q), N=int(head_dim),
+                      K=int(s_kv), dtype_bytes=itemsize)
+    key = TuneCache.key(problem, backend=backend, dtype=name)
+
+    def usable(t: int, s: int) -> bool:
+        # min(t, s) is what ops.attention will run; it must divide s
+        return s % min(t, s) == 0
+
+    if not force:
+        hit = cache.get(key)
+        # keys are shape-bucketed: a hit tuned for another shape in the
+        # bucket may not divide *these* sequence lengths — re-validate,
+        # else ops.attention would silently fall back to the ref path
+        if (hit is not None and usable(hit.bm, s_q) and usable(hit.bn, s_kv)
+                and space.fits_vmem_attention(hit.bm, hit.bn, head_dim,
+                                              itemsize)):
+            return hit.bm, hit.bn
+    oracle = oracle or AnalyticOracle()
+
+    best, best_t = None, float("inf")
+    for bq in space.tile_options:
+        for bkv in space.tile_options:
+            if not (usable(bq, s_q) and usable(bkv, s_kv)):
+                continue
+            if not space.fits_vmem_attention(bq, bkv, head_dim, itemsize):
+                continue
+            t = oracle.estimate_attention(
+                min(bq, s_q), min(bkv, s_kv), s_q=s_q, s_kv=s_kv,
+                head_dim=head_dim, dtype_bytes=itemsize,
+                batch_heads=batch_heads)
+            if t < best_t:
+                best, best_t = (bq, bkv), t
+    if best is None:
+        best = (128, 128)          # ops.attention's historical default
+    cache.put(key, Candidate(bm=best[0], bn=best[1], bk=int(head_dim),
+                             slots=2, grid_order="ijk"),
+              predicted_s=best_t if best_t < float("inf") else None)
+    return best
+
+
+def best_config(op: str, M: int, N: int, K: int, *,
+                dtype, backend: str, groups: int = 1,
+                space: KernelSpace | None = None,
+                oracle: CostOracle | None = None,
+                cache: TuneCache | None = None,
+                force: bool = False) -> Candidate:
+    """The `ops.py` entry point: shapes + dtype + backend → Candidate."""
+    name, itemsize = _dtype_info(dtype)
+    problem = Problem(op=op, M=int(M), N=int(N), K=int(K),
+                      dtype_bytes=itemsize, groups=int(groups))
+    return autotune(problem, backend=backend, dtype_name=name,
+                    space=space, oracle=oracle, cache=cache, force=force)

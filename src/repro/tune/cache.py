@@ -1,0 +1,124 @@
+"""Persistent tuning cache: (op, shape-bucket, dtype, backend) → Candidate.
+
+Tuning is pure function of the problem, so results are memoized to a
+JSON file and shared across processes/runs.  Keys bucket the shape
+(each dim rounded up to the next power of two) so e.g. a (4096, 11008,
+4095) matmul reuses the (4096, 16384, 4096) entry instead of
+re-searching per ragged shape — tile choice is insensitive at that
+granularity, and padding already makes the kernels shape-agnostic.
+
+Location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro/tune.json``.  Writes are atomic (tmp + rename), loads
+are lazy, and a corrupt/unreadable file degrades to an empty cache —
+the tuner must never take the serving path down.  ``force=True`` on
+:func:`repro.tune.best_config` (or deleting the file) re-tunes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+
+from repro.tune.space import Candidate, Problem
+
+__all__ = ["TuneCache", "default_cache_path", "shape_bucket"]
+
+_ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "tune.json"
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def shape_bucket(p: Problem) -> tuple[int, int, int]:
+    """Power-of-two shape bucket (what the key is derived from)."""
+    return (_next_pow2(p.M), _next_pow2(p.N), _next_pow2(p.K))
+
+
+class TuneCache:
+    """Lazy-loading, atomically-persisted JSON candidate cache."""
+
+    SCHEMA = 1
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self._entries: dict[str, dict] | None = None
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def key(p: Problem, *, backend: str, dtype: str) -> str:
+        bm, bn, bk = shape_bucket(p)
+        g = f"|g{_next_pow2(p.groups)}" if p.groups > 1 else ""
+        return f"{p.op}|{bm}x{bn}x{bk}{g}|{dtype}|{backend}"
+
+    # ------------------------------------------------------------------
+    def _load(self) -> dict[str, dict]:
+        if self._entries is None:
+            try:
+                raw = json.loads(self.path.read_text())
+                if raw.get("schema") == self.SCHEMA:
+                    self._entries = dict(raw.get("entries", {}))
+                else:
+                    self._entries = {}
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def get(self, key: str) -> Candidate | None:
+        e = self._load().get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return Candidate.from_json(e)
+
+    def put(self, key: str, c: Candidate, *,
+            predicted_s: float | None = None) -> None:
+        entries = self._load()
+        rec = c.to_json()
+        if predicted_s is not None:
+            rec["predicted_s"] = predicted_s
+        entries[key] = rec
+        self.save()
+
+    def save(self) -> None:
+        """Atomic write; failures are swallowed (cache is best-effort)."""
+        if self._entries is None:
+            return
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            payload = json.dumps(
+                {"schema": self.SCHEMA, "entries": self._entries},
+                indent=1, sort_keys=True)
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(payload)
+                os.replace(tmp, self.path)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        except OSError:
+            pass
+
+    def clear(self) -> None:
+        self._entries = {}
+        try:
+            self.path.unlink()
+        except OSError:
+            pass
+
+    def __len__(self) -> int:
+        return len(self._load())

@@ -1,0 +1,95 @@
+"""Search drivers: exhaustive for small spaces, hill-climb for large.
+
+The spaces here are small enough (a few hundred candidates) that
+exhaustive search against the analytic oracle is usually the right
+call; hill-climbing exists for the measured oracle, where each probe
+costs a real kernel launch.  The climb follows the
+``benchmarks/hillclimb.py`` idiom: start from the known-good default,
+take the best single-axis move while it improves, restart from a few
+scattered seeds so a bad basin does not trap the result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.tune.oracle import CostOracle
+from repro.tune.space import Candidate, KernelSpace, Problem
+
+__all__ = ["SearchResult", "search", "exhaustive_search", "hill_climb"]
+
+#: Above this many candidates, `search` switches to hill-climbing.
+EXHAUSTIVE_LIMIT = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    best: Candidate
+    predicted_s: float
+    evaluated: int
+    method: str                   # "exhaustive" | "hillclimb"
+
+
+def exhaustive_search(space: KernelSpace, oracle: CostOracle,
+                      problem: Problem,
+                      candidates: list[Candidate] | None = None
+                      ) -> SearchResult:
+    if candidates is None:
+        candidates = list(space.candidates(problem))
+    best, best_t = None, float("inf")
+    for c in candidates:
+        t = oracle.estimate(c, problem)
+        # strict < keeps the first (deterministically ordered) minimum
+        if t < best_t:
+            best, best_t = c, t
+    if best is None:
+        raise ValueError(f"no feasible candidate for {problem}")
+    return SearchResult(best, best_t, len(candidates), "exhaustive")
+
+
+def hill_climb(space: KernelSpace, oracle: CostOracle, problem: Problem,
+               *, restarts: int = 3, max_steps: int = 64) -> SearchResult:
+    """Greedy best-neighbor descent with scattered restarts."""
+    seeds = [space.default(problem)]
+    # scatter: extreme corners of the tile range make cheap extra seeds
+    for t in (space.tile_options[0], space.tile_options[-1]):
+        for s in (space.slot_options[0], space.slot_options[-1]):
+            c = Candidate(t, t, t, s, space.grid_orders[0])
+            if space.feasible(c, problem) and c not in seeds:
+                seeds.append(c)
+    seeds = seeds[:1 + restarts]
+
+    scores: dict[Candidate, float] = {}
+
+    def score(c: Candidate) -> float:
+        if c not in scores:
+            scores[c] = oracle.estimate(c, problem)
+        return scores[c]
+
+    best, best_t = None, float("inf")
+    for seed in seeds:
+        cur, cur_t = seed, score(seed)
+        for _ in range(max_steps):
+            moved = False
+            for nb in space.neighbors(cur, problem):
+                if not space.feasible(nb, problem):
+                    continue
+                t = score(nb)
+                if t < cur_t:
+                    cur, cur_t, moved = nb, t, True
+            if not moved:
+                break
+        if cur_t < best_t:
+            best, best_t = cur, cur_t
+    if best is None:
+        raise ValueError(f"no feasible candidate for {problem}")
+    return SearchResult(best, best_t, len(scores), "hillclimb")
+
+
+def search(space: KernelSpace, oracle: CostOracle, problem: Problem,
+           *, exhaustive_limit: int = EXHAUSTIVE_LIMIT) -> SearchResult:
+    """Pick the driver by space size (measured oracles get the climb)."""
+    candidates = list(space.candidates(problem))   # enumerate once
+    if len(candidates) <= exhaustive_limit:
+        return exhaustive_search(space, oracle, problem, candidates)
+    return hill_climb(space, oracle, problem)

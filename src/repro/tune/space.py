@@ -1,0 +1,194 @@
+"""Kernel configuration space: what the tuner is allowed to pick.
+
+A :class:`Candidate` is one complete execution configuration of the
+zero-stall matmul family — tile sizes, revolving-buffer depth (which
+implies the paper's dobu/single variant), and grid walk order.
+:class:`KernelSpace` enumerates the *legal* candidates for a problem:
+
+  * tiles respect the hardware alignment (MXU lanes: 128; interpret
+    mode uses 8 so the CPU test space stays cheap);
+  * tiles never exceed the (padded) problem — a tile bigger than the
+    matrix only adds zero-padding FLOPs;
+  * the revolving buffers + accumulator fit the VMEM budget, computed
+    by :meth:`repro.core.cyclemodel.TpuPipelineModel.vmem_footprint`
+    (scaled by ``vmem_fraction`` — the compiler needs headroom for
+    spills and the output window).
+
+The space is deliberately finite and explicit: the search driver
+(:mod:`repro.tune.search`) goes exhaustive when it is small and
+hill-climbs through :meth:`KernelSpace.neighbors` when it is not.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterator
+
+from repro.core.cyclemodel import TpuParams, TpuPipelineModel
+
+__all__ = ["Candidate", "Problem", "KernelSpace", "DEFAULT_SPACE",
+           "INTERPRET_SPACE"]
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Candidate:
+    """One execution configuration of the zero-stall matmul kernels."""
+
+    bm: int
+    bn: int
+    bk: int
+    slots: int = 2
+    grid_order: str = "ijk"
+
+    @property
+    def variant(self) -> str:
+        """The paper's two-point vocabulary, derived from depth."""
+        return "dobu" if self.slots >= 2 else "single"
+
+    def kernel_kwargs(self) -> dict:
+        """Kwargs for ``zero_stall_matmul`` (grouped drops grid_order)."""
+        return {"bm": self.bm, "bn": self.bn, "bk": self.bk,
+                "slots": self.slots, "variant": self.variant,
+                "grid_order": self.grid_order}
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Candidate":
+        return cls(bm=int(d["bm"]), bn=int(d["bn"]), bk=int(d["bk"]),
+                   slots=int(d.get("slots", 2)),
+                   grid_order=str(d.get("grid_order", "ijk")))
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A shape-bucketed matmul instance the tuner optimizes for."""
+
+    op: str                      # "matmul" | "grouped_matmul"
+    M: int
+    N: int
+    K: int
+    dtype_bytes: int = 2
+    groups: int = 1              # grouped_matmul only
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.groups * self.M * self.N * self.K
+
+
+class KernelSpace:
+    """Enumerator of legal candidates under alignment + VMEM limits."""
+
+    def __init__(
+        self,
+        *,
+        tile_options: tuple[int, ...] = (128, 256, 512),
+        slot_options: tuple[int, ...] = (1, 2, 3, 4),
+        grid_orders: tuple[str, ...] = ("ijk",),
+        align: int = 128,
+        vmem_bytes: int | None = None,
+        vmem_fraction: float = 0.5,
+        model: TpuPipelineModel | None = None,
+    ):
+        # grid_orders defaults to ("ijk",) only: the analytic oracle is
+        # order-blind (same FLOPs/bytes either way), so searching "jik"
+        # doubles the space for a guaranteed tie.  Pass
+        # grid_orders=("ijk", "jik") when scoring with MeasuredOracle,
+        # where walk order can matter (HBM row locality).
+        if any(t % align for t in tile_options):
+            raise ValueError(f"tile options {tile_options} must be multiples "
+                             f"of align={align}")
+        self.tile_options = tuple(sorted(tile_options))
+        self.slot_options = tuple(sorted(slot_options))
+        self.grid_orders = tuple(grid_orders)
+        self.align = align
+        self.model = model or TpuPipelineModel()
+        vmem = vmem_bytes if vmem_bytes is not None else self.model.p.vmem_bytes
+        self.vmem_budget = int(vmem * vmem_fraction)
+
+    # ------------------------------------------------------------------
+    def fits_vmem(self, c: Candidate, dtype_bytes: int = 2) -> bool:
+        """Revolving buffers + accumulator within the VMEM budget?"""
+        fp = self.model.vmem_footprint(c.bm, c.bn, c.bk,
+                                       dtype_bytes=dtype_bytes,
+                                       slots=c.slots)
+        return fp <= self.vmem_budget
+
+    def fits_vmem_attention(self, bq: int, bkv: int, head_dim: int,
+                            dtype_bytes: int = 2) -> bool:
+        """Flash-attention working set (q + k + v tiles double-buffered
+        by the grid pipeline, fp32 accumulator + softmax state)."""
+        tiles = 2 * (bq + 2 * bkv) * head_dim * dtype_bytes
+        acc = bq * head_dim * 4 + 2 * bq * 4        # acc + m/l columns
+        return tiles + acc <= self.vmem_budget
+
+    def feasible(self, c: Candidate, problem: Problem) -> bool:
+        if c.slots < 1 or c.grid_order not in self.grid_orders:
+            return False
+        if any(t % self.align for t in (c.bm, c.bn, c.bk)):
+            return False
+        pad = lambda d: max(self.align, math.ceil(d / self.align) * self.align)
+        if c.bm > pad(problem.M) or c.bn > pad(problem.N) or c.bk > pad(problem.K):
+            return False               # tile would be pure zero-padding
+        return self.fits_vmem(c, problem.dtype_bytes)
+
+    def candidates(self, problem: Problem) -> Iterator[Candidate]:
+        """All legal candidates for `problem`, deterministic order."""
+        for bm, bn, bk, slots, order in itertools.product(
+                self.tile_options, self.tile_options, self.tile_options,
+                self.slot_options, self.grid_orders):
+            c = Candidate(bm, bn, bk, slots, order)
+            if self.feasible(c, problem):
+                yield c
+
+    def size(self, problem: Problem) -> int:
+        return sum(1 for _ in self.candidates(problem))
+
+    def default(self, problem: Problem) -> Candidate:
+        """The pre-tuner configuration (the old hardcoded 128³/2-slot path)."""
+        t = 128 if 128 in self.tile_options else self.tile_options[0]
+        c = Candidate(t, t, t, 2, "ijk")
+        if self.feasible(c, problem):
+            return c
+        # smallest tiles, paper scheme — feasible whenever anything is
+        t0 = self.tile_options[0]
+        return Candidate(t0, t0, t0,
+                         2 if 2 in self.slot_options else self.slot_options[0],
+                         self.grid_orders[0])
+
+    # ------------------------------------------------------------------
+    def neighbors(self, c: Candidate, problem: Problem) -> Iterator[Candidate]:
+        """Single-axis moves for hill-climbing (feasible only)."""
+        def moves(options, cur):
+            if cur in options:
+                idx = options.index(cur)
+                for j in (idx - 1, idx + 1):
+                    if 0 <= j < len(options):
+                        yield options[j]
+            else:
+                yield options[0]
+
+        for bm in moves(self.tile_options, c.bm):
+            yield Candidate(bm, c.bn, c.bk, c.slots, c.grid_order)
+        for bn in moves(self.tile_options, c.bn):
+            yield Candidate(c.bm, bn, c.bk, c.slots, c.grid_order)
+        for bk in moves(self.tile_options, c.bk):
+            yield Candidate(c.bm, c.bn, bk, c.slots, c.grid_order)
+        for slots in moves(self.slot_options, c.slots):
+            yield Candidate(c.bm, c.bn, c.bk, slots, c.grid_order)
+        for order in self.grid_orders:
+            if order != c.grid_order:
+                yield Candidate(c.bm, c.bn, c.bk, c.slots, order)
+
+
+#: TPU-shaped production space (MXU-aligned tiles, VMEM-budgeted).
+DEFAULT_SPACE = KernelSpace()
+
+#: CPU/interpret-mode space for tests and the dry-run: tiny tiles so
+#: interpret-mode kernel invocations stay cheap.
+INTERPRET_SPACE = KernelSpace(
+    tile_options=(8, 16, 32), slot_options=(1, 2, 3), align=8,
+    vmem_bytes=TpuParams().vmem_bytes, vmem_fraction=0.5)

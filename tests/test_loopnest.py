@@ -7,6 +7,9 @@ single cycle.  The sequencer model must therefore replay exactly the
 fully-unrolled program in exactly `total_issued` cycles.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

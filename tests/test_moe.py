@@ -1,5 +1,8 @@
 """MoE router/dispatch properties."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

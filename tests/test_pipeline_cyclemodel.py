@@ -5,9 +5,11 @@ published Table II anchors and reproduce the Fig. 5 ordering of the
 five cluster configurations (EXPERIMENTS.md carries the full numbers).
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 import hypothesis.strategies as st
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core.cyclemodel import (SNITCH_CONFIGS, SnitchClusterModel,

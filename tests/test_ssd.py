@@ -1,5 +1,8 @@
 """Mamba2 SSD: chunked algorithm vs sequential oracle + decode parity."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
