@@ -108,7 +108,6 @@ class LoopNest:
         # prod(trips[0..i]) times.
         total = 0
         mult = 1
-        prev: Loop | None = None
         for i, lp in enumerate(self.loops):
             mult *= lp.trips
             inner = self.loops[i + 1] if i + 1 < len(self.loops) else None

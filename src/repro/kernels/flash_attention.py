@@ -12,6 +12,15 @@ the grid itself.
 Layout: q (B, H, S, D) -> grid (B*H, S/bq, S_kv/bkv), kv innermost.
 Running max/denominator/accumulator live in VMEM scratch and are
 carried across kv steps (the "revisiting output" pattern).
+
+Variable-length batches (the serving workload): ``q_lens`` / ``kv_lens``
+are per-sequence valid lengths, scalar-prefetched into SMEM so every
+grid step can mask its score tile.  Rows/cols at ``>= len`` are invalid;
+fully-masked query rows produce exact zeros.  Positions are absolute
+row/col indices (query row i is sequence position i), so zero-padding
+q/k/v up to tile multiples never changes the math — that is what lets
+:func:`repro.kernels.ops.attention` keep ragged continuous batches on
+this kernel instead of falling back to the jnp reference.
 """
 
 from __future__ import annotations
@@ -30,10 +39,14 @@ __all__ = ["flash_attention"]
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, causal: bool, bq: int, bkv: int):
+def _kernel(ql_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bkv: int, n_heads: int):
+    b = pl.program_id(0)
     iq, ikv = pl.program_id(1), pl.program_id(2)
     nkv = pl.num_programs(2)
+    q_len = ql_ref[b // n_heads]
+    kv_len = kl_ref[b // n_heads]
 
     @pl.when(ikv == 0)
     def _():
@@ -49,16 +62,22 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale   # (bq, bkv)
 
+    rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    cols = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    valid = (rows < q_len) & (cols < kv_len)
     if causal:
-        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
-        cols = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
-        s = jnp.where(rows >= cols, s, NEG_INF)
+        valid &= rows >= cols
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_scr[...]                # (bq, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)             # (bq, bkv)
+    # While a row has seen no valid kv position, m_new == NEG_INF and
+    # exp(s - m_new) would be exp(0) == 1 for every masked entry,
+    # polluting l/acc with garbage that no later rescale removes.
+    # Predicate on m_new so fully-masked rows keep l == 0 (-> zeros out).
+    p = jnp.where(m_new > 0.5 * NEG_INF, jnp.exp(s - m_new), 0.0)
     l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
 
     acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
@@ -83,6 +102,8 @@ def flash_attention(
     k: jax.Array,   # (B, H, Skv, D)
     v: jax.Array,   # (B, H, Skv, D)
     *,
+    q_lens: jax.Array | None = None,    # (B,) valid query rows
+    kv_lens: jax.Array | None = None,   # (B,) valid kv positions
     bq: int = 128,
     bkv: int = 128,
     causal: bool = True,
@@ -94,31 +115,39 @@ def flash_attention(
     if Sq % bq or Skv % bkv:
         raise ValueError(f"seq lens {(Sq, Skv)} not multiples of {(bq, bkv)}")
     scale = scale if scale is not None else D ** -0.5
+    if q_lens is None:
+        q_lens = jnp.full((B,), Sq, jnp.int32)
+    if kv_lens is None:
+        kv_lens = jnp.full((B,), Skv, jnp.int32)
     bh = B * H
     qf = q.reshape(bh, Sq, D)
     kf = k.reshape(bh, Skv, D)
     vf = v.reshape(bh, Skv, D)
 
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
-                               bq=bq, bkv=bkv)
-    of = pl.pallas_call(
-        kernel,
+                               bq=bq, bkv=bkv, n_heads=H)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # q_lens, kv_lens -> SMEM
         grid=(bh, Sq // bq, Skv // bkv),
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq, D), lambda b, i, j, *_: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j, *_: (b, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j, *_: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, Sq, D), q.dtype),
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j, *_: (b, i, 0)),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),    # running max
             pltpu.VMEM((bq, 1), jnp.float32),    # running denom
             pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
         ],
+    )
+    of = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, Sq, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
         name="flash_attention",
-    )(qf, kf, vf)
+    )(q_lens.astype(jnp.int32), kv_lens.astype(jnp.int32), qf, kf, vf)
     return of.reshape(B, H, Sq, D)

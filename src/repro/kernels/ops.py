@@ -30,6 +30,7 @@ contraction, so results are exact.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -121,20 +122,52 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
     return c[:, :M, :N]
 
 
+_FALLBACK_WARNED: set[str] = set()
+
+
+def _warn_fallback_once(reason: str) -> None:
+    """The Pallas path is the product; a silent jnp fallback is a perf
+    cliff (serving batches are exactly the ragged shapes that used to
+    take it).  Any fallback still taken is announced once per reason."""
+    if reason not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(reason)
+        warnings.warn(f"ops.attention: falling back to the jnp reference "
+                      f"({reason}); the zero-stall Pallas path is NOT used",
+                      RuntimeWarning, stacklevel=3)
+
+
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               impl: str = "auto", causal: bool = True,
               bq: int = 128, bkv: int = 128, tiling=None,
-              scale: float | None = None) -> jax.Array:
-    """(B,H,S,D) flash attention; ref oracle for jnp path."""
+              scale: float | None = None,
+              q_lens: jax.Array | None = None,
+              kv_lens: jax.Array | None = None) -> jax.Array:
+    """(B,H,S,D) flash attention; ref oracle for jnp path.
+
+    ``q_lens``/``kv_lens``: optional (B,) per-sequence valid lengths
+    (variable-length/continuous batches).  Non-tile-multiple sequence
+    lengths are zero-padded up to the tile and masked via the length
+    operands — padding contributes exact zeros, so ragged serving
+    shapes stay on the Pallas kernel instead of silently routing to
+    the reference path.
+    """
     impl = resolve_impl(impl)
     if impl == "jnp":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
+                                        q_lens=q_lens, kv_lens=kv_lens)
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    if causal and Sq != Skv and q_lens is None and kv_lens is None:
+        # kernel causal is start-aligned (row i == position i); the
+        # historical ref is end-aligned for Sq != Skv — don't guess.
+        _warn_fallback_once("causal attention with Sq != Skv and no "
+                            "length operands has ambiguous alignment")
         return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
-    Sq, Skv = q.shape[2], k.shape[2]
     if tiling == "auto":
         from repro import tune
         bq, bkv = tune.best_attention_config(
-            Sq, Skv, q.shape[3], dtype=q.dtype, backend=impl,
-            batch_heads=q.shape[0] * q.shape[1])
+            Sq, Skv, D, dtype=q.dtype, backend=impl,
+            batch_heads=B * H)
     elif isinstance(tiling, (tuple, list)) and len(tiling) == 2:
         bq, bkv = map(int, tiling)
     elif tiling is not None:
@@ -143,9 +176,19 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bq_ = min(bq, Sq)
     bkv_ = min(bkv, Skv)
     if Sq % bq_ or Skv % bkv_:
-        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
-    return _flash(q, k, v, bq=bq_, bkv=bkv_, causal=causal, scale=scale,
-                  interpret=(impl == "interpret"))
+        # pad to tile multiples and mask — the lengths default to the
+        # unpadded extents, so padding contributes exact zeros.
+        if q_lens is None:
+            q_lens = jnp.full((B,), Sq, jnp.int32)
+        if kv_lens is None:
+            kv_lens = jnp.full((B,), Skv, jnp.int32)
+        q = _pad_to(q, (1, 1, bq_, 1))
+        k = _pad_to(k, (1, 1, bkv_, 1))
+        v = _pad_to(v, (1, 1, bkv_, 1))
+    out = _flash(q, k, v, q_lens=q_lens, kv_lens=kv_lens,
+                 bq=bq_, bkv=bkv_, causal=causal, scale=scale,
+                 interpret=(impl == "interpret"))
+    return out[:, :, :Sq]
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
@@ -161,8 +204,10 @@ def host_tiled_matmul(a: jax.Array, b: jax.Array, *,
     math is identical.
     """
     (M, K), (_, N) = a.shape, b.shape
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"host_tiled_matmul: shape {(M, K, N)} not tiled "
+                         f"by (bm, bn, bk)={(bm, bn, bk)}")
     gm, gn, gk = M // bm, N // bn, K // bk
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0
 
     def body(t, c):
         i = t // (gn * gk)

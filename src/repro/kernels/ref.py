@@ -30,19 +30,43 @@ def grouped_matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                        causal: bool = True, scale: float | None = None
-                        ) -> jax.Array:
-    """q,k,v: (B, H, S, D) -> (B, H, S, D). Numerically-stable softmax."""
+                        causal: bool = True, scale: float | None = None,
+                        q_lens: jax.Array | None = None,
+                        kv_lens: jax.Array | None = None) -> jax.Array:
+    """q,k,v: (B, H, S, D) -> (B, H, S, D). Numerically-stable softmax.
+
+    With ``q_lens``/``kv_lens`` ((B,) valid lengths), positions are
+    absolute indices (query row i == sequence position i — matching the
+    Pallas kernel's convention) and fully-masked query rows return
+    exact zeros.  Without lengths the historical path is unchanged
+    (causal mask end-aligned via the ``k=T-S`` tril offset).
+    """
     S = q.shape[-2]
+    T = k.shape[-2]
     scale = scale if scale is not None else q.shape[-1] ** -0.5
     logits = jnp.einsum("bhsd,bhtd->bhst", q, k,
                         preferred_element_type=jnp.float32) * scale
-    if causal:
-        mask = jnp.tril(jnp.ones((S, k.shape[-2]), dtype=bool),
-                        k=k.shape[-2] - S)
-        logits = jnp.where(mask, logits, -jnp.inf)
+    if q_lens is None and kv_lens is None:
+        if causal:
+            mask = jnp.tril(jnp.ones((S, T), dtype=bool), k=T - S)
+            logits = jnp.where(mask, logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    mask = jnp.broadcast_to(
+        (rows >= cols) if causal else jnp.ones((S, T), bool), (1, 1, S, T))
+    if q_lens is not None:
+        mask = mask & (rows < q_lens[:, None, None, None])
+    if kv_lens is not None:
+        mask = mask & (cols < kv_lens[:, None, None, None])
+    # -1e30 (not -inf): fully-masked rows must stay NaN-free; they are
+    # zeroed below via row_valid rather than through the softmax.
+    logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
+    row_valid = mask.any(axis=-1)
+    return jnp.where(row_valid[..., None], out, 0.0)
 
 
 def ssd_scan_ref(x: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array,

@@ -17,7 +17,7 @@ from repro.models import layers as L
 from repro.models.layers import Ctx, Params
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
-           "encode"]
+           "encode", "prefill"]
 
 
 def _init_enc_layer(key, cfg, dtype):
@@ -148,6 +148,61 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         "cross_k": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, hd), dtype),
         "cross_v": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, hd), dtype),
         "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Params, tokens: jax.Array, frames: jax.Array,
+            cfg: ModelConfig, ctx: Ctx, max_len: int, *,
+            lengths: jax.Array | None = None) -> tuple[jax.Array, Params]:
+    """Fused prompt ingestion: encode the source once, run the decoder
+    prompt in one masked causal pass, and return (last-valid-position
+    logits, decode cache) with self- AND cross-attention K/V populated
+    — the manual cross-KV priming that lock-step callers had to do by
+    hand (see tests/test_models.py) becomes part of the contract.
+
+    The cross-attention cache length equals ``frames.shape[1]``; when
+    serving, every request in an engine must share that encoder length
+    (pass ``enc_len`` to :func:`init_cache` to size the slot cache).
+    """
+    B, S = tokens.shape
+    if S > max_len:
+        raise ValueError(f"prompt length {S} exceeds max_len {max_len}")
+    lens = (jnp.full((B,), S, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32))
+    enc_out = encode(params, frames, cfg, ctx)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    hd = cfg.resolved_head_dim
+    x = L.embed(params["embed"], tokens, ctx)
+
+    def body(x, lp):
+        h = L.rms_norm(lp["self_norm"], x, cfg.norm_eps)
+        q, k, v = L._qkv(lp["self_attn"], h, cfg, ctx)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        o = L._gqa_full(q, k, v, causal=True,
+                        impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
+                        tiling=L.attn_tiling(ctx), lengths=lens)
+        x = x + L.linear(lp["self_attn"]["wo"],
+                         o.reshape(B, S, cfg.n_heads * hd), ctx)
+        h = L.rms_norm(lp["cross_norm"], x, cfg.norm_eps)
+        ek, ev = _enc_kv(lp["cross_attn"], enc_out, cfg, ctx)
+        x = x + _cross_attention(lp["cross_attn"], h, ek, ev, cfg, ctx)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h, cfg, ctx)
+        return x, {"k": k, "v": v, "cross_k": ek, "cross_v": ev}
+
+    x, kv = jax.lax.scan(body, x, params["decoder"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], L.gather_last(x, lens), ctx)
+
+    pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+    pos = jnp.asarray(S, jnp.int32) if lengths is None else lens
+    return logits, {
+        "k": jnp.pad(kv["k"], pad).astype(ctx.dtype),
+        "v": jnp.pad(kv["v"], pad).astype(ctx.dtype),
+        "cross_k": kv["cross_k"].astype(ctx.dtype),
+        "cross_v": kv["cross_v"].astype(ctx.dtype),
+        "pos": pos,
     }
 
 

@@ -23,7 +23,8 @@ from repro.models import layers as L
 from repro.models import ssm
 from repro.models.layers import Ctx, Params
 
-__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step"]
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "prefill"]
 
 
 def _n_groups(cfg: ModelConfig) -> int:
@@ -110,6 +111,70 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         "k": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, hd), dtype),
         "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
+            max_len: int, *, lengths: jax.Array | None = None
+            ) -> tuple[jax.Array, Params]:
+    """Fused prompt ingestion: chunked-SSD pass per mamba layer plus one
+    masked full-sequence attention per shared block, capturing the
+    shared-block K/V into the decode cache.
+
+    Mirrors :func:`decode_step`'s group structure; with ``lengths``
+    ((B,) ragged prompts) the SSD steps beyond each row's prefix are
+    exact identities and attention is masked per sequence, so the
+    returned states equal a per-row lock-step decode of the prompt.
+    """
+    B, S0 = tokens.shape
+    lens = (jnp.full((B,), S0, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32))
+    chunk = ssm.DEFAULT_CHUNK
+    if S0 % chunk:
+        # full-chunk pad: identity steps + a fixed chunk grid (see
+        # ssm.prefill) keep per-request states bucket-size-invariant
+        tokens = jnp.pad(tokens, ((0, 0), (0, -(-S0 // chunk) * chunk - S0)))
+    x0 = L.embed(params["embed"], tokens, ctx)
+    S = x0.shape[1]
+    if S0 > max_len:
+        raise ValueError(f"prompt length {S0} exceeds max_len {max_len}")
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    sp = params["shared"]
+    hd = cfg.resolved_head_dim
+
+    def mamba_body(x, lp):
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        y, st = ssm.mamba_prefill(lp["mamba"], h, cfg, ctx, lengths=lens)
+        return x + y, st
+
+    def group_body(x, gp):
+        x, sts = jax.lax.scan(mamba_body, x, gp)
+        h = L.linear(sp["pre_proj"], jnp.concatenate([x, x0], axis=-1), ctx)
+        hn = L.rms_norm(sp["attn_norm"], h, cfg.norm_eps)
+        q, k, v = L._qkv(sp["attn"], hn, cfg, ctx)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        o = L._gqa_full(q, k, v, causal=True,
+                        impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
+                        tiling=L.attn_tiling(ctx), lengths=lens)
+        h = h + L.linear(sp["attn"]["wo"],
+                         o.reshape(B, S, cfg.n_heads * hd), ctx)
+        h = h + L.mlp(sp["mlp"], L.rms_norm(sp["mlp_norm"], h, cfg.norm_eps),
+                      cfg, ctx)
+        return x + h, (sts, {"k": k, "v": v})
+
+    x, (states, kvs) = jax.lax.scan(group_body, x0, params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], L.gather_last(x, lens), ctx)
+
+    # drop chunk-padding positions (pure garbage), pad out to max_len
+    pad = ((0, 0), (0, 0), (0, max_len - S0), (0, 0), (0, 0))
+    pos = jnp.asarray(S0, jnp.int32) if lengths is None else lens
+    return logits, {
+        "conv": states["conv"], "ssm": states["ssm"],
+        "k": jnp.pad(kvs["k"][:, :, :S0], pad).astype(ctx.dtype),
+        "v": jnp.pad(kvs["v"][:, :, :S0], pad).astype(ctx.dtype),
+        "pos": pos,
     }
 
 

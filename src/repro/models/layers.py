@@ -244,8 +244,23 @@ def attn_tiling(ctx: "Ctx") -> "str | None":
     return ctx.tiling if ctx.tiling in (None, "auto") else None
 
 
+def _lengths_mask(S: int, T: int, lengths: jax.Array,
+                  causal: bool) -> jax.Array:
+    """(B, S, T) validity mask for per-sequence valid lengths.
+
+    Positions are absolute indices (query row i == position i), matching
+    the Pallas kernel's variable-length convention."""
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    m = ((rows < lengths[:, None, None]) & (cols < lengths[:, None, None]))
+    if causal:
+        m = m & (rows >= cols)
+    return m
+
+
 def _gqa_full(q, k, v, *, causal: bool, impl: str,
-              ctx: "Ctx | None" = None, tiling="auto") -> jax.Array:
+              ctx: "Ctx | None" = None, tiling="auto",
+              lengths: jax.Array | None = None) -> jax.Array:
     """q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D).
 
     Under a mesh, KV heads are repeated up to H ("merged-head" form) so
@@ -255,6 +270,13 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
     a 16-way sharding across its two small head dims and forces GSPMD
     into score all-reduces.  Decode keeps the unrepeated form (the KV
     cache dominates there).
+
+    ``lengths``: optional (B,) per-sequence valid lengths (ragged
+    serving batches); rows/cols at >= length are masked, fully-masked
+    rows produce zeros.  On the Pallas path this stays on the kernel
+    via its length operands; on the jnp path the score mask gains a
+    batch dimension (the chunked variants are skipped — serving
+    prompts are far below the chunk threshold).
     """
     B, S, H, D = q.shape
     KV = k.shape[2]
@@ -265,35 +287,47 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
         kr = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
         vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
         o = ops.attention(q.transpose(0, 2, 1, 3), kr, vr,
-                          impl=impl, causal=causal, tiling=tiling)
+                          impl=impl, causal=causal, tiling=tiling,
+                          q_lens=lengths, kv_lens=lengths)
         return o.transpose(0, 2, 1, 3)
     # merged-head path (callers gate via _merged_head_plan):
     if ctx is not None and ctx.mesh is not None:
         kr = _head_shard(jnp.repeat(k, rep, axis=2), ctx)
         vr = _head_shard(jnp.repeat(v, rep, axis=2), ctx)
         q = _head_shard(q, ctx)
-        if (S * T > _ATTN_CHUNK_ELEMS and S % _Q_CHUNK == 0
-                and T % _KV_CHUNK == 0):
+        if (lengths is None and S * T > _ATTN_CHUNK_ELEMS
+                and S % _Q_CHUNK == 0 and T % _KV_CHUNK == 0):
             return _mha_chunked(q, kr, vr, causal=causal)
         logits = jnp.einsum("bshd,bthd->bhst", q, kr,
                             preferred_element_type=jnp.float32) * (D ** -0.5)
-        if causal:
+        if lengths is not None:
+            m = _lengths_mask(S, T, lengths, causal)
+            logits = jnp.where(m[:, None], logits, -1e30)
+        elif causal:
             mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
             logits = jnp.where(mask, logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
-        return jnp.einsum("bhst,bthd->bshd", probs.astype(vr.dtype), vr)
-    if (S * T > _ATTN_CHUNK_ELEMS and S % _Q_CHUNK == 0
-            and T % _KV_CHUNK == 0):
+        out = jnp.einsum("bhst,bthd->bshd", probs.astype(vr.dtype), vr)
+        if lengths is not None:
+            out = jnp.where(m.any(-1)[:, :, None, None], out, 0)
+        return out
+    if (lengths is None and S * T > _ATTN_CHUNK_ELEMS
+            and S % _Q_CHUNK == 0 and T % _KV_CHUNK == 0):
         return _gqa_chunked(q, k, v, causal=causal)
     # native grouped einsum (no kv-head materialization)
     qg = q.reshape(B, S, KV, rep, D)
     logits = jnp.einsum("bskrd,btkd->bkrst", qg, k,
                         preferred_element_type=jnp.float32) * (D ** -0.5)
-    if causal:
+    if lengths is not None:
+        m = _lengths_mask(S, T, lengths, causal)
+        logits = jnp.where(m[:, None, None], logits, -1e30)
+    elif causal:
         mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
         logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkrst,btkd->bskrd", probs.astype(v.dtype), v)
+    if lengths is not None:
+        o = jnp.where(m.any(-1)[:, :, None, None, None], o, 0)
     return o.reshape(B, S, H, D)
 
 
@@ -439,8 +473,12 @@ def _merged_head_plan(n_heads: int, kv_heads: int, ctx: Ctx) -> int | None:
 
 def attention(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
               positions: jax.Array, causal: bool = True,
-              kv_override: tuple | None = None) -> jax.Array:
-    """Full-sequence attention (train / prefill / encoder / cross)."""
+              kv_override: tuple | None = None,
+              lengths: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    ``lengths``: optional (B,) valid lengths for ragged (serving)
+    batches — forwarded to the masked attention path."""
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     q, k, v = _qkv(p, x, cfg, ctx)
@@ -455,7 +493,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
         q = jnp.pad(q, ((0, 0), (0, 0), (0, n_pad), (0, 0)))
     o = _gqa_full(q, k, v, causal=causal, impl=ops.resolve_impl(ctx.impl),
                   ctx=ctx if n_pad is not None else None,
-                  tiling=attn_tiling(ctx))
+                  tiling=attn_tiling(ctx), lengths=lengths)
     if n_pad:
         o = o[:, :, :cfg.n_heads]
     return linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd), ctx)
@@ -474,8 +512,8 @@ def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
     q = rope(q, pos_b[:, None], cfg.rope_theta)
     k = rope(k, pos_b[:, None], cfg.rope_theta)
-    ck = _scatter_at(cache["k"], k, pos_b)
-    cv = _scatter_at(cache["v"], v, pos_b)
+    ck = _scatter_at(cache["k"], k, pos)
+    cv = _scatter_at(cache["v"], v, pos)
     KV = ck.shape[2]
     rep = cfg.n_heads // KV
     qg = q.reshape(B, 1, KV, rep, hd)
@@ -523,10 +561,10 @@ def attention_decode_quantized(p: Params, x: jax.Array, cfg: ModelConfig,
 
     qk, ks = quant(k)
     qv, vs = quant(v)
-    ck = _scatter_at(cache["k"], qk, pos_b)
-    cks = _scatter_at(cache["k_scale"], ks, pos_b)
-    cv = _scatter_at(cache["v"], qv, pos_b)
-    cvs = _scatter_at(cache["v_scale"], vs, pos_b)
+    ck = _scatter_at(cache["k"], qk, pos)
+    cks = _scatter_at(cache["k_scale"], ks, pos)
+    cv = _scatter_at(cache["v"], qv, pos)
+    cvs = _scatter_at(cache["v_scale"], vs, pos)
 
     KV = ck.shape[2]
     rep = cfg.n_heads // KV
@@ -550,23 +588,29 @@ def attention_decode_quantized(p: Params, x: jax.Array, cfg: ModelConfig,
     return out, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
 
 
-def _scatter_at(c: jax.Array, new: jax.Array, pos_b: jax.Array) -> jax.Array:
-    """c: (B, S, KV, D); new: (B, 1, KV, D); write new at per-batch pos.
+def _scatter_at(c: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """c: (B, S, KV, D); new: (B, 1, KV, D); write new at position ``pos``.
 
-    Uniform decode position (pos_b broadcast from a scalar) uses a
-    dynamic-update-slice — XLA updates the donated cache in place; a
-    full-cache `where` rewrite would materialize a second cache-sized
-    buffer per layer (measured +13 GiB/dev on the 32k decode cells).
+    Scalar ``pos`` — all sequences decode at the same step (lock-step
+    batches): a dynamic-update-slice, which XLA performs in place on
+    the donated cache.  (B,) ``pos`` — per-sequence positions
+    (continuous-batching slots): a vmapped per-row dynamic-update-slice,
+    which lowers to a scatter XLA can still apply in place.  The old
+    code collapsed every (B,) pos to ``pos[0]``, silently writing all
+    rows at row 0's position — latent while serving was lock-step, live
+    the moment slots decode at different depths.  A full-cache ``where``
+    rewrite is avoided in both paths: it materializes a second
+    cache-sized buffer per layer (measured +13 GiB/dev at 32k decode).
     """
-    if pos_b.ndim == 0 or (pos_b.ndim == 1 and isinstance(
-            pos_b, jax.Array) and pos_b.shape[0] == c.shape[0]):
-        # all sequences decode at the same step in our serving loop
-        pos = pos_b.reshape(-1)[0] if pos_b.ndim else pos_b
-        zero = jnp.zeros((), jnp.int32)
-        return jax.lax.dynamic_update_slice(
-            c, new.astype(c.dtype), (zero, pos, zero, zero))
-    oh = (jnp.arange(c.shape[1])[None, :] == pos_b[:, None])  # (B,S)
-    return jnp.where(oh[:, :, None, None], new.astype(c.dtype), c)
+    pos = jnp.asarray(pos)
+    new = new.astype(c.dtype)
+    zero = jnp.zeros((), jnp.int32)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice(c, new, (zero, pos, zero, zero))
+    return jax.vmap(
+        lambda cb, nb, p: jax.lax.dynamic_update_slice(
+            cb, nb, (p,) + (zero,) * (cb.ndim - 1))
+    )(c, new, pos.astype(jnp.int32))
 
 
 # ----------------------------------------------------------------------
@@ -621,6 +665,15 @@ def unembed(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
     else:
         w = p["tokens"].astype(ctx.dtype).T
     return jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+
+
+def gather_last(x: jax.Array, lengths: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, 1, d): per-row x[b, lengths[b] - 1].
+
+    The ragged-prefill replacement for ``x[:, -1:]`` — each sequence's
+    next-token position is its own last *valid* position."""
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1).astype(jnp.int32)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
 
 
 def cross_entropy(logits: jax.Array, targets: jax.Array,

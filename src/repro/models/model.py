@@ -8,6 +8,16 @@ the launcher / dry-run / tests treat every family identically:
     init_cache(batch, max_len, dtype)     -> decode cache pytree
     decode(params, cache, tokens, ctx)    -> (logits, new cache)
     prefill_logits(params, batch, ctx)    -> logits (prefill shape)
+    prefill(params, batch, ctx, max_len)  -> (logits, populated cache)
+
+`prefill` is the fused cache-populating prompt ingestion used by the
+serving engine (`repro.serve`): ONE jitted call per prompt instead of
+`prompt_len` decode dispatches.  `batch` is a dict with ``tokens``
+(B, S), optional ``lengths`` ((B,) ragged valid prefixes — attention /
+SSD steps beyond a row's prefix are masked, logits come from each
+row's last valid position, and ``cache["pos"]`` is the per-slot (B,)
+position vector) and optional ``frontend_embeds`` (vlm prefix /
+encdec source frames).
 """
 
 from __future__ import annotations
@@ -33,6 +43,7 @@ class Model:
     init_cache: Callable[..., Params]
     decode: Callable[..., tuple]
     prefill_logits: Callable[..., Any]
+    prefill: Callable[..., tuple]
 
 
 def _moe_mlp_fn(cfg: ModelConfig, ctx: Ctx):
@@ -54,6 +65,12 @@ def build_model(cfg: ModelConfig) -> Model:
                 frontend_embeds=batch.get("frontend_embeds"),
                 last_only=True)
 
+        def prefill_fn(params, batch, ctx, max_len):
+            return transformer.prefill(
+                params, batch["tokens"], cfg, ctx, max_len,
+                lengths=batch.get("lengths"),
+                frontend_embeds=batch.get("frontend_embeds"))
+
         return Model(
             cfg=cfg,
             init=functools.partial(transformer.init_params, cfg=cfg),
@@ -62,6 +79,7 @@ def build_model(cfg: ModelConfig) -> Model:
             decode=lambda params, cache, tokens, ctx: transformer.decode_step(
                 params, cache, tokens, cfg, ctx),
             prefill_logits=prefill_logits,
+            prefill=prefill_fn,
         )
 
     if fam == "moe":
@@ -84,9 +102,25 @@ def build_model(cfg: ModelConfig) -> Model:
             return transformer.decode_step(params, cache, tokens, cfg, ctx,
                                            mlp_fn=fn)
 
+        def prefill_fn(params, batch, ctx, max_len):
+            lens = batch.get("lengths")
+            if lens is None:
+                fn = _moe_mlp_fn(cfg, ctx)
+            else:
+                lens_i = jnp.asarray(lens, jnp.int32)
+
+                def fn(p, x):
+                    mask = (jnp.arange(x.shape[1])[None, :]
+                            < lens_i[:, None])
+                    return moe.moe_mlp(p, x, cfg, ctx, return_aux=True,
+                                       token_mask=mask)
+            return transformer.prefill(params, batch["tokens"], cfg, ctx,
+                                       max_len, mlp_fn=fn, lengths=lens)
+
         return Model(cfg=cfg, init=init, loss=loss,
                      init_cache=functools.partial(transformer.init_cache, cfg),
-                     decode=decode, prefill_logits=prefill_logits)
+                     decode=decode, prefill_logits=prefill_logits,
+                     prefill=prefill_fn)
 
     if fam == "ssm":
         return Model(
@@ -98,6 +132,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 params, cache, tokens, cfg, ctx),
             prefill_logits=lambda params, batch, ctx: ssm.forward(
                 params, batch["tokens"], cfg, ctx, last_only=True),
+            prefill=lambda params, batch, ctx, max_len: ssm.prefill(
+                params, batch["tokens"], cfg, ctx, max_len,
+                lengths=batch.get("lengths")),
         )
 
     if fam == "hybrid":
@@ -110,6 +147,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 params, cache, tokens, cfg, ctx),
             prefill_logits=lambda params, batch, ctx: hybrid.forward(
                 params, batch["tokens"], cfg, ctx, last_only=True),
+            prefill=lambda params, batch, ctx, max_len: hybrid.prefill(
+                params, batch["tokens"], cfg, ctx, max_len,
+                lengths=batch.get("lengths")),
         )
 
     if fam == "encdec":
@@ -123,6 +163,9 @@ def build_model(cfg: ModelConfig) -> Model:
             prefill_logits=lambda params, batch, ctx: encdec.forward(
                 params, batch["tokens"], batch["frontend_embeds"], cfg, ctx,
                 last_only=True),
+            prefill=lambda params, batch, ctx, max_len: encdec.prefill(
+                params, batch["tokens"], batch["frontend_embeds"], cfg, ctx,
+                max_len, lengths=batch.get("lengths")),
         )
 
     raise ValueError(f"unknown family {fam!r}")

@@ -44,13 +44,19 @@ def init_moe_mlp(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 
 def router_assignments(logits: jax.Array, k: int, capacity: int,
-                       n_experts: int):
+                       n_experts: int, token_valid: jax.Array | None = None):
     """Top-k routing with capacity.
 
     logits: (T, E) fp32.  Returns (slot (T*k,), gates (T*k,), keep (T*k,),
     tok_ids (T*k,), aux_loss scalar).  slot = e * C + rank for kept
     assignments (arbitrary dumped value otherwise — callers mask with
     `keep`).
+
+    ``token_valid`` ((T,) bool, ragged serving batches): invalid
+    (padding) tokens are dropped AND rank after every valid token
+    within their expert, so padding can never consume a capacity slot
+    a real token would have gotten — valid tokens route exactly as if
+    the padding were absent.
     """
     T, E = logits.shape
     probs = jax.nn.softmax(logits, axis=-1)
@@ -59,7 +65,14 @@ def router_assignments(logits: jax.Array, k: int, capacity: int,
 
     flat_e = expert_idx.reshape(-1)                          # (T*k,)
     tok_ids = jnp.arange(T * k) // k
-    order = jnp.argsort(flat_e, stable=True)
+    if token_valid is not None:
+        invalid = ~token_valid[tok_ids]
+        # sort key groups by expert (factor 2), invalid after valid
+        sort_key = flat_e * 2 + invalid.astype(flat_e.dtype)
+    else:
+        invalid = None
+        sort_key = flat_e
+    order = jnp.argsort(sort_key, stable=True)
     sorted_e = flat_e[order]
     counts = jnp.bincount(flat_e, length=E)
     starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
@@ -68,6 +81,8 @@ def router_assignments(logits: jax.Array, k: int, capacity: int,
     ranks = jnp.zeros((T * k,), jnp.int32).at[order].set(
         ranks_sorted.astype(jnp.int32))
     keep = ranks < capacity
+    if invalid is not None:
+        keep &= ~invalid
     slot = flat_e * capacity + ranks
 
     # load-balancing auxiliary loss (Switch): E * sum(f_e * p_e)
@@ -98,8 +113,12 @@ def _ep_constraint(t: jax.Array, ctx: Ctx, spec: tuple) -> jax.Array:
 
 
 def moe_mlp(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx,
-            *, return_aux: bool = False):
-    """x: (B, S, d) -> (B, S, d) through top-k experts."""
+            *, return_aux: bool = False,
+            token_mask: jax.Array | None = None):
+    """x: (B, S, d) -> (B, S, d) through top-k experts.
+
+    ``token_mask`` ((B, S) bool): ragged serving batches — padding
+    tokens neither consume expert capacity nor contribute output."""
     B, S, d = x.shape
     T = B * S
     E, k = cfg.n_experts, cfg.experts_per_token
@@ -107,7 +126,9 @@ def moe_mlp(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx,
     xf = x.reshape(T, d)
 
     logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
-    slot, gates, keep, tok_ids, aux = router_assignments(logits, k, C, E)
+    slot, gates, keep, tok_ids, aux = router_assignments(
+        logits, k, C, E,
+        token_valid=None if token_mask is None else token_mask.reshape(T))
 
     # dispatch: (E*C, d) buffers; dropped assignments go to a dump row
     dump = E * C

@@ -21,8 +21,8 @@ from repro.models import layers as L
 from repro.models.layers import Ctx, Params
 
 __all__ = ["ssd_chunked", "init_mamba", "mamba_forward", "mamba_decode",
-           "init_ssm_state", "init_params", "forward", "loss_fn",
-           "decode_step", "init_cache"]
+           "mamba_prefill", "init_ssm_state", "init_params", "forward",
+           "loss_fn", "decode_step", "init_cache", "prefill"]
 
 DEFAULT_CHUNK = 64
 
@@ -193,6 +193,45 @@ def mamba_forward(p: Params, u: jax.Array, cfg: ModelConfig, ctx: Ctx,
     return L.linear(p["out_proj"], y, ctx)
 
 
+def mamba_prefill(p: Params, u: jax.Array, cfg: ModelConfig, ctx: Ctx,
+                  *, lengths: jax.Array, chunk: int = DEFAULT_CHUNK
+                  ) -> tuple[jax.Array, Params]:
+    """One fused pass over the prompt, returning (y, decode state).
+
+    ``u``: (B, S, d) padded prompts; ``lengths``: (B,) valid prefixes.
+    Ragged batches ride the chunked SSD by making every step beyond a
+    row's valid prefix an exact identity on the state: ``dt`` is zeroed
+    there, so the decay is exp(0) = 1 and the input contribution
+    ``dt * x`` is 0 — ``h_final`` is each row's state at its own last
+    valid step, with zero extra work.  The conv decode window is the
+    last ``conv_kernel - 1`` *raw* (pre-activation) xbc rows before
+    each row's length, gathered per row (zeros where the prompt is
+    shorter than the window — the initial conv state).
+    """
+    B, S = u.shape[:2]
+    zxbcdt = L.linear(p["in_proj"], u, ctx)
+    z, xbc, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+    xbc_conv = _causal_conv(xbc, p["conv_w"].astype(ctx.dtype),
+                            p["conv_b"].astype(ctx.dtype))
+    xh, dt, a_log, b_, c_ = _ssm_inputs(p, xbc_conv, dt_raw, cfg)
+    valid = (jnp.arange(S)[None, :] < lengths[:, None])          # (B, S)
+    a_log = a_log * valid[..., None]
+    x_in = (xh * dt[..., None].astype(xh.dtype)
+            * valid[..., None, None].astype(xh.dtype))
+    y, h_final = ssd_chunked(x_in, a_log, b_, c_, chunk=chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, cfg.d_inner)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y, ctx)
+
+    ck = cfg.conv_kernel
+    idx = lengths[:, None] - (ck - 1) + jnp.arange(ck - 1)[None, :]
+    win = jnp.take_along_axis(
+        xbc.astype(jnp.float32), jnp.clip(idx, 0, S - 1)[..., None], axis=1)
+    win = jnp.where((idx >= 0)[..., None], win, 0.0)
+    return out, {"conv": win, "ssm": h_final}
+
+
 def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
     conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
     return {
@@ -282,6 +321,42 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         "ssm": jnp.zeros((cfg.n_layers,) + state["ssm"].shape, jnp.float32),
         "pos": jnp.zeros((), jnp.int32),
     }
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
+            max_len: int, *, lengths: jax.Array | None = None
+            ) -> tuple[jax.Array, Params]:
+    """Fused prompt ingestion: one chunked-SSD pass per layer instead of
+    ``prompt_len`` recurrent decode dispatches.
+
+    Returns (last-valid-position logits, decode cache).  With
+    ``lengths`` ((B,) ragged prompts), ``cache["pos"]`` is the per-slot
+    (B,) position vector; padded steps are exact identities on the
+    state (see :func:`mamba_prefill`).
+    """
+    del max_len  # O(1) state — the point of the SSM families
+    B, S0 = tokens.shape
+    lens = (jnp.full((B,), S0, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32))
+    if S0 % DEFAULT_CHUNK:
+        # always pad to a full chunk: masked steps are exact identities,
+        # and a FIXED chunk grid keeps the float summation order
+        # independent of the padded prompt length — engine buckets and
+        # lock-step batches produce bit-identical states for a request
+        S = -(-S0 // DEFAULT_CHUNK) * DEFAULT_CHUNK
+        tokens = jnp.pad(tokens, ((0, 0), (0, S - S0)))
+    x = L.embed(params["embed"], tokens, ctx)
+
+    def body(x, lp):
+        h = L.rms_norm(lp["norm"], x, cfg.norm_eps)
+        y, st = mamba_prefill(lp["mamba"], h, cfg, ctx, lengths=lens)
+        return x + y, st
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], L.gather_last(x, lens), ctx)
+    pos = jnp.asarray(S0, jnp.int32) if lengths is None else lens
+    return logits, {"conv": states["conv"], "ssm": states["ssm"], "pos": pos}
 
 
 def decode_step(params: Params, cache: Params, tokens: jax.Array,

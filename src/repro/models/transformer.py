@@ -192,13 +192,34 @@ def decode_step(params: Params, cache: Params, tokens: jax.Array,
 
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
-            max_len: int, *, mlp_fn: Callable | None = None
+            max_len: int, *, mlp_fn: Callable | None = None,
+            lengths: jax.Array | None = None,
+            frontend_embeds: jax.Array | None = None
             ) -> tuple[jax.Array, Params]:
-    """Run the prompt, returning last-position logits + populated cache."""
-    B, S = tokens.shape
+    """Run the prompt in ONE fused call: last-valid-position logits +
+    populated KV cache, i.e. prompt ingestion without `prompt_len`
+    decode dispatches.
+
+    ``lengths``: optional (B,) valid prompt lengths for ragged batches
+    (continuous-batching admission) — attention is masked per sequence,
+    each row's logits are taken at its own last valid position, and
+    the returned ``cache["pos"]`` is the (B,) per-slot write position.
+    Without ``lengths`` the historical uniform behavior is kept
+    (scalar ``pos``).  ``frontend_embeds`` (B, P, d) are prepended
+    (vlm/audio families); their P positions count toward the cache.
+    """
     x = L.embed(params["embed"], tokens, ctx)
+    n_front = 0
+    if frontend_embeds is not None:
+        n_front = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(ctx.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if S > max_len:
+        raise ValueError(f"prompt length {S} exceeds max_len {max_len}")
     positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
     hd = cfg.resolved_head_dim
+    lens = None if lengths is None else (
+        jnp.asarray(lengths, jnp.int32) + n_front)
 
     def scan_body(x, lp):
         h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
@@ -207,7 +228,7 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
         k = L.rope(k, positions, cfg.rope_theta)
         o = L._gqa_full(q, k, v, causal=True,
                         impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
-                        tiling=L.attn_tiling(ctx))
+                        tiling=L.attn_tiling(ctx), lengths=lens)
         x = x + L.linear(lp["attn"]["wo"],
                          o.reshape(B, S, cfg.n_heads * hd), ctx)
         h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
@@ -218,12 +239,18 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
 
     x, kv = jax.lax.scan(scan_body, x, params["layers"])
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.unembed(params["embed"], x[:, -1:], ctx)
+    if lens is None:
+        x_last = x[:, -1:]
+        pos = jnp.asarray(S, jnp.int32)
+    else:
+        x_last = L.gather_last(x, lens)
+        pos = lens
+    logits = L.unembed(params["embed"], x_last, ctx)
 
     pad = max_len - S
     cache = {
         "k": jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(ctx.dtype),
         "v": jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(ctx.dtype),
-        "pos": jnp.asarray(S, jnp.int32),
+        "pos": pos,
     }
     return logits, cache

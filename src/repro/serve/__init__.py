@@ -1,0 +1,33 @@
+"""Continuous-batching serving (`repro.serve`).
+
+The serving counterpart of the zero-stall kernels: decode is
+bandwidth-bound and batch-starved (TROOP's low-operational-intensity
+analysis; "Know your rooflines!", PAPERS.md), so the way to serve
+heavy traffic fast is to keep the decode batch full — admit new
+requests into freed slots every step (continuous batching) and ingest
+prompts in ONE fused ``Model.prefill`` call instead of ``prompt_len``
+lock-step dispatches.
+
+    from repro.serve import ServeEngine, Request
+
+    engine = ServeEngine(model, params, ctx, num_slots=8, max_len=256)
+    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=32)
+                          for i, p in enumerate(prompts)])
+
+Pieces:
+
+* :mod:`repro.serve.engine`  — `ServeEngine` (slots, admission,
+  streaming, throughput accounting) and the `lockstep_generate`
+  correctness oracle.
+* :mod:`repro.serve.request` — `Request` / `GenerationResult` types.
+
+Variable-length correctness rides the masked flash-attention path
+(:func:`repro.kernels.ops.attention` with per-sequence lengths), so
+ragged continuous batches stay on the Pallas kernel.
+"""
+
+from repro.serve.engine import ServeEngine, lockstep_generate
+from repro.serve.request import GenerationResult, Request
+
+__all__ = ["ServeEngine", "Request", "GenerationResult",
+           "lockstep_generate"]

@@ -1,0 +1,323 @@
+"""Continuous-batching serving engine.
+
+Replaces the lock-step serve loop: a request queue feeds a fixed pool
+of decode *slots*.  Each engine step (1) admits queued requests into
+free slots — one fused ``Model.prefill`` call per request populates
+that slot's stripe of the shared KV/state cache — and (2) runs ONE
+jitted decode step over all slots, so sequences of different lengths
+and arrival times decode together and a finished request's slot is
+refilled on the very next step instead of stalling the batch until its
+slowest member drains.
+
+Why this is family-agnostic: every family's cache is a pytree whose
+leaves carry the batch dimension *somewhere* (axis 1 for stacked-layer
+KV, axis 2 for the hybrid's grouped SSM states, axis 0 for ``pos``).
+The engine probes ``init_cache`` at two batch sizes once and records
+each leaf's batch axis, so slot insertion is a per-leaf
+``dynamic_update_slice_in_dim`` with no per-family code.  Per-slot
+decode depth rides the (B,) ``pos`` vector that ``Model.prefill``
+returns (rope offsets, causal masks and cache scatters are all
+per-row — see ``layers._scatter_at``).
+
+Determinism contract: greedy decode through the engine is
+token-for-token identical to :func:`lockstep_generate` for the
+row-independent families (dense/vlm, ssm, hybrid, encdec) — padding
+is masked to exact zeros, so bucket size and batch composition cannot
+leak into a request's logits.  MoE routing is batch-global (capacity
+competition), so MoE serves correctly but is not bit-matched to a
+differently-composed batch.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.request import GenerationResult, Request, SlotState
+
+__all__ = ["ServeEngine", "lockstep_generate"]
+
+
+def _vector_pos(cache: dict, batch: int) -> dict:
+    """Promote the scalar lock-step ``pos`` to the per-slot (B,) form."""
+    c = dict(cache)
+    c["pos"] = jnp.zeros((batch,), jnp.int32) + jnp.asarray(c["pos"],
+                                                            jnp.int32)
+    return c
+
+
+def _batch_axes(c1: Any, c2: Any) -> Any:
+    """Tree of per-leaf batch-axis indices, probed from two batch sizes."""
+    def axis_of(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"cannot locate batch axis: shapes {a.shape} vs {b.shape}")
+        return diffs[0]
+    return jax.tree.map(axis_of, c1, c2)
+
+
+class ServeEngine:
+    """Continuous-batching engine over a ``Model`` bundle.
+
+    Parameters
+    ----------
+    model, params, ctx : the ``build_model`` bundle, its params, and the
+        execution context (``ctx.impl`` selects jnp / pallas / interpret
+        exactly as everywhere else).
+    num_slots : decode batch width (the compiled decode shape).
+    max_len : per-slot cache capacity; every request must satisfy
+        ``len(prompt) [+ frontend] + max_new_tokens <= max_len``.
+    bucket_sizes : prompt pad lengths (one prefill compilation each);
+        defaults to powers of two from 8 up to ``max_len``.
+    eos_id : optional early-stop token id.
+    cache_kwargs : forwarded to ``model.init_cache`` (e.g. ``enc_len``
+        for the encdec family, which must be shared by all requests).
+    """
+
+    def __init__(self, model, params, ctx, *, num_slots: int = 4,
+                 max_len: int = 128, cache_dtype=jnp.float32,
+                 bucket_sizes: Sequence[int] | None = None,
+                 eos_id: int | None = None,
+                 cache_kwargs: dict | None = None):
+        self.model = model
+        self.params = params
+        self.ctx = ctx
+        self.num_slots = int(num_slots)
+        self.max_len = int(max_len)
+        self.eos_id = eos_id
+        kw = dict(cache_kwargs or {})
+
+        if bucket_sizes is None:
+            bucket_sizes, b = [], 8
+            while b < max_len:
+                bucket_sizes.append(b)
+                b *= 2
+            bucket_sizes.append(max_len)
+        self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
+
+        # probe each cache leaf's batch axis once (family-agnostic
+        # slots); eval_shape gets the shapes without allocating two
+        # throwaway cache-sized pytrees
+        def probe(b):
+            return _vector_pos(
+                model.init_cache(b, max_len, cache_dtype, **kw), b)
+        c1 = jax.eval_shape(lambda: probe(1))
+        c2 = jax.eval_shape(lambda: probe(2))
+        self._axes = _batch_axes(c1, c2)
+        self.cache = _vector_pos(
+            model.init_cache(self.num_slots, max_len, cache_dtype, **kw),
+            self.num_slots)
+
+        self._decode: Callable = jax.jit(
+            lambda p, c, t: model.decode(p, c, t, ctx), donate_argnums=(1,))
+        self._prefill: Callable = jax.jit(
+            lambda p, batch: model.prefill(p, batch, ctx, max_len))
+
+        self._pending: collections.deque[Request] = collections.deque()
+        self._slots: list[SlotState | None] = [None] * self.num_slots
+        self._results: dict[int, GenerationResult] = {}
+        self._step = 0
+        self.stats = {
+            "prefill_s": 0.0, "decode_s": 0.0,
+            "prefill_tokens": 0, "decode_tokens": 0,
+            "decode_steps": 0, "admitted": 0, "retired": 0,
+            "max_concurrent": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        budget = len(request.prompt) + request.max_new_tokens
+        if request.frontend_embeds is not None \
+                and self.model.cfg.family != "encdec":
+            budget += np.asarray(request.frontend_embeds).shape[0]
+        if budget > self.max_len:
+            raise ValueError(f"request {request.rid}: prompt + generation "
+                             f"({budget}) exceeds max_len {self.max_len}")
+        if request.rid in self._results or any(
+                s is not None and s.request.rid == request.rid
+                for s in self._slots):
+            raise ValueError(f"duplicate request id {request.rid}")
+        self._pending.append(request)
+
+    @property
+    def idle(self) -> bool:
+        return not self._pending and all(s is None for s in self._slots)
+
+    # ------------------------------------------------------------------
+    def _bucket(self, n: int, limit: int) -> int:
+        """Smallest bucket >= n, clamped to ``limit`` (submit() already
+        guarantees n <= limit, so the clamp stays a valid pad length —
+        frontend prefixes eat into the bucket budget, not the prompt)."""
+        for b in self.bucket_sizes:
+            if b >= n:
+                return min(b, limit)
+        raise ValueError(f"prompt length {n} exceeds the largest bucket "
+                         f"{self.bucket_sizes[-1]}")
+
+    def _admit(self, req: Request, slot: int) -> int:
+        """Fused prefill into ``slot``; returns the first sampled token."""
+        n = len(req.prompt)
+        n_front = 0
+        if req.frontend_embeds is not None \
+                and self.model.cfg.family != "encdec":
+            n_front = np.asarray(req.frontend_embeds).shape[0]
+        sb = self._bucket(n, self.max_len - n_front)
+        toks = np.zeros((1, sb), np.int32)
+        toks[0, :n] = req.prompt
+        batch = {"tokens": jnp.asarray(toks),
+                 "lengths": jnp.asarray([n], jnp.int32)}
+        if req.frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)[None]
+        logits, cache1 = self._prefill(self.params, batch)
+        tok = int(np.asarray(jnp.argmax(logits[0, -1], axis=-1)))
+
+        def insert(dst, src, ax):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=ax)
+
+        self.cache = jax.tree.map(insert, self.cache, cache1, self._axes)
+        return tok
+
+    def _retire(self, slot: int) -> None:
+        st = self._slots[slot]
+        self._results[st.request.rid] = GenerationResult(
+            rid=st.request.rid, prompt_len=len(st.request.prompt),
+            tokens=st.tokens, admitted_step=st.admitted_step,
+            finished_step=self._step)
+        self._slots[slot] = None
+        self.stats["retired"] += 1
+
+    def _done(self, st: SlotState, tok: int) -> bool:
+        return (len(st.tokens) >= st.request.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id))
+
+    # ------------------------------------------------------------------
+    def step(self) -> list[tuple[int, int]]:
+        """Admissions + one decode step.  Returns streamed (rid, token)
+        events in emission order."""
+        events: list[tuple[int, int]] = []
+        self._step += 1
+
+        for slot in range(self.num_slots):
+            if self._slots[slot] is not None or not self._pending:
+                continue
+            req = self._pending.popleft()
+            t0 = time.perf_counter()
+            tok = self._admit(req, slot)
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            self.stats["prefill_tokens"] += len(req.prompt)
+            self.stats["admitted"] += 1
+            st = SlotState(request=req, tokens=[tok], next_token=tok,
+                           admitted_step=self._step)
+            self._slots[slot] = st
+            events.append((req.rid, tok))
+            if self._done(st, tok):
+                self._retire(slot)
+
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
+                                           len(active))
+        if not active:
+            return events
+
+        toks = np.zeros((self.num_slots, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self._slots[i].next_token
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        new = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+
+        for i in active:
+            st = self._slots[i]
+            tok = int(new[i])
+            st.tokens.append(tok)
+            st.next_token = tok
+            self.stats["decode_tokens"] += 1
+            events.append((st.request.rid, tok))
+            if self._done(st, tok):
+                self._retire(i)
+        return events
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request] = (), *,
+            step_timeout_s: float | None = None,
+            on_token: Callable[[int, int], None] | None = None
+            ) -> dict[int, GenerationResult]:
+        """Drive until every submitted request has finished.
+
+        ``step_timeout_s``: hard per-step wall-clock budget (CI uses it
+        to turn a hung backend into a failure instead of a stall).
+        ``on_token``: streaming callback, called as tokens are emitted.
+        """
+        for r in requests:
+            self.submit(r)
+        while not self.idle:
+            t0 = time.perf_counter()
+            for rid, tok in self.step():
+                if on_token is not None:
+                    on_token(rid, tok)
+            dt = time.perf_counter() - t0
+            if step_timeout_s is not None and dt > step_timeout_s:
+                raise RuntimeError(
+                    f"engine step {self._step} took {dt:.1f}s "
+                    f"(> step_timeout_s={step_timeout_s})")
+        return dict(self._results)
+
+    # ------------------------------------------------------------------
+    def throughput(self) -> dict[str, float]:
+        """Prefill and decode throughput, reported separately — decode
+        is bandwidth-bound and prefill compute-bound (the roofline
+        framing), so a single blended tokens/s hides both."""
+        s = self.stats
+        return {
+            "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
+            "decode_tok_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+            "prefill_s": s["prefill_s"],
+            "decode_s": s["decode_s"],
+        }
+
+
+# ----------------------------------------------------------------------
+def lockstep_generate(model, params, ctx, prompts: Sequence[Sequence[int]],
+                      max_new_tokens: int | Sequence[int], *,
+                      max_len: int, frontend_embeds=None
+                      ) -> list[list[int]]:
+    """Greedy lock-step oracle: one ragged batch, fused prefill, then
+    synchronized decode.  The continuous-batching engine must match
+    this token-for-token per request (row-independent families)."""
+    B = len(prompts)
+    if isinstance(max_new_tokens, int):
+        max_new = [max_new_tokens] * B
+    else:
+        max_new = [int(m) for m in max_new_tokens]
+    lens = [len(p) for p in prompts]
+    S = max(lens)
+    toks = np.zeros((B, S), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :lens[i]] = list(p)
+    batch = {"tokens": jnp.asarray(toks),
+             "lengths": jnp.asarray(lens, jnp.int32)}
+    if frontend_embeds is not None:
+        batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+    logits, cache = model.prefill(params, batch, ctx, max_len)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    outs = [[int(t)] for t in np.asarray(tok)]
+    decode = jax.jit(lambda p, c, t: model.decode(p, c, t, ctx),
+                     donate_argnums=(1,))
+    for _ in range(max(max_new) - 1):
+        logits, cache = decode(params, cache, tok[:, None])
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for i, t in enumerate(np.asarray(tok)):
+            if len(outs[i]) < max_new[i]:
+                outs[i].append(int(t))
+    return outs

@@ -1,0 +1,49 @@
+"""Request/response types for the continuous-batching serving engine."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = ["Request", "GenerationResult", "SlotState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``prompt``: token ids (any int sequence).  ``max_new_tokens``
+    includes the token sampled from the prefill logits.
+    ``frontend_embeds``: optional (P, d) modality prefix (vlm) or
+    (S_enc, d) source frames (encdec) — families that need them.
+    """
+    rid: int
+    prompt: tuple[int, ...]
+    max_new_tokens: int
+    frontend_embeds: Any = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
+        if len(self.prompt) == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """Completed request: generated ids plus per-request accounting."""
+    rid: int
+    prompt_len: int
+    tokens: list[int]
+    admitted_step: int
+    finished_step: int
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Book-keeping for one occupied decode slot."""
+    request: Request
+    tokens: list[int]
+    next_token: int
+    admitted_step: int

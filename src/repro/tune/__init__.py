@@ -111,8 +111,11 @@ def best_attention_config(s_q: int, s_kv: int, head_dim: int, *,
 
     The revolving buffer of attention is the grid pipeline itself
     (BlockSpec-driven), so the search axes are just the q/kv tile
-    sizes; candidates must divide the sequence lengths (ops.attention
-    falls back to the reference path otherwise) and fit VMEM.
+    sizes.  ``ops.attention`` zero-pads ragged sequence lengths up to
+    the chosen tile and masks via the per-sequence length operands, so
+    any tile that fits VMEM is legal — the cost estimate charges the
+    padded (ceil) tile counts, which steers the search away from tiles
+    that would mostly compute padding on serving shapes.
     """
     name, itemsize = _dtype_info(dtype)
     space = space or space_for_backend(backend)
@@ -121,16 +124,9 @@ def best_attention_config(s_q: int, s_kv: int, head_dim: int, *,
                       K=int(s_kv), dtype_bytes=itemsize)
     key = TuneCache.key(problem, backend=backend, dtype=name)
 
-    def usable(t: int, s: int) -> bool:
-        # min(t, s) is what ops.attention will run; it must divide s
-        return s % min(t, s) == 0
-
     if not force:
         hit = cache.get(key)
-        # keys are shape-bucketed: a hit tuned for another shape in the
-        # bucket may not divide *these* sequence lengths — re-validate,
-        # else ops.attention would silently fall back to the ref path
-        if (hit is not None and usable(hit.bm, s_q) and usable(hit.bn, s_kv)
+        if (hit is not None
                 and space.fits_vmem_attention(hit.bm, hit.bn, head_dim,
                                               itemsize)):
             return hit.bm, hit.bn
@@ -139,10 +135,10 @@ def best_attention_config(s_q: int, s_kv: int, head_dim: int, *,
     best, best_t = None, float("inf")
     for bq in space.tile_options:
         for bkv in space.tile_options:
-            if not (usable(bq, s_q) and usable(bkv, s_kv)):
-                continue
             if not space.fits_vmem_attention(bq, bkv, head_dim, itemsize):
                 continue
+            # ops.attention runs min(tile, S) and pads S up to it; the
+            # estimate's ceil() tile counts charge the padded schedule.
             t = oracle.estimate_attention(
                 min(bq, s_q), min(bkv, s_kv), s_q=s_q, s_kv=s_kv,
                 head_dim=head_dim, dtype_bytes=itemsize,

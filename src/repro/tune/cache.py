@@ -65,14 +65,7 @@ class TuneCache:
     # ------------------------------------------------------------------
     def _load(self) -> dict[str, dict]:
         if self._entries is None:
-            try:
-                raw = json.loads(self.path.read_text())
-                if raw.get("schema") == self.SCHEMA:
-                    self._entries = dict(raw.get("entries", {}))
-                else:
-                    self._entries = {}
-            except (OSError, ValueError):
-                self._entries = {}
+            self._entries = self._read_disk()
         return self._entries
 
     def get(self, key: str) -> Candidate | None:
@@ -92,12 +85,32 @@ class TuneCache:
         entries[key] = rec
         self.save()
 
+    def _read_disk(self) -> dict[str, dict]:
+        """Current on-disk entries (empty on missing/corrupt/old schema)."""
+        try:
+            raw = json.loads(self.path.read_text())
+            if raw.get("schema") == self.SCHEMA:
+                return dict(raw.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        return {}
+
     def save(self) -> None:
-        """Atomic write; failures are swallowed (cache is best-effort)."""
+        """Atomic merge-write; failures are swallowed (cache is best-effort).
+
+        The file is re-read and merged immediately before the write:
+        concurrent tuners (e.g. several serving processes tuning
+        disjoint shapes) each rewrite the whole file, and a plain dump
+        of the in-memory dict would be last-writer-wins — dropping
+        every entry the other processes added since our lazy load.
+        Our own entries take precedence on key collisions (the search
+        is deterministic, so collisions carry equal candidates anyway).
+        """
         if self._entries is None:
             return
         try:
             self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._entries = {**self._read_disk(), **self._entries}
             payload = json.dumps(
                 {"schema": self.SCHEMA, "entries": self._entries},
                 indent=1, sort_keys=True)

@@ -1,0 +1,351 @@
+"""Continuous-batching serving engine + variable-length masked attention.
+
+Three correctness pillars:
+
+1. Masked flash attention == lengths-aware reference on ragged lengths,
+   including the first-block-fully-masked regression (the `p = exp(0)`
+   corruption: with the running max still at NEG_INF, every masked
+   entry used to contribute exp(0) == 1 to l/acc).
+2. The continuous-batching engine admits/retires requests through a
+   small slot pool and matches a lock-step oracle token-for-token —
+   the strongest end-to-end check of per-slot positions, ragged
+   prefill, and cache insertion across model families.
+3. TuneCache merges on-disk entries at save time (concurrent tuners
+   must not drop each other's results).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention
+from repro.models import Ctx, build_model
+from repro.models import layers as L
+from repro.serve import Request, ServeEngine, lockstep_generate
+
+KEY = jax.random.PRNGKey(0)
+CTX = Ctx(impl="jnp", dtype=jnp.float32)
+
+
+def _qkv(B=2, H=2, S=48, D=16, T=None):
+    T = T or S
+    kq, kk, kv = jax.random.split(KEY, 3)
+    return (jax.random.normal(kq, (B, H, S, D), jnp.float32),
+            jax.random.normal(kk, (B, H, T, D), jnp.float32),
+            jax.random.normal(kv, (B, H, T, D), jnp.float32))
+
+
+def _prompts(vocab, lens=(5, 11, 3, 8)):
+    return [list(np.random.default_rng(i).integers(0, vocab, n))
+            for i, n in enumerate(lens)]
+
+
+# ----------------------------------------------------------------------
+# masked flash attention
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("causal", [True, False])
+def test_masked_flash_matches_ref_ragged(causal):
+    q, k, v = _qkv()
+    lens = jnp.array([37, 5], jnp.int32)
+    got = flash_attention(q, k, v, q_lens=lens, kv_lens=lens,
+                          bq=16, bkv=16, causal=causal, interpret=True)
+    want = _ref.flash_attention_ref(q, k, v, causal=causal,
+                                    q_lens=lens, kv_lens=lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # rows beyond a sequence's length are exact zeros
+    assert bool(jnp.all(got[0, :, 37:] == 0.0))
+    assert bool(jnp.all(got[1, :, 5:] == 0.0))
+
+
+def test_fully_masked_first_block_regression():
+    """kv_len == 0: every block is fully masked from the first one on.
+
+    The old kernel computed p = exp(s - m_new) = exp(NEG_INF - NEG_INF)
+    = 1 for every masked entry, so l accumulated to S_kv and the output
+    became mean(v) instead of zeros.  The guard predicates p on
+    m_new > NEG_INF; this test fails on the unguarded kernel.
+    """
+    q, k, v = _qkv(B=2, H=1, S=16, D=8)
+    got = flash_attention(q, k, v,
+                          q_lens=jnp.array([16, 16], jnp.int32),
+                          kv_lens=jnp.array([0, 16], jnp.int32),
+                          bq=8, bkv=8, causal=False, interpret=True)
+    # fully-masked sequence: exact zeros (NOT mean(v), which the p=1
+    # bug produced — mean(v) of gaussian v is nonzero w.p. 1)
+    assert bool(jnp.all(got[0] == 0.0))
+    want = _ref.flash_attention_ref(q[1:], k[1:], v[1:], causal=False)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_blocks_after_valid_prefix():
+    """Blocks fully masked AFTER a valid prefix (the common ragged case:
+    kv_len inside the first of several tiles)."""
+    q, k, v = _qkv(B=1, H=1, S=32, D=8)
+    lens = jnp.array([5], jnp.int32)
+    got = flash_attention(q, k, v, q_lens=lens, kv_lens=lens,
+                          bq=8, bkv=8, causal=True, interpret=True)
+    want = _ref.flash_attention_ref(q, k, v, causal=True,
+                                    q_lens=lens, kv_lens=lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_attention_pads_instead_of_fallback(monkeypatch):
+    """Non-tile-multiple lengths must stay on the Pallas kernel now."""
+    def boom(*a, **kw):
+        raise AssertionError("jnp reference fallback taken")
+    monkeypatch.setattr(ops._ref, "flash_attention_ref", boom)
+    q, k, v = _qkv(B=2, H=2, S=40, D=16)
+    got = ops.attention(q, k, v, impl="interpret", causal=True,
+                        tiling=(16, 16))
+    monkeypatch.undo()
+    want = _ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_attention_warns_on_remaining_fallback():
+    # causal Sq != Skv without lengths is the one intentionally kept
+    # fallback (kernel/ref causal alignment differs there)
+    q, k, v = _qkv(B=1, H=1, S=16, D=8, T=32)
+    ops._FALLBACK_WARNED.clear()
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        ops.attention(q, k, v, impl="interpret", causal=True,
+                      tiling=(8, 8))
+
+
+def test_scatter_at_per_row_positions():
+    """(B,) positions write each row at its OWN index (the old code
+    collapsed them to pos[0])."""
+    c = jnp.zeros((3, 8, 2, 4))
+    new = jnp.ones((3, 1, 2, 4))
+    pos = jnp.array([1, 5, 7], jnp.int32)
+    out = np.asarray(L._scatter_at(c, new, pos))
+    for b, p in enumerate([1, 5, 7]):
+        assert (out[b, p] == 1.0).all()
+        mask = np.ones(8, bool)
+        mask[p] = False
+        assert (out[b, mask] == 0.0).all()
+
+
+# ----------------------------------------------------------------------
+# Model.prefill == lock-step prompt decode (cache + logits parity)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["gemma-7b", "olmoe-1b-7b", "mamba2-130m",
+                                  "zamba2-2.7b", "seamless-m4t-large-v2"])
+def test_prefill_matches_decode_loop(arch):
+    """Fused prefill must land in the same state as feeding the prompt
+    through the decode path token by token (uniform lengths)."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    B, S, max_len = 2, 12, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens,
+             "lengths": jnp.full((B,), S, jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frontend_embeds"] = jax.random.normal(
+            KEY, (B, 10, cfg.d_model)) * 0.1
+    logits_p, cache_p = model.prefill(params, batch, CTX, max_len)
+
+    cache_l = model.init_cache(B, max_len, jnp.float32)
+    if cfg.family == "encdec":
+        # lock-step priming of the cross-attention KV (what prefill
+        # now does as part of its contract)
+        from repro.models import encdec
+        enc_out = encdec.encode(params, batch["frontend_embeds"], cfg, CTX)
+        ck, cv = [], []
+        for i in range(cfg.decoder_layers):
+            lp = jax.tree.map(lambda x: x[i], params["decoder"])
+            k, v = encdec._enc_kv(lp["cross_attn"], enc_out, cfg, CTX)
+            ck.append(k)
+            cv.append(v)
+        cache_l = dict(cache_l)
+        cache_l["cross_k"] = jnp.stack(ck)
+        cache_l["cross_v"] = jnp.stack(cv)
+    logits_l = None
+    for t in range(S):
+        logits_l, cache_l = model.decode(params, cache_l,
+                                         tokens[:, t:t + 1], CTX)
+
+    if cfg.family == "moe":
+        # MoE routing capacity is batch-global: prefill (T = B*S) and
+        # per-token decode (T = B) route differently by construction;
+        # assert the call contract only.
+        assert logits_p.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits_p)))
+        return
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(logits_l),
+                               rtol=2e-4, atol=2e-4)
+    # the caches must be interchangeable: decode one more token from each
+    nxt = jnp.full((B, 1), 3, jnp.int32)
+    n_p, _ = model.decode(params, cache_p, nxt, CTX)
+    n_l, _ = model.decode(params, cache_l, nxt, CTX)
+    np.testing.assert_allclose(np.asarray(n_p), np.asarray(n_l),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# continuous batching vs lock-step oracle
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["gemma-7b", "mamba2-130m", "zamba2-2.7b"])
+def test_engine_matches_lockstep_oracle(arch):
+    """Mixed prompt lengths, differing generation lengths, 2 slots for
+    4 requests — admission into freed slots must be token-for-token
+    identical to decoding everything lock-step in one ragged batch."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompts = _prompts(cfg.vocab_size)
+    max_new = [6, 3, 5, 4]
+    engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(zip(prompts, max_new))]
+    results = engine.run(reqs, step_timeout_s=300.0)
+    oracle = lockstep_generate(model, params, CTX, prompts, max_new,
+                               max_len=32)
+    for i in range(4):
+        assert results[i].tokens == oracle[i], (
+            f"request {i}: {results[i].tokens} != {oracle[i]}")
+    # slot-pool accounting: 4 admissions through <= 2 concurrent slots
+    assert engine.stats["admitted"] == 4
+    assert engine.stats["retired"] == 4
+    assert engine.stats["max_concurrent"] <= 2
+    assert engine.stats["prefill_tokens"] == sum(len(p) for p in prompts)
+
+
+def test_engine_matches_lockstep_encdec():
+    cfg = get_config("seamless-m4t-large-v2", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    S_enc = 12
+    frames = np.asarray(
+        jax.random.normal(KEY, (4, S_enc, cfg.d_model)) * 0.1)
+    prompts = _prompts(cfg.vocab_size)
+    max_new = [6, 3, 5, 4]
+    engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32,
+                         cache_kwargs={"enc_len": S_enc})
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=m,
+                    frontend_embeds=frames[i])
+            for i, (p, m) in enumerate(zip(prompts, max_new))]
+    results = engine.run(reqs)
+    oracle = lockstep_generate(model, params, CTX, prompts, max_new,
+                               max_len=32, frontend_embeds=frames)
+    for i in range(4):
+        assert results[i].tokens == oracle[i]
+
+
+def test_engine_interpret_stays_on_pallas(monkeypatch):
+    """The acceptance shape: ragged continuous batch under
+    impl="interpret" runs the Pallas flash kernel end to end (the jnp
+    reference is monkeypatched to explode) and matches the jnp-path
+    lock-step oracle token-for-token."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompts = _prompts(cfg.vocab_size)
+    ctx_i = Ctx(impl="interpret", dtype=jnp.float32, tiling=None)
+
+    def boom(*a, **kw):
+        raise AssertionError("jnp reference fallback taken on the "
+                             "interpret serving path")
+    monkeypatch.setattr(ops._ref, "flash_attention_ref", boom)
+    engine = ServeEngine(model, params, ctx_i, num_slots=2, max_len=32)
+    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=3)
+                          for i, p in enumerate(prompts)])
+    monkeypatch.undo()
+    oracle = lockstep_generate(model, params, CTX, prompts, 3, max_len=32)
+    for i in range(4):
+        assert results[i].tokens == oracle[i]
+
+
+def test_engine_moe_serves():
+    """MoE: continuous batching runs end-to-end (token-for-token vs a
+    differently-composed batch is out of contract — routing capacity
+    is batch-global)."""
+    cfg = get_config("olmoe-1b-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompts = _prompts(cfg.vocab_size)
+    engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32)
+    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=4)
+                          for i, p in enumerate(prompts)])
+    assert all(len(results[i].tokens) == 4 for i in range(4))
+
+
+def test_engine_vlm_tight_max_len():
+    """Frontend prefix must eat into the prefill bucket budget: with
+    max_len sized exactly to prompt + frontend + gen, admission used to
+    pad the prompt to a power-of-two bucket and blow past max_len."""
+    cfg = get_config("llava-next-34b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompt_len, gen = 24, 4
+    max_len = prompt_len + cfg.frontend_tokens + gen
+    fe = np.asarray(jax.random.normal(
+        KEY, (2, cfg.frontend_tokens, cfg.d_model)) * 0.1)
+    prompts = _prompts(cfg.vocab_size, lens=(prompt_len, 13))[:2]
+    engine = ServeEngine(model, params, CTX, num_slots=2, max_len=max_len)
+    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=gen,
+                                  frontend_embeds=fe[i])
+                          for i, p in enumerate(prompts)])
+    oracle = lockstep_generate(model, params, CTX, prompts, gen,
+                               max_len=max_len, frontend_embeds=fe)
+    for i in range(2):
+        assert results[i].tokens == oracle[i]
+
+
+def test_engine_rejects_oversized_request():
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    engine = ServeEngine(model, params, CTX, num_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        engine.submit(Request(rid=0, prompt=[1] * 10, max_new_tokens=10))
+
+
+def test_serve_batch_reports_split_throughput():
+    from repro.launch.serve import serve_batch
+    out = serve_batch("gemma-7b", reduced=True, batch=4, prompt_len=8,
+                      gen_len=4, num_slots=2, mixed=True)
+    assert out["generated"].shape == (4, 4)
+    assert (np.asarray(out["generated"]) >= 0).all()   # all slots filled
+    assert out["prefill_s"] > 0 and out["decode_s"] > 0
+    assert out["prefill_tok_s"] > 0 and out["decode_tok_s"] > 0
+    # no wasted trailing decode step: N tokens need N-1 decode steps for
+    # the longest-lived slot cohort (first token comes from prefill)
+    assert out["stats"]["decode_tokens"] < 4 * 4
+
+
+# ----------------------------------------------------------------------
+# tune cache concurrency
+# ----------------------------------------------------------------------
+def test_tunecache_concurrent_merge(tmp_path):
+    from repro.tune import Candidate, TuneCache
+    path = os.path.join(tmp_path, "tune.json")
+    a, b = TuneCache(path), TuneCache(path)
+    cand = Candidate(bm=128, bn=128, bk=128, slots=2, grid_order="ijk")
+    a._load()
+    b._load()           # both lazily loaded BEFORE either writes
+    a.put("ka", cand)
+    b.put("kb", cand)   # pre-fix: rewrote the file from b's dict, dropping ka
+    fresh = TuneCache(path)
+    assert fresh.get("ka") is not None
+    assert fresh.get("kb") is not None
+
+
+def test_host_tiled_matmul_raises_not_asserts():
+    a = jnp.zeros((100, 128))
+    b = jnp.zeros((128, 128))
+    with pytest.raises(ValueError, match="not tiled"):
+        ops.host_tiled_matmul(a, b)
