@@ -1,0 +1,137 @@
+"""int8 vs bf16 through the zero-stall engine: the precision-shifted
+roofline, plus measured accuracy and throughput on the reduced zoo.
+
+Section 1 (analytic, CSV): for every registered architecture's
+dominant GEMMs, the tuned bf16 configuration vs the tuned int8
+configuration — predicted MXU utilization and speedup from
+:class:`repro.core.cyclemodel.TpuPipelineModel` with the per-width
+peak (int8 doubles the MXU rate and halves every revolving-buffer
+DMA byte, so the same GEMM moves toward compute-bound and the legal
+tile space grows; `docs/ARCHITECTURE.md` §Quantization).
+
+Section 2 (measured, CSV): per model family on the reduced configs —
+max relative logit error of the W8A8 path vs full precision, and
+serve-engine decode throughput on full-precision vs quantized params.
+Throughput runs the jnp path on the container CPU, so the tok/s DELTA
+is directional only (CPU int8 einsums are not MXU int8); the accuracy
+column is exact.
+
+Run: ``PYTHONPATH=src python -m benchmarks.quant_report [--smoke]``
+(--smoke limits section 2 to two families and shortens generation —
+the CI budget).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+SERVE_ARCHS = ("gemma-7b", "mamba2-130m")   # one attention, one SSM family
+ACCURACY_ARCHS = ("gemma-7b", "olmoe-1b-7b", "mamba2-130m", "zamba2-2.7b",
+                  "seamless-m4t-large-v2")
+
+
+def analytic_section(batch_tokens: int = 8192) -> None:
+    from repro import tune
+    from repro.configs import get_config, list_configs
+    from repro.core.cyclemodel import TpuPipelineModel
+    from repro.tune import AnalyticOracle, Problem, TuneCache
+    from benchmarks.autotune_report import _gemms_for
+
+    model = TpuPipelineModel()
+    oracle = AnalyticOracle()
+    cache = TuneCache()
+
+    def estimate(p: Problem):
+        cand = tune.autotune(p, backend="pallas",
+                             dtype_name="bfloat16" if p.dtype_bytes == 2
+                             else "int8", oracle=oracle, cache=cache)
+        est = model.matmul(p.M, p.N, p.K, cand.bm, cand.bn, cand.bk,
+                           dtype_bytes=p.dtype_bytes, slots=cand.slots,
+                           dma_cv=oracle.dma_cv)
+        return cand, est
+
+    print("# section=analytic")
+    print("arch,gemm,M,N,K,bf16_util,int8_util,int8_config,pred_speedup")
+    for arch in list_configs():
+        cfg = get_config(arch)
+        for name, M, N, K, groups in _gemms_for(cfg, batch_tokens):
+            op = "grouped_matmul" if groups > 1 else "matmul"
+            _, e16 = estimate(Problem(op, M, N, K, dtype_bytes=2,
+                                      groups=groups))
+            c8, e8 = estimate(Problem(op, M, N, K, dtype_bytes=1,
+                                      groups=groups))
+            cfg_s = f"{c8.bm}x{c8.bn}x{c8.bk}/s{c8.slots}"
+            print(f"{arch},{name},{M},{N},{K},{e16.mxu_utilization:.3f},"
+                  f"{e8.mxu_utilization:.3f},{cfg_s},"
+                  f"{e16.total_s / e8.total_s:.3f}")
+
+
+def _logit_err(model, params, qparams, cfg, ctx_f, ctx_q):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        batch["frontend_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(0), (B, 10, cfg.d_model)) * 0.1
+    lf = np.asarray(model.prefill_logits(params, batch, ctx_f))
+    lq = np.asarray(model.prefill_logits(qparams, batch, ctx_q))
+    return float(np.abs(lq - lf).max() / (np.abs(lf).max() + 1e-9))
+
+
+def _decode_tok_s(model, params, ctx, cfg, gen_len: int) -> float:
+    import numpy as np
+    from repro.serve import Request, ServeEngine
+    prompts = [list(np.random.default_rng(i).integers(0, cfg.vocab_size, n))
+               for i, n in enumerate((5, 11, 3, 8))]
+    engine = ServeEngine(model, params, ctx, num_slots=2, max_len=64)
+    engine.run([Request(rid=i, prompt=p, max_new_tokens=gen_len)
+                for i, p in enumerate(prompts)])
+    return engine.throughput()["decode_tok_s"]
+
+
+def measured_section(archs, gen_len: int = 8) -> None:
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import Ctx, build_model
+    import jax
+
+    print("# section=measured (reduced configs, jnp path on CPU; tok/s "
+          "directional)")
+    print("arch,family,max_rel_logit_err,fp_decode_tok_s,int8_decode_tok_s")
+    ctx_f = Ctx(impl="jnp", dtype=jnp.float32)
+    ctx_q = Ctx(impl="jnp", dtype=jnp.float32, quant="int8")
+    for arch in archs:
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        qparams = model.quantize_weights(params)
+        err = _logit_err(model, params, qparams, cfg, ctx_f, ctx_q)
+        if arch in SERVE_ARCHS:
+            tok_f = _decode_tok_s(model, params, ctx_f, cfg, gen_len)
+            tok_q = _decode_tok_s(model, qparams, ctx_q, cfg, gen_len)
+            print(f"{arch},{cfg.family},{err:.4f},{tok_f:.1f},{tok_q:.1f}")
+        else:
+            print(f"{arch},{cfg.family},{err:.4f},,")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI budget: fewer archs, shorter generation")
+    ap.add_argument("--skip-analytic", action="store_true")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    if not args.skip_analytic:
+        analytic_section()
+    archs = SERVE_ARCHS if args.smoke else ACCURACY_ARCHS
+    measured_section(archs, gen_len=4 if args.smoke else 8)
+    print(f"# wall_s={time.perf_counter() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Fail CI on broken intra-repo markdown links.
+
+Scans every tracked ``*.md`` file for ``[text](target)`` links and
+verifies that relative targets resolve to an existing file or
+directory (anchors are stripped; external ``http(s)``/``mailto``
+links are out of scope — this guards the repo's own cross-references,
+e.g. README <-> docs/ARCHITECTURE.md <-> module sources).
+
+Exit status: 0 when every intra-repo link resolves, 1 otherwise
+(each broken link is printed as ``file:line: target``).
+
+Run from the repo root: ``python scripts/check_links.py``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target without spaces/parens; images too (![alt](x))
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        hidden = {p for p in path.parts if p.startswith(".") and p != "."}
+        if hidden - {".github"}:
+            continue                      # skip .git etc.; .github is scanned
+        yield path
+
+
+def check(root: Path) -> list[str]:
+    errors = []
+    for md in iter_markdown(root):
+        in_fence = False
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+            if in_fence:
+                continue                  # code blocks are not links
+            for m in _LINK.finditer(line):
+                target = m.group(1).split("#", 1)[0]
+                if not target or target.startswith(_EXTERNAL):
+                    continue
+                resolved = (md.parent / target).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md.relative_to(root)}:{lineno}: "
+                                  f"{m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for e in errors:
+        print(f"broken link: {e}", file=sys.stderr)
+    print(f"checked markdown links under {root}: "
+          f"{'OK' if not errors else f'{len(errors)} broken'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,15 @@
+"""Checkpointing (`repro.checkpoint`).
+
+:class:`Checkpointer`: async (background-thread IO behind a
+synchronous device→host snapshot), atomic (tmp-dir + rename publish),
+keep-k garbage collected, and resharding-on-restore — checkpoints
+store logical unsharded leaves + the pytree manifest, so a 512-chip
+checkpoint restores onto any mesh (the elastic re-mesh path of
+:mod:`repro.runtime`).  Works on any params pytree, including
+quantized :class:`repro.quant.QTensor` weights (their int8 codes and
+scales are ordinary leaves).
+"""
+
 from repro.checkpoint.checkpointer import Checkpointer
 
 __all__ = ["Checkpointer"]

@@ -1,3 +1,15 @@
+"""Architecture registry (`repro.configs`).
+
+One module per assigned architecture (``gemma_7b.py``, ``olmoe_1b_7b.py``,
+...), each registering a full :class:`ModelConfig` with the exact
+published dimensions AND a ``reduced()`` smoke variant of the same
+family — tests and CI exercise real code paths at toy sizes via
+``get_config(name, reduced=True)``.  :data:`SHAPES` is the global
+workload registry (train_4k / prefill_32k / decode_32k / long_500k)
+and :func:`input_specs` builds allocation-free ShapeDtypeStruct
+stand-ins for the dry-run.
+"""
+
 from repro.configs.base import (
     SHAPES,
     ModelConfig,

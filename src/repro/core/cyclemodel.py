@@ -316,6 +316,10 @@ class TpuParams:
     """TPU v5e-class single-chip constants (public figures)."""
 
     peak_flops: float = 197e12        # bf16 FLOP/s
+    peak_flops_int8: float = 394e12   # int8 OP/s (the MXU doubles rate
+                                      # at 1-byte operands — v5e public
+                                      # spec; precision shifts the
+                                      # roofline, PAPERS.md)
     hbm_bw: float = 819e9             # B/s
     vmem_bytes: int = 128 * 1024 * 1024
     ici_bw: float = 50e9              # B/s per link
@@ -323,6 +327,10 @@ class TpuParams:
     # the grid sequencer (host-driven dispatch / fori_loop bookkeeping).
     host_step_overhead_s: float = 2e-6
     grid_step_overhead_s: float = 0.0  # ZONL analogue: zero
+
+    def peak_for(self, dtype_bytes: int) -> float:
+        """Compute roof for an operand width (1 byte -> int8 rate)."""
+        return self.peak_flops_int8 if dtype_bytes == 1 else self.peak_flops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -411,7 +419,10 @@ class TpuPipelineModel:
         c_b = bm * bn * dtype_bytes
         t_dma_step = a_b / self.p.hbm_bw
         t_dma_c = c_b / self.p.hbm_bw
-        t_comp_step = (2 * bm * bn * bk) / self.p.peak_flops
+        # dtype widens/narrows BOTH terms: bytes through dtype_bytes,
+        # compute through the per-width MXU roof — int8 halves the DMA
+        # and doubles the rate, so the same tile shifts compute-bound.
+        t_comp_step = (2 * bm * bn * bk) / self.p.peak_for(dtype_bytes)
         oh = self.p.grid_step_overhead_s if grid_loop else self.p.host_step_overhead_s
 
         if slots >= 2:

@@ -1,3 +1,12 @@
+"""Input pipeline (`repro.data`).
+
+Deterministic synthetic token streams shaped like the real workloads
+(seeded per step, so restarts and elastic re-meshes replay the same
+batches) — the container stands in for a distributed data service;
+the interface (:func:`make_pipeline` yielding device-ready batches)
+is what the train launcher programs against.
+"""
+
 from repro.data.pipeline import DataConfig, SyntheticTokenPipeline, make_pipeline
 
 __all__ = ["DataConfig", "SyntheticTokenPipeline", "make_pipeline"]

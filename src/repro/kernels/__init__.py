@@ -2,17 +2,22 @@
 
 zero_stall_matmul — the paper's technique (dobu N-slot VMEM revolving
 buffer + grid loop nest); grouped_matmul — same machinery for MoE
-experts; flash_attention — blocked online-softmax attention.  Each has
-a pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py.
+experts; quantized_matmul — the int8 (W8A8) variants of both, same
+revolving schedule with exact int32 accumulation and a fused dequant
+epilogue; flash_attention — blocked online-softmax attention.  Each
+has a pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py.
 Execution configuration (tile sizes, buffer depth, grid order) is
-searched per problem shape by :mod:`repro.tune` — pass
+searched per problem shape and dtype by :mod:`repro.tune` — pass
 ``tiling="auto"`` to the ops wrappers.
 """
 
 from repro.kernels import ops, ref
 from repro.kernels.zero_stall_matmul import zero_stall_matmul
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
+from repro.kernels.quantized_matmul import (
+    quantized_grouped_zero_stall_matmul, quantized_zero_stall_matmul)
 from repro.kernels.flash_attention import flash_attention
 
 __all__ = ["ops", "ref", "zero_stall_matmul", "grouped_zero_stall_matmul",
-           "flash_attention"]
+           "quantized_zero_stall_matmul",
+           "quantized_grouped_zero_stall_matmul", "flash_attention"]

@@ -38,13 +38,22 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.zero_stall_matmul import zero_stall_matmul
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
+from repro.kernels.quantized_matmul import (
+    quantized_grouped_zero_stall_matmul, quantized_zero_stall_matmul)
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.quant.tensor import QTensor, quantize_rows
 
 __all__ = ["matmul", "grouped_matmul", "attention", "host_tiled_matmul",
-           "resolve_impl"]
+           "quantized_matmul", "quantized_grouped_matmul", "resolve_impl"]
 
 
 def resolve_impl(impl: str) -> str:
+    """Resolve the ``impl="auto"`` vocabulary to a concrete backend.
+
+    "auto" means: the Pallas zero-stall kernels when a TPU backs the
+    process, the identical-math jnp reference otherwise (tests and the
+    dry-run); "pallas" / "interpret" / "jnp" pass through unchanged.
+    """
     if impl != "auto":
         return impl
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -82,7 +91,17 @@ def matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
            variant: str = "dobu", slots: int | None = None,
            grid_order: str = "ijk", tiling=None,
            out_dtype=None) -> jax.Array:
-    """C = A @ B through the zero-stall engine."""
+    """C = A @ B through the zero-stall engine.
+
+    The workhorse entry point: every linear layer in the model zoo
+    routes here (``models.layers.linear``).  ``impl`` selects the
+    backend (see :func:`resolve_impl`), ``tiling`` the execution
+    configuration (None = historical 128³/2-slot, "auto" =
+    :mod:`repro.tune`, or an explicit ``(bm, bn, bk)`` triple).
+    Arbitrary shapes are zero-padded to tile multiples and sliced
+    back — padding contributes zeros to the contraction, so results
+    are exact and independent of the tile choice.
+    """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return _ref.matmul_ref(a, b, out_dtype)
@@ -104,7 +123,13 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
                    bm: int = 128, bn: int = 128, bk: int = 128,
                    variant: str = "dobu", slots: int | None = None,
                    tiling=None, out_dtype=None) -> jax.Array:
-    """(G,M,K) @ (G,K,N) -> (G,M,N) per-expert matmul."""
+    """(G,M,K) @ (G,K,N) -> (G,M,N) per-expert matmul.
+
+    The MoE dispatch path (``models.moe.moe_mlp``): expert FFNs run as
+    one grouped kernel whose revolving buffer streams across expert
+    boundaries, so the MXU never idles on an expert switch.  Same
+    ``impl``/``tiling`` vocabulary as :func:`matmul`.
+    """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return _ref.grouped_matmul_ref(a, b, out_dtype)
@@ -119,6 +144,86 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
                                   variant=variant, slots=slots,
                                   interpret=(impl == "interpret"),
                                   out_dtype=out_dtype)
+    return c[:, :M, :N]
+
+
+def quantized_matmul(x: jax.Array, qw: QTensor, *, impl: str = "auto",
+                     bm: int = 128, bn: int = 128, bk: int = 128,
+                     variant: str = "dobu", slots: int | None = None,
+                     grid_order: str = "ijk", tiling=None,
+                     out_dtype=None) -> jax.Array:
+    """C = x @ qw through the int8 zero-stall engine (W8A8).
+
+    ``x`` (M, K) is a full-precision activation, dynamically quantized
+    per row (:func:`repro.quant.quantize_rows` — padding rows are
+    exact zeros, so the path stays lengths-aware); ``qw`` is a
+    :class:`~repro.quant.QTensor` weight.  The int8 kernel accumulates
+    in exact int32 and fuses the ``row_scale * col_scale`` dequant
+    into its epilogue.  ``tiling="auto"`` tunes in the *int8*
+    configuration space — 1-byte tiles halve the VMEM footprint, so
+    the legal tile space is a superset of bf16's.
+
+    ``fmt="fp8"`` QTensors take the simulated-fp8 route: dequantize to
+    the activation dtype and run the standard (still Pallas) kernel —
+    the e4m3 storage rounding is the simulation.
+    """
+    if not isinstance(qw, QTensor):
+        raise TypeError(f"qw must be a QTensor, got {type(qw).__name__}")
+    if qw.fmt != "int8":
+        return matmul(x, qw.dequantize(x.dtype), impl=impl, bm=bm, bn=bn,
+                      bk=bk, variant=variant, slots=slots,
+                      grid_order=grid_order, tiling=tiling,
+                      out_dtype=out_dtype)
+    impl = resolve_impl(impl)
+    out_dtype = out_dtype or x.dtype
+    x_q, x_s = quantize_rows(x)
+    w_q, w_s = qw.data, qw.scale.astype(jnp.float32)
+    if impl == "jnp":
+        return _ref.quantized_matmul_ref(x_q, w_q, x_s, w_s, out_dtype)
+    M, N = x_q.shape[0], w_q.shape[1]
+    bm, bn, bk, variant, slots, grid_order = _resolve_tiling(
+        tiling, "matmul", M, N, x_q.shape[1], jnp.int8, impl,
+        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
+        grid_order=grid_order)
+    c = quantized_zero_stall_matmul(
+        _pad_to(x_q, (bm, bk)), _pad_to(w_q, (bk, bn)),
+        _pad_to(x_s, (bm, 1)), _pad_to(w_s, (1, bn)),
+        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
+        grid_order=grid_order, interpret=(impl == "interpret"),
+        out_dtype=out_dtype)
+    return c[:M, :N]
+
+
+def quantized_grouped_matmul(x: jax.Array, qw: QTensor, *,
+                             impl: str = "auto", bm: int = 128,
+                             bn: int = 128, bk: int = 128,
+                             variant: str = "dobu",
+                             slots: int | None = None, tiling=None,
+                             out_dtype=None) -> jax.Array:
+    """(G,M,K) activations @ QTensor (G,K,N) expert bank (W8A8 MoE)."""
+    if not isinstance(qw, QTensor):
+        raise TypeError(f"qw must be a QTensor, got {type(qw).__name__}")
+    if qw.fmt != "int8":
+        return grouped_matmul(x, qw.dequantize(x.dtype), impl=impl, bm=bm,
+                              bn=bn, bk=bk, variant=variant, slots=slots,
+                              tiling=tiling, out_dtype=out_dtype)
+    impl = resolve_impl(impl)
+    out_dtype = out_dtype or x.dtype
+    x_q, x_s = quantize_rows(x)
+    w_q, w_s = qw.data, qw.scale.astype(jnp.float32)
+    if impl == "jnp":
+        return _ref.quantized_grouped_matmul_ref(x_q, w_q, x_s, w_s,
+                                                 out_dtype)
+    G, M, _ = x_q.shape
+    N = w_q.shape[2]
+    bm, bn, bk, variant, slots, _ = _resolve_tiling(
+        tiling, "grouped_matmul", M, N, x_q.shape[2], jnp.int8, impl,
+        groups=G, bm=bm, bn=bn, bk=bk, variant=variant, slots=slots)
+    c = quantized_grouped_zero_stall_matmul(
+        _pad_to(x_q, (1, bm, bk)), _pad_to(w_q, (1, bk, bn)),
+        _pad_to(x_s, (1, bm, 1)), _pad_to(w_s, (1, 1, bn)),
+        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
+        interpret=(impl == "interpret"), out_dtype=out_dtype)
     return c[:, :M, :N]
 
 

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["matmul_ref", "grouped_matmul_ref", "flash_attention_ref",
-           "ssd_scan_ref"]
+           "ssd_scan_ref", "quantized_matmul_ref",
+           "quantized_grouped_matmul_ref"]
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -67,6 +68,32 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
     row_valid = mask.any(axis=-1)
     return jnp.where(row_valid[..., None], out, 0.0)
+
+
+def quantized_matmul_ref(a_q: jax.Array, b_q: jax.Array,
+                         a_scale: jax.Array, b_scale: jax.Array,
+                         out_dtype=None) -> jax.Array:
+    """Oracle for the int8 zero-stall matmul.
+
+    Same math as the kernel, in the same order: exact int32
+    contraction of the codes, then the fp32 ``row_scale * col_scale``
+    dequant, then the output cast.  Integer accumulation is exact, so
+    the kernel and this reference agree bit-for-bit on the int32
+    accumulator; only the final fp32 multiply/cast rounds.
+    """
+    acc = jnp.dot(a_q, b_q, preferred_element_type=jnp.int32)
+    c = acc.astype(jnp.float32) * a_scale * b_scale
+    return c.astype(out_dtype or jnp.float32)
+
+
+def quantized_grouped_matmul_ref(a_q: jax.Array, b_q: jax.Array,
+                                 a_scale: jax.Array, b_scale: jax.Array,
+                                 out_dtype=None) -> jax.Array:
+    """(G,M,K) x (G,K,N) int8 codes -> (G,M,N); per-group dequant."""
+    acc = jnp.einsum("gmk,gkn->gmn", a_q, b_q,
+                     preferred_element_type=jnp.int32)
+    c = acc.astype(jnp.float32) * a_scale * b_scale
+    return c.astype(out_dtype or jnp.float32)
 
 
 def ssd_scan_ref(x: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array,

@@ -1,3 +1,19 @@
+"""Model zoo (`repro.models`): five families over shared layers.
+
+:func:`build_model` maps a :class:`repro.configs.ModelConfig` to a
+:class:`Model` bundle of pure functions with uniform signatures
+(init / loss / prefill / decode / quantize_weights), so the training
+launcher, dry-run, serving engine and tests treat dense/vlm, moe,
+ssm (mamba2), hybrid (zamba2) and encdec identically.
+
+Every matmul in every family routes through :mod:`repro.kernels.ops`,
+dispatched by the per-call execution context :class:`Ctx` (``impl``
+backend, ``tiling`` configuration, ``quant`` precision, ``mesh``
+sharding) — the models never touch Pallas directly.  See
+``docs/ARCHITECTURE.md`` for the layering and a decode-step
+walkthrough.
+"""
+
 from repro.models.layers import Ctx, Params
 from repro.models.model import Model, build_model
 

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
+from repro.quant.tensor import QTensor
 
 Params = dict[str, Any]
 
@@ -32,6 +33,10 @@ class Ctx:
     tiling: Any = "auto"          # kernel config: "auto" (repro.tune) |
                                   # None (hardcoded 128³) | explicit triple;
                                   # ignored on the jnp path
+    quant: Any = None             # quantized execution: None (QTensor weights
+                                  # dequantize on the fly) | "int8" (W8A8
+                                  # zero-stall kernels) | "fp8" (simulated:
+                                  # e4m3 storage rounding, fp compute)
 
 
 def shard_seq(x: jax.Array, ctx: "Ctx") -> jax.Array:
@@ -120,13 +125,33 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
 
 
 def linear(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
-    """x: (..., d_in) @ w -> (..., d_out) through the zero-stall engine."""
-    w = p["w"].astype(ctx.dtype)
+    """x: (..., d_in) @ w -> (..., d_out) through the zero-stall engine.
+
+    :class:`~repro.quant.QTensor` weights (``Model.quantize_weights``)
+    dispatch by ``ctx.quant``: ``"int8"`` runs the W8A8 zero-stall
+    kernel (dynamic per-row activation quantization, fused dequant
+    epilogue); anything else dequantizes the weight on the fly and
+    runs the standard kernel — so fp8-simulated and opted-out
+    quantized params still execute on the Pallas path, never a jnp
+    fallback.
+    """
+    w = p["w"]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = ops.matmul(x2, w, impl=ctx.impl, tiling=ctx.tiling,
-                   out_dtype=ctx.dtype)
-    y = y.reshape(*lead, w.shape[-1])
+    if isinstance(w, QTensor):
+        if ctx.quant == "int8" and w.fmt == "int8" and w.w8a8:
+            y = ops.quantized_matmul(x2, w, impl=ctx.impl,
+                                     tiling=ctx.tiling, out_dtype=ctx.dtype)
+        else:
+            y = ops.matmul(x2, w.dequantize(ctx.dtype), impl=ctx.impl,
+                           tiling=ctx.tiling, out_dtype=ctx.dtype)
+        d_out = w.shape[-1]
+    else:
+        w = w.astype(ctx.dtype)
+        y = ops.matmul(x2, w, impl=ctx.impl, tiling=ctx.tiling,
+                       out_dtype=ctx.dtype)
+        d_out = w.shape[-1]
+    y = y.reshape(*lead, d_out)
     if "b" in p:
         y = y + p["b"].astype(ctx.dtype)
     return y

@@ -9,6 +9,16 @@ the launcher / dry-run / tests treat every family identically:
     decode(params, cache, tokens, ctx)    -> (logits, new cache)
     prefill_logits(params, batch, ctx)    -> logits (prefill shape)
     prefill(params, batch, ctx, max_len)  -> (logits, populated cache)
+    quantize_weights(params, fmt="int8")  -> params with QTensor weights
+
+`quantize_weights` converts every matmul weight to a
+:class:`repro.quant.QTensor` (int8 or simulated-fp8 codes + fp32
+per-channel scales); it is the same generic pytree walk for all five
+families because every family lays weights out as ``(..., d_in,
+d_out)`` leaves under ``"w"`` (linear layers) or raw expert banks
+(MoE).  Pair it with ``Ctx(quant="int8")`` to run the W8A8 zero-stall
+kernels; with ``Ctx.quant=None`` the quantized params still serve
+(dequantize-on-the-fly) — see :mod:`repro.quant`.
 
 `prefill` is the fused cache-populating prompt ingestion used by the
 serving engine (`repro.serve`): ONE jitted call per prompt instead of
@@ -31,8 +41,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import encdec, hybrid, moe, ssm, transformer
 from repro.models.layers import Ctx, Params
+from repro.quant.tensor import quantize_tree
 
 __all__ = ["Model", "build_model", "Ctx"]
+
+
+def _quantize_weights(params: Params, fmt: str = "int8") -> Params:
+    """Family-agnostic weight quantization (see repro.quant)."""
+    return quantize_tree(params, fmt=fmt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +60,9 @@ class Model:
     decode: Callable[..., tuple]
     prefill_logits: Callable[..., Any]
     prefill: Callable[..., tuple]
+    # one generic walk covers all five families (weight layout is
+    # uniform); a dataclass default, so build_model stays per-family-free
+    quantize_weights: Callable[..., Params] = _quantize_weights
 
 
 def _moe_mlp_fn(cfg: ModelConfig, ctx: Ctx):

@@ -21,8 +21,27 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.layers import Ctx, Params
+from repro.quant.tensor import QTensor
 
 __all__ = ["init_moe_mlp", "moe_mlp", "router_assignments"]
+
+
+def _expert_matmul(x: jax.Array, w, ctx: Ctx) -> jax.Array:
+    """(E,C,d) @ expert bank through the grouped zero-stall engine.
+
+    Mirrors ``layers.linear``'s quantized dispatch: QTensor banks run
+    the W8A8 grouped kernel under ``ctx.quant == "int8"`` and
+    dequantize onto the standard grouped kernel otherwise.
+    """
+    if isinstance(w, QTensor):
+        if ctx.quant == "int8" and w.fmt == "int8" and w.w8a8:
+            return ops.quantized_grouped_matmul(
+                x, w, impl=ctx.impl, tiling=ctx.tiling, out_dtype=ctx.dtype)
+        w = w.dequantize(ctx.dtype)
+    else:
+        w = w.astype(ctx.dtype)
+    return ops.grouped_matmul(x, w, impl=ctx.impl, tiling=ctx.tiling,
+                              out_dtype=ctx.dtype)
 
 
 def init_moe_mlp(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
@@ -138,22 +157,16 @@ def moe_mlp(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx,
     buf = buf[:-1].reshape(E, C, d)
     buf = _ep_constraint(buf, ctx, ("model", None, None))
 
-    # expert FFN via the grouped zero-stall engine
-    wi = p["wi"].astype(ctx.dtype)
-    wo = p["wo"].astype(ctx.dtype)
-    h = ops.grouped_matmul(buf, wi, impl=ctx.impl, tiling=ctx.tiling,
-                           out_dtype=ctx.dtype)
+    # expert FFN via the grouped zero-stall engine (quantized-aware)
+    h = _expert_matmul(buf, p["wi"], ctx)
     h = _ep_constraint(h, ctx, ("model", None, None))
     if "wg" in p:
-        g = ops.grouped_matmul(buf, p["wg"].astype(ctx.dtype),
-                               impl=ctx.impl, tiling=ctx.tiling,
-                               out_dtype=ctx.dtype)
+        g = _expert_matmul(buf, p["wg"], ctx)
         act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
         h = act(g) * h
     else:
         h = jax.nn.gelu(h)
-    y = ops.grouped_matmul(h, wo, impl=ctx.impl, tiling=ctx.tiling,
-                           out_dtype=ctx.dtype)
+    y = _expert_matmul(h, p["wo"], ctx)
     y = _ep_constraint(y, ctx, ("model", None, None))
 
     # combine: out[tok] += gate * y[expert, rank]

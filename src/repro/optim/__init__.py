@@ -1,3 +1,12 @@
+"""Optimizers (`repro.optim`): AdamW + gradient compression.
+
+Pure-functional AdamW (decoupled weight decay, global-norm clipping,
+warmup-cosine schedule) operating on the same params pytrees the
+models emit, plus :mod:`repro.optim.compression` — int8 / top-k
+gradient codecs for bandwidth-bound multi-pod all-reduces (the
+communication analogue of :mod:`repro.quant`'s compute-side int8).
+"""
+
 from repro.optim.adamw import OptState, adamw_update, init_opt_state, make_schedule, global_norm, clip_by_global_norm
 from repro.optim import compression
 

@@ -1,0 +1,52 @@
+"""Quantized zero-stall execution (`repro.quant`).
+
+Reduced-precision arithmetic is the standard next lever after
+scheduling: the paper squeezes near-ideal utilization out of a fixed
+datapath, and precision scaling then moves the roofline itself (MX,
+arXiv:2401.04012; "Know your rooflines!", arXiv:2505.16346) — int8
+halves every DMA byte the revolving buffer moves and doubles MXU
+throughput, without touching the zero-stall schedule.
+
+The pieces, bottom-up:
+
+* :mod:`repro.quant.tensor` — :class:`QTensor` (int8 / simulated-fp8
+  codes + fp32 per-channel scales, registered as a pytree),
+  :func:`quantize` / ``QTensor.dequantize``, per-row activation
+  quantization (:func:`quantize_rows`), and :func:`quantize_tree`
+  (whole-model weight conversion, all five families).
+* :mod:`repro.kernels.quantized_matmul` — the int8 zero-stall Pallas
+  kernels: the *same* N-slot revolving-buffer schedule as the bf16
+  kernels (so :class:`repro.core.cyclemodel.TpuPipelineModel` still
+  applies), int8 operand DMA, exact int32 accumulation, and a fused
+  epilogue that applies ``row_scale * col_scale`` before writeback.
+* :func:`repro.kernels.ops.quantized_matmul` /
+  ``ops.quantized_grouped_matmul`` — padding/tuning wrappers; the
+  tuner searches the int8 configuration space (1-byte tiles halve the
+  VMEM bill, so the legal tile space grows).
+* ``models.layers.Ctx(quant="int8")`` — models opt in per call, like
+  ``Ctx.tiling``; ``Model.quantize_weights(params)`` converts any
+  family's params.
+
+Usage::
+
+    model = build_model(cfg)
+    params = model.quantize_weights(model.init(key))     # QTensor weights
+    ctx = Ctx(impl="auto", quant="int8")                 # int8 kernel path
+    logits, cache = model.prefill(params, batch, ctx, max_len)
+
+With ``quant=None`` (the default) QTensor weights are dequantized on
+the fly and run the standard kernels — the storage saving without the
+int8 datapath — so A/B comparisons never need two copies of the
+params.  The serving engine (:mod:`repro.serve`) takes quantized
+params unchanged.
+
+See ``docs/ARCHITECTURE.md`` (Quantization) for the dataflow and
+``benchmarks/quant_report.py`` for accuracy / predicted-utilization
+numbers.
+"""
+
+from repro.quant.tensor import (FP8_MAX, INT8_MAX, QTensor, quantize,
+                                quantize_rows, quantize_tree)
+
+__all__ = ["QTensor", "quantize", "quantize_rows", "quantize_tree",
+           "INT8_MAX", "FP8_MAX"]

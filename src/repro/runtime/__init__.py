@@ -1,3 +1,14 @@
+"""Multi-chip runtime (`repro.runtime`).
+
+The scale-out layer above the models: GSPMD sharding plans
+(:mod:`repro.runtime.sharding` — DP/TP/SP mesh construction and param
+partitioning), pipeline parallelism (:func:`pp_loss_fn` — microbatched
+stage execution under ``shard_map``), and fault tolerance
+(:class:`ResilientExecutor` — heartbeat straggler detection, transient
+-error retry, elastic restore onto a smaller mesh from the resharding
+checkpoints of :mod:`repro.checkpoint`).
+"""
+
 from repro.runtime import sharding
 from repro.runtime.fault_tolerance import ResilientExecutor, StragglerDetector, Heartbeat, elastic_restore, TransientError
 from repro.runtime.pipeline_parallel import pp_loss_fn, split_layers_for_stages

@@ -70,7 +70,11 @@ class ServeEngine:
     ----------
     model, params, ctx : the ``build_model`` bundle, its params, and the
         execution context (``ctx.impl`` selects jnp / pallas / interpret
-        exactly as everywhere else).
+        exactly as everywhere else).  Quantized params
+        (``model.quantize_weights(params)`` + ``ctx.quant="int8"``)
+        serve unchanged: the engine only ever slices/updates the
+        *cache*, never the params, so QTensor weights flow straight
+        through to the int8 kernels.
     num_slots : decode batch width (the compiled decode shape).
     max_len : per-slot cache capacity; every request must satisfy
         ``len(prompt) [+ frontend] + max_new_tokens <= max_len``.

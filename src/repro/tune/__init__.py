@@ -89,7 +89,11 @@ def autotune(problem: Problem, *, backend: str = "pallas",
              force: bool = False) -> Candidate:
     """Resolve `problem` to its best Candidate, through the cache."""
     space = space or space_for_backend(backend)
-    cache = cache or get_cache()
+    # `cache or get_cache()` would be wrong: TuneCache defines __len__,
+    # so an EMPTY cache passed explicitly is falsy and used to be
+    # silently swapped for the global one (writes went to the wrong
+    # file and tests saw stale global entries).
+    cache = cache if cache is not None else get_cache()
     key = TuneCache.key(problem, backend=backend, dtype=dtype_name)
     if not force:
         hit = cache.get(key)
@@ -119,7 +123,7 @@ def best_attention_config(s_q: int, s_kv: int, head_dim: int, *,
     """
     name, itemsize = _dtype_info(dtype)
     space = space or space_for_backend(backend)
-    cache = cache or get_cache()
+    cache = cache if cache is not None else get_cache()  # see autotune
     problem = Problem(op="attention", M=int(s_q), N=int(head_dim),
                       K=int(s_kv), dtype_bytes=itemsize)
     key = TuneCache.key(problem, backend=backend, dtype=name)

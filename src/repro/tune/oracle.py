@@ -44,6 +44,12 @@ class AnalyticOracle:
     ``dma_cv`` models per-tile HBM latency jitter; nonzero values make
     revolving-buffer depth a real trade-off (deeper ring = smoother
     DMA stream but a longer prologue and a bigger VMEM bill).
+
+    Dtype-aware through ``Problem.dtype_bytes``: the pipeline model
+    charges DMA at the operand width and compute at the per-width MXU
+    peak (int8 = half the bytes, twice the rate —
+    ``TpuParams.peak_for``), so int8 candidates score the shifted
+    roofline, not just a smaller memory bill.
     """
 
     def __init__(self, model: TpuPipelineModel | None = None,

@@ -88,7 +88,18 @@ def hill_climb(space: KernelSpace, oracle: CostOracle, problem: Problem,
 
 def search(space: KernelSpace, oracle: CostOracle, problem: Problem,
            *, exhaustive_limit: int = EXHAUSTIVE_LIMIT) -> SearchResult:
-    """Pick the driver by space size (measured oracles get the climb)."""
+    """Resolve ``problem`` to its best candidate under ``oracle``.
+
+    The single entry point the rest of :mod:`repro.tune` calls
+    (``autotune`` wraps it with the persistent cache): enumerates the
+    legal space once — dtype-aware, so int8 problems see their larger
+    tile space — and picks the driver by size: exhaustive scoring when
+    the space is small enough that every probe is cheap (always true
+    for the analytic oracle), hill-climbing with scattered restarts
+    when each probe costs a real kernel launch.  Deterministic given
+    (space, oracle, problem); ties break toward the first candidate
+    in enumeration order.
+    """
     candidates = list(space.candidates(problem))   # enumerate once
     if len(candidates) <= exhaustive_limit:
         return exhaustive_search(space, oracle, problem, candidates)

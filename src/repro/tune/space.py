@@ -14,6 +14,13 @@ implies the paper's dobu/single variant), and grid walk order.
     (scaled by ``vmem_fraction`` — the compiler needs headroom for
     spills and the output window).
 
+The space is **dtype-aware**: feasibility is judged at the problem's
+operand width, so int8 problems (1 byte/element — the quantized path,
+:mod:`repro.quant`) see roughly twice the legal (tile, slots)
+combinations of bf16, plus the ``int8_extra_tiles`` options that only
+ever fit at 1 byte.  The cache keys on dtype, so int8 and bf16 tuning
+results never collide.
+
 The space is deliberately finite and explicit: the search driver
 (:mod:`repro.tune.search`) goes exhaustive when it is small and
 hill-climbs through :meth:`KernelSpace.neighbors` when it is not.
@@ -92,16 +99,24 @@ class KernelSpace:
         vmem_bytes: int | None = None,
         vmem_fraction: float = 0.5,
         model: TpuPipelineModel | None = None,
+        int8_extra_tiles: tuple[int, ...] = (1024,),
     ):
         # grid_orders defaults to ("ijk",) only: the analytic oracle is
         # order-blind (same FLOPs/bytes either way), so searching "jik"
         # doubles the space for a guaranteed tie.  Pass
         # grid_orders=("ijk", "jik") when scoring with MeasuredOracle,
         # where walk order can matter (HBM row locality).
-        if any(t % align for t in tile_options):
-            raise ValueError(f"tile options {tile_options} must be multiples "
-                             f"of align={align}")
+        #
+        # int8_extra_tiles: enumerated only for 1-byte problems — these
+        # tiles' bf16 footprint would blow the budget anyway, so gating
+        # them keeps the bf16 search (and its cached winners) unchanged.
+        if any(t % align for t in (*tile_options, *int8_extra_tiles)):
+            raise ValueError(f"tile options {tile_options} + "
+                             f"{int8_extra_tiles} must be multiples of "
+                             f"align={align}")
         self.tile_options = tuple(sorted(tile_options))
+        self.int8_extra_tiles = tuple(
+            sorted(t for t in int8_extra_tiles if t not in tile_options))
         self.slot_options = tuple(sorted(slot_options))
         self.grid_orders = tuple(grid_orders)
         self.align = align
@@ -110,6 +125,13 @@ class KernelSpace:
         self.vmem_budget = int(vmem * vmem_fraction)
 
     # ------------------------------------------------------------------
+    def tile_options_for(self, dtype_bytes: int) -> tuple[int, ...]:
+        """The dtype axis: tile options legal at this operand width."""
+        if dtype_bytes == 1:
+            return tuple(sorted((*self.tile_options,
+                                 *self.int8_extra_tiles)))
+        return self.tile_options
+
     def fits_vmem(self, c: Candidate, dtype_bytes: int = 2) -> bool:
         """Revolving buffers + accumulator within the VMEM budget?"""
         fp = self.model.vmem_footprint(c.bm, c.bn, c.bk,
@@ -137,8 +159,9 @@ class KernelSpace:
 
     def candidates(self, problem: Problem) -> Iterator[Candidate]:
         """All legal candidates for `problem`, deterministic order."""
+        tiles = self.tile_options_for(problem.dtype_bytes)
         for bm, bn, bk, slots, order in itertools.product(
-                self.tile_options, self.tile_options, self.tile_options,
+                tiles, tiles, tiles,
                 self.slot_options, self.grid_orders):
             c = Candidate(bm, bn, bk, slots, order)
             if self.feasible(c, problem):
@@ -162,6 +185,8 @@ class KernelSpace:
     # ------------------------------------------------------------------
     def neighbors(self, c: Candidate, problem: Problem) -> Iterator[Candidate]:
         """Single-axis moves for hill-climbing (feasible only)."""
+        tiles = self.tile_options_for(problem.dtype_bytes)
+
         def moves(options, cur):
             if cur in options:
                 idx = options.index(cur)
@@ -171,11 +196,11 @@ class KernelSpace:
             else:
                 yield options[0]
 
-        for bm in moves(self.tile_options, c.bm):
+        for bm in moves(tiles, c.bm):
             yield Candidate(bm, c.bn, c.bk, c.slots, c.grid_order)
-        for bn in moves(self.tile_options, c.bn):
+        for bn in moves(tiles, c.bn):
             yield Candidate(c.bm, bn, c.bk, c.slots, c.grid_order)
-        for bk in moves(self.tile_options, c.bk):
+        for bk in moves(tiles, c.bk):
             yield Candidate(c.bm, c.bn, bk, c.slots, c.grid_order)
         for slots in moves(self.slot_options, c.slots):
             yield Candidate(c.bm, c.bn, c.bk, slots, c.grid_order)
@@ -191,4 +216,5 @@ DEFAULT_SPACE = KernelSpace()
 #: interpret-mode kernel invocations stay cheap.
 INTERPRET_SPACE = KernelSpace(
     tile_options=(8, 16, 32), slot_options=(1, 2, 3), align=8,
-    vmem_bytes=TpuParams().vmem_bytes, vmem_fraction=0.5)
+    vmem_bytes=TpuParams().vmem_bytes, vmem_fraction=0.5,
+    int8_extra_tiles=(64,))

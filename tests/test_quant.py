@@ -1,0 +1,326 @@
+"""repro.quant: QTensor pytree + int8 zero-stall kernels + model parity.
+
+Four correctness pillars:
+
+1. QTensor is a well-behaved pytree: quantize/dequantize error bounds,
+   jit/vmap/scan-slicing transparency, checkpoint save-load round trip.
+2. The int8 kernels (quantized_zero_stall_matmul + grouped variant)
+   match their jnp oracles bit-for-bit on the int32 accumulator — the
+   revolving-buffer schedule must not change the integer math.
+3. The tuner's dtype axis: 1-byte problems see a superset of the bf16
+   configuration space and the analytic oracle predicts int8 faster.
+4. End to end, per the acceptance bar: the W8A8 path produces logits
+   within rtol=0.05 of full precision for all five families in
+   interpret mode, with every jnp reference monkeypatched to explode —
+   i.e. no silent fallback off the Pallas kernels — and the serving
+   engine generates token-for-token parity on quantized params.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.kernels import ref as _ref
+from repro.kernels.quantized_matmul import (
+    quantized_grouped_zero_stall_matmul, quantized_zero_stall_matmul)
+from repro.models import Ctx, build_model
+from repro.quant import QTensor, quantize, quantize_rows, quantize_tree
+
+KEY = jax.random.PRNGKey(0)
+FAMILIES = ["gemma-7b", "olmoe-1b-7b", "mamba2-130m", "zamba2-2.7b",
+            "seamless-m4t-large-v2"]
+
+
+# ----------------------------------------------------------------------
+# QTensor
+# ----------------------------------------------------------------------
+def test_quantize_round_trip_error_bound(rng):
+    w = jnp.asarray(rng.standard_normal((32, 24)), jnp.float32)
+    qt = quantize(w)
+    assert qt.data.dtype == jnp.int8
+    assert qt.scale.shape == (1, 24)
+    # symmetric per-channel: error <= scale/2 per element
+    bound = np.asarray(qt.scale)[0] / 2 + 1e-7
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(w))
+    assert (err <= bound[None, :]).all()
+
+
+def test_quantize_fp8_simulated(rng):
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    qt = quantize(w, fmt="fp8")
+    assert qt.fmt == "fp8"
+    # e4m3 has 3 mantissa bits: relative error <= 2^-4 per element
+    deq = np.asarray(qt.dequantize())
+    rel = np.abs(deq - np.asarray(w)) / (np.abs(np.asarray(w)) + 1e-9)
+    assert rel.max() <= 2.0 ** -4 + 1e-3
+
+
+def test_qtensor_pytree_jit_vmap_scan(rng):
+    # a scan-stacked weight: (L, d_in, d_out) codes + (L, 1, d_out) scales
+    w = jnp.asarray(rng.standard_normal((3, 16, 8)), jnp.float32)
+    qt = quantize(w)
+    assert qt.scale.shape == (3, 1, 8)
+
+    deq = jax.jit(lambda q: q.dequantize())(qt)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(qt.dequantize()))
+
+    # vmap slices data and scale in lockstep (what lax.scan does too)
+    per_layer = jax.vmap(lambda q: q.dequantize())(qt)
+    np.testing.assert_allclose(np.asarray(per_layer), np.asarray(deq))
+
+    def body(carry, q):
+        assert isinstance(q, QTensor) and q.shape == (16, 8)
+        return carry + q.dequantize().sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros(()), qt)
+    np.testing.assert_allclose(np.asarray(total),
+                               np.asarray(deq.sum()), rtol=1e-5)
+
+    # static metadata survives flatten/unflatten
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert [l.shape for l in leaves] == [(3, 16, 8), (3, 1, 8)]
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.fmt == "int8" and back.w8a8 is True
+
+
+def test_qtensor_checkpoint_save_restore(tmp_path):
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    qparams = model.quantize_weights(model.init(KEY, dtype=jnp.float32))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, qparams, blocking=True)
+    template = model.quantize_weights(
+        model.init(jax.random.PRNGKey(1), dtype=jnp.float32))
+    restored, step = ck.restore(template)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(qparams), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # QTensor structure (incl. static fmt/w8a8) survives the round trip
+    assert jax.tree_util.tree_structure(qparams) \
+        == jax.tree_util.tree_structure(restored)
+
+
+def test_quantize_tree_selects_matmul_weights_only():
+    cfg = get_config("olmoe-1b-7b", reduced=True)
+    params = build_model(cfg).init(KEY, dtype=jnp.float32)
+    q = quantize_tree(params)
+    assert isinstance(q["layers"]["attn"]["wq"]["w"], QTensor)
+    assert isinstance(q["layers"]["mlp"]["wi"], QTensor)      # expert bank
+    assert not isinstance(q["layers"]["mlp"]["router"], QTensor)
+    assert not isinstance(q["embed"]["tokens"], QTensor)
+    assert not isinstance(q["layers"]["attn_norm"]["scale"], QTensor)
+    # idempotent
+    q2 = quantize_tree(q)
+    assert q2["layers"]["attn"]["wq"]["w"] is q["layers"]["attn"]["wq"]["w"]
+
+    # SSM projections are W8A16 (activation-sensitive: SSD recurrence)
+    scfg = get_config("mamba2-130m", reduced=True)
+    sq = quantize_tree(build_model(scfg).init(KEY, dtype=jnp.float32))
+    mamba = sq["layers"]["mamba"]
+    assert isinstance(mamba["in_proj"]["w"], QTensor)
+    assert mamba["in_proj"]["w"].w8a8 is False
+    assert mamba["out_proj"]["w"].w8a8 is False
+    assert not isinstance(mamba["conv_w"], QTensor)
+    assert not isinstance(mamba["A_log"], QTensor)
+
+
+# ----------------------------------------------------------------------
+# int8 kernels vs oracles
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("slots,grid_order", [(1, "ijk"), (2, "ijk"),
+                                              (3, "ijk"), (2, "jik")])
+def test_quantized_kernel_matches_ref(rng, slots, grid_order):
+    x = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    x_q, x_s = quantize_rows(x)
+    qw = quantize(w)
+    got = quantized_zero_stall_matmul(
+        x_q, qw.data, x_s, qw.scale, bm=8, bn=8, bk=8, slots=slots,
+        variant="dobu" if slots > 1 else "single", grid_order=grid_order,
+        interpret=True)
+    want = _ref.quantized_matmul_ref(x_q, qw.data, x_s, qw.scale)
+    # integer accumulation is exact; only the fp32 epilogue rounds
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # and the dequantized result approximates the fp product
+    want_fp = np.asarray(x @ w)
+    np.testing.assert_allclose(np.asarray(got), want_fp, rtol=0.05,
+                               atol=0.05 * np.abs(want_fp).max())
+
+
+@pytest.mark.parametrize("slots", [1, 2, 3])
+def test_quantized_grouped_kernel_matches_ref(rng, slots):
+    x = jnp.asarray(rng.standard_normal((3, 16, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 8, 16)), jnp.float32)
+    x_q, x_s = quantize_rows(x)
+    qw = quantize(w)
+    got = quantized_grouped_zero_stall_matmul(
+        x_q, qw.data, x_s, qw.scale, bm=8, bn=8, bk=8, slots=slots,
+        variant="dobu" if slots > 1 else "single", interpret=True)
+    want = _ref.quantized_grouped_matmul_ref(x_q, qw.data, x_s, qw.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ops_quantized_matmul_pads_ragged(rng):
+    x = jnp.asarray(rng.standard_normal((13, 21)), jnp.float32)
+    qw = quantize(jnp.asarray(rng.standard_normal((21, 9)), jnp.float32))
+    got = ops.quantized_matmul(x, qw, impl="interpret", tiling=(8, 8, 8))
+    want = ops.quantized_matmul(x, qw, impl="jnp")
+    # padding rows/cols quantize to exact zero codes -> identical math
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_quantized_kernel_rejects_bad_operands(rng):
+    x = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="int8"):
+        quantized_zero_stall_matmul(x, x.astype(jnp.int8),
+                                    jnp.ones((8, 1)), jnp.ones((1, 8)),
+                                    bm=8, bn=8, bk=8, interpret=True)
+    with pytest.raises(ValueError, match="scale shapes"):
+        quantized_zero_stall_matmul(x.astype(jnp.int8), x.astype(jnp.int8),
+                                    jnp.ones((1, 8)), jnp.ones((1, 8)),
+                                    bm=8, bn=8, bk=8, interpret=True)
+    with pytest.raises(TypeError, match="QTensor"):
+        ops.quantized_matmul(x, x, impl="jnp")
+
+
+def test_quantize_rows_padding_is_exact_zero():
+    x = jnp.concatenate([jnp.ones((2, 8)), jnp.zeros((3, 8))])
+    q, s = quantize_rows(x)
+    assert (np.asarray(q[2:]) == 0).all()
+    assert (np.asarray(s[2:]) == 1.0).all()      # unit scale, no div-by-0
+
+
+# ----------------------------------------------------------------------
+# tune: the dtype axis
+# ----------------------------------------------------------------------
+def test_int8_space_is_superset_of_bf16():
+    from repro.tune import DEFAULT_SPACE, Problem
+    p16 = Problem("matmul", 4096, 4096, 4096, dtype_bytes=2)
+    p8 = Problem("matmul", 4096, 4096, 4096, dtype_bytes=1)
+    c16 = set(DEFAULT_SPACE.candidates(p16))
+    c8 = set(DEFAULT_SPACE.candidates(p8))
+    assert c16 < c8                     # strictly more legal configs
+    # the int8-only tile options actually appear
+    assert any(c.bm > max(DEFAULT_SPACE.tile_options) for c in c8)
+    assert DEFAULT_SPACE.tile_options_for(2) == DEFAULT_SPACE.tile_options
+
+
+def test_oracle_predicts_int8_faster(tmp_path):
+    import os
+    from repro import tune
+    from repro.tune import AnalyticOracle, Problem, TuneCache
+    cache = TuneCache(os.path.join(tmp_path, "tune.json"))
+    oracle = AnalyticOracle()
+    kw = dict(backend="pallas", oracle=oracle, cache=cache)
+    c16 = tune.best_config("matmul", 4096, 4096, 4096,
+                           dtype=jnp.bfloat16, **kw)
+    c8 = tune.best_config("matmul", 4096, 4096, 4096, dtype=jnp.int8, **kw)
+    t16 = oracle.estimate(c16, Problem("matmul", 4096, 4096, 4096,
+                                       dtype_bytes=2))
+    t8 = oracle.estimate(c8, Problem("matmul", 4096, 4096, 4096,
+                                     dtype_bytes=1))
+    assert t8 < t16                     # the precision-shifted roofline
+    # separate cache entries (dtype is part of the key)
+    assert len(cache) == 2
+
+
+# ----------------------------------------------------------------------
+# acceptance: five families, interpret mode, no silent fallback
+# ----------------------------------------------------------------------
+def _boom_refs(monkeypatch):
+    def boom(*a, **kw):
+        raise AssertionError("jnp reference fallback taken on the "
+                             "quantized interpret path")
+    for name in ("matmul_ref", "grouped_matmul_ref", "flash_attention_ref",
+                 "quantized_matmul_ref", "quantized_grouped_matmul_ref"):
+        monkeypatch.setattr(ops._ref, name, boom)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_quantized_logits_within_tolerance_interpret(arch, monkeypatch):
+    """int8 logits within rtol=0.05 of full precision, every family,
+    with the Pallas (interpret) kernels mandatory — all jnp references
+    are monkeypatched to explode."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    qparams = model.quantize_weights(params)
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        batch["frontend_embeds"] = jax.random.normal(
+            KEY, (B, 10, cfg.d_model)) * 0.1
+
+    want = np.asarray(model.prefill_logits(
+        params, batch, Ctx(impl="jnp", dtype=jnp.float32)))
+
+    ctx_q = Ctx(impl="interpret", dtype=jnp.float32, quant="int8",
+                tiling=None)
+    _boom_refs(monkeypatch)
+    got = np.asarray(model.prefill_logits(qparams, batch, ctx_q))
+    monkeypatch.undo()
+
+    np.testing.assert_allclose(got, want, rtol=0.05,
+                               atol=0.05 * np.abs(want).max())
+
+
+def test_quantized_engine_matches_quantized_lockstep():
+    """The serving engine takes quantized params unchanged: continuous
+    batching over a W8A8 model is token-for-token the lock-step oracle
+    on the same quantized params."""
+    from repro.serve import Request, ServeEngine, lockstep_generate
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    qparams = model.quantize_weights(model.init(KEY, dtype=jnp.float32))
+    ctx = Ctx(impl="jnp", dtype=jnp.float32, quant="int8")
+    prompts = [list(np.random.default_rng(i).integers(0, cfg.vocab_size, n))
+               for i, n in enumerate((5, 11, 3, 8))]
+    max_new = [6, 3, 5, 4]
+    engine = ServeEngine(model, qparams, ctx, num_slots=2, max_len=32)
+    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=m)
+                          for i, (p, m) in enumerate(zip(prompts, max_new))])
+    oracle = lockstep_generate(model, qparams, ctx, prompts, max_new,
+                               max_len=32)
+    for i in range(4):
+        assert results[i].tokens == oracle[i]
+
+
+def test_quant_none_dequantizes_on_the_fly():
+    """Ctx.quant=None on QTensor params: still runs (storage-only
+    quantization), numerically the dequantized weights."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    qparams = model.quantize_weights(params)
+    tokens = jax.random.randint(KEY, (1, 6), 0, cfg.vocab_size)
+    ctx = Ctx(impl="jnp", dtype=jnp.float32)          # quant=None
+    got = model.prefill_logits(qparams, {"tokens": tokens}, ctx)
+    want = model.prefill_logits(params, {"tokens": tokens}, ctx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.05, atol=0.05 * float(
+                                   jnp.abs(want).max()))
+
+
+def test_fp8_simulated_path_runs():
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    qparams = model.quantize_weights(params, fmt="fp8")
+    tokens = jax.random.randint(KEY, (1, 6), 0, cfg.vocab_size)
+    ctx = Ctx(impl="jnp", dtype=jnp.float32, quant="fp8")
+    got = model.prefill_logits(qparams, {"tokens": tokens}, ctx)
+    want = model.prefill_logits(params, {"tokens": tokens},
+                                Ctx(impl="jnp", dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.1, atol=0.1 * float(
+                                   jnp.abs(want).max()))
