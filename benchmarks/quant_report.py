@@ -103,8 +103,9 @@ def measured_section(archs, gen_len: int = 8) -> None:
     print("# section=measured (reduced configs, jnp path on CPU; tok/s "
           "directional)")
     print("arch,family,max_rel_logit_err,fp_decode_tok_s,int8_decode_tok_s")
-    ctx_f = Ctx(impl="jnp", dtype=jnp.float32)
-    ctx_q = Ctx(impl="jnp", dtype=jnp.float32, quant="int8")
+    from repro.plan import Plan
+    ctx_f = Ctx(plan="jnp", dtype=jnp.float32)
+    ctx_q = Ctx(plan=Plan(backend="jnp", quant="int8"), dtype=jnp.float32)
     for arch in archs:
         cfg = get_config(arch, reduced=True)
         model = build_model(cfg)

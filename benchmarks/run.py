@@ -19,6 +19,7 @@ def _kernel_correctness():
     """Spot-check the Pallas kernels against oracles (interpret mode)."""
     import jax.numpy as jnp
     from repro.kernels import ops, ref
+    from repro.plan import KernelConfig, Plan
     from benchmarks.common import emit, timed
 
     rng = np.random.default_rng(0)
@@ -26,7 +27,8 @@ def _kernel_correctness():
     b = jnp.asarray(rng.standard_normal((48, 16)), jnp.float32)
 
     def check():
-        got = ops.matmul(a, b, impl="interpret", bm=16, bn=16, bk=16)
+        got = ops.matmul(a, b, config=KernelConfig(
+            backend="interpret", bm=16, bn=16, bk=16))
         return float(jnp.max(jnp.abs(got - ref.matmul_ref(a, b))))
 
     err, us = timed(check, repeat=1)
@@ -34,7 +36,7 @@ def _kernel_correctness():
 
     def check_tuned():
         """Tuned path (repro.tune resolves tiles/slots/grid order)."""
-        got = ops.matmul(a, b, impl="interpret", tiling="auto")
+        got = ops.matmul(a, b, config=Plan(backend="interpret"))
         return float(jnp.max(jnp.abs(got - ref.matmul_ref(a, b))))
 
     err, us = timed(check_tuned, repeat=1)
@@ -43,7 +45,8 @@ def _kernel_correctness():
     q = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
 
     def check_flash():
-        got = ops.attention(q, q, q, impl="interpret", bq=8, bkv=8)
+        got = ops.attention(q, q, q, config=KernelConfig(
+            backend="interpret", bq=8, bkv=8))
         want = ref.flash_attention_ref(q, q, q)
         return float(jnp.max(jnp.abs(got - want)))
 

@@ -78,7 +78,7 @@ def _run_lockstep(model, params, ctx):
 
 
 def main():
-    ctx = Ctx(impl="jnp", dtype=jnp.float32)
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
     print("arch,mode,prefill_tok_s,decode_tok_s,decode_steps,occupancy")
     for arch in ARCHS:
         cfg = get_config(arch, reduced=True)

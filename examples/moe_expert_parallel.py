@@ -16,12 +16,13 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.models import Ctx
+from repro.plan import KernelConfig
 from repro.models.moe import init_moe_mlp, moe_mlp, router_assignments
 
 
 def main():
     cfg = get_config("olmoe-1b-7b", reduced=True)
-    ctx = Ctx(impl="jnp", dtype=jnp.float32)
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
     key = jax.random.PRNGKey(0)
     p = init_moe_mlp(key, cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model)) * 0.5
@@ -45,7 +46,8 @@ def main():
     # 2. grouped zero-stall matmul vs oracle
     g = jax.random.normal(key, (cfg.n_experts, 16, cfg.d_model))
     w = jax.random.normal(key, (cfg.n_experts, cfg.d_model, cfg.d_ff))
-    got = ops.grouped_matmul(g, w, impl="interpret", bm=8, bn=8, bk=8)
+    got = ops.grouped_matmul(g, w, config=KernelConfig(
+        backend="interpret", bm=8, bn=8, bk=8))
     err = float(jnp.max(jnp.abs(got - ref.grouped_matmul_ref(g, w))))
     print(f"grouped zero-stall matmul ({cfg.n_experts} experts): "
           f"maxerr={err:.2e}")

@@ -17,6 +17,7 @@ from repro.core.cyclemodel import SNITCH_CONFIGS, SnitchClusterModel, \
 from repro.kernels import ops, ref
 from repro.configs import get_config
 from repro.models import Ctx, build_model
+from repro.plan import KernelConfig
 
 
 def main():
@@ -24,7 +25,8 @@ def main():
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
-    c = ops.matmul(a, b, impl="interpret", bm=32, bn=32, bk=32)
+    c = ops.matmul(a, b, config=KernelConfig(
+        backend="interpret", bm=32, bn=32, bk=32))
     err = float(jnp.max(jnp.abs(c - ref.matmul_ref(a, b))))
     print(f"[kernel] zero-stall matmul (dobu, interpret): maxerr={err:.2e}")
 
@@ -47,7 +49,7 @@ def main():
     cfg = get_config("gemma-7b", reduced=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
-    ctx = Ctx(impl="jnp", dtype=jnp.float32)
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
     batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
              "targets": jnp.zeros((1, 8), jnp.int32)}
     loss = model.loss(params, batch, ctx)

@@ -378,7 +378,7 @@ class TpuPipelineModel:
     This model is the default cost oracle of :mod:`repro.tune`, which
     searches (bm, bn, bk, slots, grid order) per problem shape under
     the ``vmem_footprint`` budget and feeds the winner back into the
-    Pallas kernels via ``ops.matmul(..., tiling="auto")``.
+    Pallas kernels via ``ops.matmul(..., config="auto")``.
     """
 
     def __init__(self, params: TpuParams | None = None):

@@ -8,7 +8,8 @@ epilogue; flash_attention — blocked online-softmax attention.  Each
 has a pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py.
 Execution configuration (tile sizes, buffer depth, grid order) is
 searched per problem shape and dtype by :mod:`repro.tune` — pass
-``tiling="auto"`` to the ops wrappers.
+``config="auto"`` (or a :class:`repro.plan.Plan`) to the ops
+wrappers.
 """
 
 from repro.kernels import ops, ref

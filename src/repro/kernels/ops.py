@@ -2,29 +2,41 @@
 
 Model code calls these entry points; they route to
 
-  * the Pallas zero-stall kernels on TPU (``impl="pallas"``),
+  * the Pallas zero-stall kernels on TPU (backend "pallas"),
   * the same kernels under ``interpret=True`` for CPU validation
-    (``impl="interpret"``),
-  * identical-math jnp (``impl="jnp"``) — used by the dry-run, whose
+    (backend "interpret"),
+  * identical-math jnp (backend "jnp") — used by the dry-run, whose
     XLA-CPU backend cannot lower Pallas-TPU kernels (DESIGN.md §3).
 
-``impl="auto"`` picks pallas on TPU and jnp elsewhere, so the same
+Backend "auto" picks pallas on TPU and jnp elsewhere, so the same
 model code runs in tests, the dry-run and on real hardware.
 
-Execution configuration (``tiling``):
+Execution configuration — the single ``config`` argument
+(:mod:`repro.plan`), resolved ahead of the kernel launch like the
+paper's loop-nest CSR writes:
 
-  * ``tiling=None``     — the explicit ``bm/bn/bk/variant/slots``
-    keyword arguments (historical behavior, default 128³ dobu).
-  * ``tiling=(bm, bn, bk)`` — explicit tile triple.
-  * ``tiling="auto"``   — resolve (bm, bn, bk, slots, grid order)
-    through :mod:`repro.tune`: analytic-model search over the legal
-    configuration space, memoized in a persistent cache.  The tuned
-    path returns bit-identical results (tiling only changes the
-    execution schedule, never the math — padding contributes zeros).
+  * ``None``                 — the historical 128³ dobu default.
+  * ``"auto"``               — resolve through :mod:`repro.tune`
+    (analytic-model search, memoized in a persistent cache).
+  * ``(bm, bn, bk)``         — explicit tile triple
+    (``(bq, bkv)`` for :func:`attention`).
+  * :class:`repro.plan.KernelConfig` — one complete validated
+    configuration, including the backend.
+  * :class:`repro.plan.Plan` — per-call-site lookup by bucketed
+    ``OpKey``; misses follow the plan's default policy and are
+    memoized, so a traced plan never touches the tuner at run time.
 
-Arbitrary shapes are zero-padded up to tile multiples before the
-kernel and sliced back after — padding contributes zeros to the
-contraction, so results are exact.
+Results are bit-identical across configurations — the config only
+changes the execution schedule, never the math.  Arbitrary shapes are
+zero-padded up to tile multiples before the kernel and sliced back
+after — padding contributes zeros to the contraction, so results are
+exact.
+
+The pre-plan keyword spelling (``impl=``, ``bm=/bn=/bk=``,
+``variant=``, ``slots=``, ``grid_order=``, ``bq=/bkv=``, ``tiling=``)
+still works behind a deprecation shim (one ``DeprecationWarning`` per
+call) and produces bit-identical results to its ``config=``
+equivalent.
 """
 
 from __future__ import annotations
@@ -34,21 +46,25 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import plan as _plan
 from repro.kernels import ref as _ref
 from repro.kernels.zero_stall_matmul import zero_stall_matmul
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
 from repro.kernels.quantized_matmul import (
     quantized_grouped_zero_stall_matmul, quantized_zero_stall_matmul)
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.plan import KernelConfig, Plan, UNSET as _UNSET
 from repro.quant.tensor import QTensor, quantize_rows
 
 __all__ = ["matmul", "grouped_matmul", "attention", "host_tiled_matmul",
-           "quantized_matmul", "quantized_grouped_matmul", "resolve_impl"]
+           "quantized_matmul", "quantized_grouped_matmul", "resolve_impl",
+           "reset_fallback_warnings"]
 
 
 def resolve_impl(impl: str) -> str:
-    """Resolve the ``impl="auto"`` vocabulary to a concrete backend.
+    """Resolve the ``"auto"`` backend vocabulary to a concrete backend.
 
     "auto" means: the Pallas zero-stall kernels when a TPU backs the
     process, the identical-math jnp reference otherwise (tests and the
@@ -68,90 +84,144 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
     return x
 
 
-def _resolve_tiling(tiling, op, M, N, K, dtype, impl, *, groups=1,
-                    bm=128, bn=128, bk=128, variant="dobu", slots=None,
-                    grid_order="ijk"):
-    """(bm, bn, bk, variant, slots, grid_order) after `tiling` dispatch."""
-    if tiling is None:
-        return bm, bn, bk, variant, slots, grid_order
+def _dtype_from_name(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return getattr(jnp, name)
+
+
+def _config_out_dtype(config, key: "_plan.OpKey | None" = None):
+    """A config's ``out_dtype`` without schedule resolution.
+
+    Priority: the Plan entry for ``key`` (a pure lookup — no tuning,
+    no memoization), then the KernelConfig / plan-default field.  The
+    jnp backend short-circuits before ``plan.resolve`` runs and the
+    quantized wrappers default their dtype early, but the contract is
+    one priority order — explicit argument > per-entry > plan default
+    — identical on every backend."""
+    candidates = []
+    if isinstance(config, KernelConfig):
+        candidates.append(config)
+    elif isinstance(config, Plan):
+        if key is not None:
+            hit = config.lookup(key)
+            if hit is not None:
+                candidates.append(hit)
+        if isinstance(config.default, KernelConfig):
+            candidates.append(config.default)
+    for cfg in candidates:
+        if cfg.out_dtype is not None:
+            return _dtype_from_name(cfg.out_dtype)
+    return None
+
+
+def _legacy_config(op: str, config, legacy: dict):
+    """The single adapter folding the deprecated per-call kwargs into
+    the ``config`` vocabulary (emits one DeprecationWarning)."""
+    used = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if not used:
+        return config
+    warnings.warn(
+        f"ops.{op}: the {sorted(used)} keyword(s) are deprecated; pass the "
+        f"single config= argument instead (a repro.plan.KernelConfig, a "
+        f"Plan, 'auto', a tile tuple or None)",
+        DeprecationWarning, stacklevel=3)
+    if config is not None:
+        raise TypeError(
+            f"ops.{op}: cannot mix config= with the deprecated "
+            f"{sorted(used)} keyword(s)")
+    impl = used.pop("impl", "auto")
+    tiling = used.pop("tiling", None)
     if tiling == "auto":
-        from repro import tune
-        c = tune.best_config(op, M, N, K, dtype=dtype, backend=impl,
-                             groups=groups)
-        return c.bm, c.bn, c.bk, c.variant, c.slots, c.grid_order
-    if isinstance(tiling, (tuple, list)) and len(tiling) == 3:
-        tm, tn, tk = map(int, tiling)
-        return tm, tn, tk, variant, slots, grid_order
-    raise ValueError(f"tiling must be None, 'auto' or a (bm, bn, bk) "
-                     f"triple, got {tiling!r}")
+        # historical behavior: "auto" overrode any explicit tile/variant
+        # keywords — preserved bit-for-bit by the shim
+        return Plan(backend=impl)
+    if tiling is not None:
+        if op == "attention":
+            if not (isinstance(tiling, (tuple, list)) and len(tiling) == 2):
+                raise ValueError(f"attention tiling must be None, 'auto' or "
+                                 f"(bq, bkv), got {tiling!r}")
+            used["bq"], used["bkv"] = (int(t) for t in tiling)
+        else:
+            if not (isinstance(tiling, (tuple, list)) and len(tiling) == 3):
+                raise ValueError(f"tiling must be None, 'auto' or a "
+                                 f"(bm, bn, bk) triple, got {tiling!r}")
+            used["bm"], used["bn"], used["bk"] = (int(t) for t in tiling)
+    return KernelConfig(backend=impl, **used)
 
 
-def matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
-           bm: int = 128, bn: int = 128, bk: int = 128,
-           variant: str = "dobu", slots: int | None = None,
-           grid_order: str = "ijk", tiling=None,
-           out_dtype=None) -> jax.Array:
+def matmul(a: jax.Array, b: jax.Array, *, config=None, out_dtype=None,
+           impl=_UNSET, bm=_UNSET, bn=_UNSET, bk=_UNSET, variant=_UNSET,
+           slots=_UNSET, grid_order=_UNSET, tiling=_UNSET) -> jax.Array:
     """C = A @ B through the zero-stall engine.
 
     The workhorse entry point: every linear layer in the model zoo
-    routes here (``models.layers.linear``).  ``impl`` selects the
-    backend (see :func:`resolve_impl`), ``tiling`` the execution
-    configuration (None = historical 128³/2-slot, "auto" =
-    :mod:`repro.tune`, or an explicit ``(bm, bn, bk)`` triple).
-    Arbitrary shapes are zero-padded to tile multiples and sliced
-    back — padding contributes zeros to the contraction, so results
-    are exact and independent of the tile choice.
+    routes here (``models.layers.linear``).  ``config`` selects the
+    backend and the execution configuration (see the module docstring
+    for the vocabulary); the trailing keywords are the deprecated
+    pre-plan spelling.  Arbitrary shapes are zero-padded to tile
+    multiples and sliced back — padding contributes zeros to the
+    contraction, so results are exact and independent of the config.
     """
-    impl = resolve_impl(impl)
-    if impl == "jnp":
+    config = _legacy_config("matmul", config, {
+        "impl": impl, "bm": bm, "bn": bn, "bk": bk, "variant": variant,
+        "slots": slots, "grid_order": grid_order, "tiling": tiling})
+    backend = resolve_impl(_plan.config_backend(config, "matmul"))
+    M, N, K = a.shape[0], b.shape[1], a.shape[1]
+    if out_dtype is None:
+        out_dtype = _config_out_dtype(config, _plan.OpKey(
+            "matmul", M, N, K, dtype=_plan.dtype_name(a.dtype)))
+    if backend == "jnp":
         return _ref.matmul_ref(a, b, out_dtype)
-    M, N = a.shape[0], b.shape[1]
-    bm, bn, bk, variant, slots, grid_order = _resolve_tiling(
-        tiling, "matmul", M, N, a.shape[1], a.dtype, impl,
-        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
-        grid_order=grid_order)
-    ap = _pad_to(a, (bm, bk))
-    bp = _pad_to(b, (bk, bn))
-    c = zero_stall_matmul(ap, bp, bm=bm, bn=bn, bk=bk, variant=variant,
-                          slots=slots, grid_order=grid_order,
-                          interpret=(impl == "interpret"),
-                          out_dtype=out_dtype)
+    cfg = _plan.resolve(config, op="matmul", M=M, N=N, K=K,
+                        dtype=a.dtype, backend=backend)
+    ap = _pad_to(a, (cfg.bm, cfg.bk))
+    bp = _pad_to(b, (cfg.bk, cfg.bn))
+    c = zero_stall_matmul(ap, bp, interpret=(backend == "interpret"),
+                          out_dtype=out_dtype, **cfg.matmul_kwargs())
     return c[:M, :N]
 
 
-def grouped_matmul(a: jax.Array, b: jax.Array, *, impl: str = "auto",
-                   bm: int = 128, bn: int = 128, bk: int = 128,
-                   variant: str = "dobu", slots: int | None = None,
-                   tiling=None, out_dtype=None) -> jax.Array:
+def grouped_matmul(a: jax.Array, b: jax.Array, *, config=None,
+                   out_dtype=None, impl=_UNSET, bm=_UNSET, bn=_UNSET,
+                   bk=_UNSET, variant=_UNSET, slots=_UNSET,
+                   tiling=_UNSET) -> jax.Array:
     """(G,M,K) @ (G,K,N) -> (G,M,N) per-expert matmul.
 
     The MoE dispatch path (``models.moe.moe_mlp``): expert FFNs run as
     one grouped kernel whose revolving buffer streams across expert
     boundaries, so the MXU never idles on an expert switch.  Same
-    ``impl``/``tiling`` vocabulary as :func:`matmul`.
+    ``config`` vocabulary as :func:`matmul`.
     """
-    impl = resolve_impl(impl)
-    if impl == "jnp":
-        return _ref.grouped_matmul_ref(a, b, out_dtype)
-    G, M, _ = a.shape
+    config = _legacy_config("grouped_matmul", config, {
+        "impl": impl, "bm": bm, "bn": bn, "bk": bk, "variant": variant,
+        "slots": slots, "tiling": tiling})
+    backend = resolve_impl(_plan.config_backend(config, "grouped_matmul"))
+    G, M, K = a.shape
     N = b.shape[2]
-    bm, bn, bk, variant, slots, _ = _resolve_tiling(
-        tiling, "grouped_matmul", M, N, a.shape[2], a.dtype, impl,
-        groups=G, bm=bm, bn=bn, bk=bk, variant=variant, slots=slots)
-    ap = _pad_to(a, (1, bm, bk))
-    bp = _pad_to(b, (1, bk, bn))
-    c = grouped_zero_stall_matmul(ap, bp, bm=bm, bn=bn, bk=bk,
-                                  variant=variant, slots=slots,
-                                  interpret=(impl == "interpret"),
+    if out_dtype is None:
+        out_dtype = _config_out_dtype(config, _plan.OpKey(
+            "grouped_matmul", M, N, K, groups=G,
+            dtype=_plan.dtype_name(a.dtype)))
+    if backend == "jnp":
+        return _ref.grouped_matmul_ref(a, b, out_dtype)
+    cfg = _plan.resolve(config, op="grouped_matmul", M=M, N=N,
+                        K=K, dtype=a.dtype, backend=backend,
+                        groups=G)
+    ap = _pad_to(a, (1, cfg.bm, cfg.bk))
+    bp = _pad_to(b, (1, cfg.bk, cfg.bn))
+    c = grouped_zero_stall_matmul(ap, bp, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
+                                  variant=cfg.variant, slots=cfg.slots,
+                                  interpret=(backend == "interpret"),
                                   out_dtype=out_dtype)
     return c[:, :M, :N]
 
 
-def quantized_matmul(x: jax.Array, qw: QTensor, *, impl: str = "auto",
-                     bm: int = 128, bn: int = 128, bk: int = 128,
-                     variant: str = "dobu", slots: int | None = None,
-                     grid_order: str = "ijk", tiling=None,
-                     out_dtype=None) -> jax.Array:
+def quantized_matmul(x: jax.Array, qw: QTensor, *, config=None,
+                     out_dtype=None, impl=_UNSET, bm=_UNSET, bn=_UNSET,
+                     bk=_UNSET, variant=_UNSET, slots=_UNSET,
+                     grid_order=_UNSET, tiling=_UNSET) -> jax.Array:
     """C = x @ qw through the int8 zero-stall engine (W8A8).
 
     ``x`` (M, K) is a full-precision activation, dynamically quantized
@@ -159,75 +229,91 @@ def quantized_matmul(x: jax.Array, qw: QTensor, *, impl: str = "auto",
     exact zeros, so the path stays lengths-aware); ``qw`` is a
     :class:`~repro.quant.QTensor` weight.  The int8 kernel accumulates
     in exact int32 and fuses the ``row_scale * col_scale`` dequant
-    into its epilogue.  ``tiling="auto"`` tunes in the *int8*
-    configuration space — 1-byte tiles halve the VMEM footprint, so
-    the legal tile space is a superset of bf16's.
+    into its epilogue.  Auto configs tune in the *int8* configuration
+    space — 1-byte tiles halve the VMEM footprint, so the legal tile
+    space is a superset of bf16's (and plan entries key on the int8
+    dtype, never colliding with bf16 entries).
 
     ``fmt="fp8"`` QTensors take the simulated-fp8 route: dequantize to
     the activation dtype and run the standard (still Pallas) kernel —
     the e4m3 storage rounding is the simulation.
     """
+    config = _legacy_config("quantized_matmul", config, {
+        "impl": impl, "bm": bm, "bn": bn, "bk": bk, "variant": variant,
+        "slots": slots, "grid_order": grid_order, "tiling": tiling})
     if not isinstance(qw, QTensor):
         raise TypeError(f"qw must be a QTensor, got {type(qw).__name__}")
     if qw.fmt != "int8":
-        return matmul(x, qw.dequantize(x.dtype), impl=impl, bm=bm, bn=bn,
-                      bk=bk, variant=variant, slots=slots,
-                      grid_order=grid_order, tiling=tiling,
+        return matmul(x, qw.dequantize(x.dtype), config=config,
                       out_dtype=out_dtype)
-    impl = resolve_impl(impl)
-    out_dtype = out_dtype or x.dtype
+    backend = resolve_impl(_plan.config_backend(config, "matmul"))
+    M, N, K = x.shape[0], qw.shape[1], x.shape[1]
+    out_dtype = (out_dtype
+                 or _config_out_dtype(config, _plan.OpKey(
+                     "matmul", M, N, K, dtype="int8"))
+                 or x.dtype)
     x_q, x_s = quantize_rows(x)
     w_q, w_s = qw.data, qw.scale.astype(jnp.float32)
-    if impl == "jnp":
+    if backend == "jnp":
         return _ref.quantized_matmul_ref(x_q, w_q, x_s, w_s, out_dtype)
-    M, N = x_q.shape[0], w_q.shape[1]
-    bm, bn, bk, variant, slots, grid_order = _resolve_tiling(
-        tiling, "matmul", M, N, x_q.shape[1], jnp.int8, impl,
-        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
-        grid_order=grid_order)
+    cfg = _plan.resolve(config, op="matmul", M=M, N=N, K=K,
+                        dtype=jnp.int8, backend=backend)
     c = quantized_zero_stall_matmul(
-        _pad_to(x_q, (bm, bk)), _pad_to(w_q, (bk, bn)),
-        _pad_to(x_s, (bm, 1)), _pad_to(w_s, (1, bn)),
-        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
-        grid_order=grid_order, interpret=(impl == "interpret"),
-        out_dtype=out_dtype)
+        _pad_to(x_q, (cfg.bm, cfg.bk)), _pad_to(w_q, (cfg.bk, cfg.bn)),
+        _pad_to(x_s, (cfg.bm, 1)), _pad_to(w_s, (1, cfg.bn)),
+        interpret=(backend == "interpret"), out_dtype=out_dtype,
+        **cfg.matmul_kwargs())
     return c[:M, :N]
 
 
-def quantized_grouped_matmul(x: jax.Array, qw: QTensor, *,
-                             impl: str = "auto", bm: int = 128,
-                             bn: int = 128, bk: int = 128,
-                             variant: str = "dobu",
-                             slots: int | None = None, tiling=None,
-                             out_dtype=None) -> jax.Array:
+def quantized_grouped_matmul(x: jax.Array, qw: QTensor, *, config=None,
+                             out_dtype=None, impl=_UNSET, bm=_UNSET,
+                             bn=_UNSET, bk=_UNSET, variant=_UNSET,
+                             slots=_UNSET, tiling=_UNSET) -> jax.Array:
     """(G,M,K) activations @ QTensor (G,K,N) expert bank (W8A8 MoE)."""
+    config = _legacy_config("quantized_grouped_matmul", config, {
+        "impl": impl, "bm": bm, "bn": bn, "bk": bk, "variant": variant,
+        "slots": slots, "tiling": tiling})
     if not isinstance(qw, QTensor):
         raise TypeError(f"qw must be a QTensor, got {type(qw).__name__}")
     if qw.fmt != "int8":
-        return grouped_matmul(x, qw.dequantize(x.dtype), impl=impl, bm=bm,
-                              bn=bn, bk=bk, variant=variant, slots=slots,
-                              tiling=tiling, out_dtype=out_dtype)
-    impl = resolve_impl(impl)
-    out_dtype = out_dtype or x.dtype
+        return grouped_matmul(x, qw.dequantize(x.dtype), config=config,
+                              out_dtype=out_dtype)
+    backend = resolve_impl(_plan.config_backend(config, "grouped_matmul"))
+    G, M, K = x.shape
+    N = qw.shape[2]
+    out_dtype = (out_dtype
+                 or _config_out_dtype(config, _plan.OpKey(
+                     "grouped_matmul", M, N, K, groups=G, dtype="int8"))
+                 or x.dtype)
     x_q, x_s = quantize_rows(x)
     w_q, w_s = qw.data, qw.scale.astype(jnp.float32)
-    if impl == "jnp":
+    if backend == "jnp":
         return _ref.quantized_grouped_matmul_ref(x_q, w_q, x_s, w_s,
                                                  out_dtype)
-    G, M, _ = x_q.shape
-    N = w_q.shape[2]
-    bm, bn, bk, variant, slots, _ = _resolve_tiling(
-        tiling, "grouped_matmul", M, N, x_q.shape[2], jnp.int8, impl,
-        groups=G, bm=bm, bn=bn, bk=bk, variant=variant, slots=slots)
+    cfg = _plan.resolve(config, op="grouped_matmul", M=M, N=N,
+                        K=K, dtype=jnp.int8, backend=backend,
+                        groups=G)
     c = quantized_grouped_zero_stall_matmul(
-        _pad_to(x_q, (1, bm, bk)), _pad_to(w_q, (1, bk, bn)),
-        _pad_to(x_s, (1, bm, 1)), _pad_to(w_s, (1, 1, bn)),
-        bm=bm, bn=bn, bk=bk, variant=variant, slots=slots,
-        interpret=(impl == "interpret"), out_dtype=out_dtype)
+        _pad_to(x_q, (1, cfg.bm, cfg.bk)), _pad_to(w_q, (1, cfg.bk, cfg.bn)),
+        _pad_to(x_s, (1, cfg.bm, 1)), _pad_to(w_s, (1, 1, cfg.bn)),
+        bm=cfg.bm, bn=cfg.bn, bk=cfg.bk, variant=cfg.variant,
+        slots=cfg.slots, interpret=(backend == "interpret"),
+        out_dtype=out_dtype)
     return c[:, :M, :N]
 
 
 _FALLBACK_WARNED: set[str] = set()
+
+
+def reset_fallback_warnings() -> None:
+    """Forget which fallback reasons have already warned.
+
+    ``_warn_fallback_once`` is process-global warn-once state; tests
+    asserting on the warning (or its absence) call this (via an
+    autouse fixture) so their outcome is order-independent.
+    """
+    _FALLBACK_WARNED.clear()
 
 
 def _warn_fallback_once(reason: str) -> None:
@@ -241,23 +327,27 @@ def _warn_fallback_once(reason: str) -> None:
                       RuntimeWarning, stacklevel=3)
 
 
-def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-              impl: str = "auto", causal: bool = True,
-              bq: int = 128, bkv: int = 128, tiling=None,
-              scale: float | None = None,
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
+              causal: bool = True, scale: float | None = None,
               q_lens: jax.Array | None = None,
-              kv_lens: jax.Array | None = None) -> jax.Array:
+              kv_lens: jax.Array | None = None,
+              impl=_UNSET, bq=_UNSET, bkv=_UNSET,
+              tiling=_UNSET) -> jax.Array:
     """(B,H,S,D) flash attention; ref oracle for jnp path.
 
-    ``q_lens``/``kv_lens``: optional (B,) per-sequence valid lengths
-    (variable-length/continuous batches).  Non-tile-multiple sequence
-    lengths are zero-padded up to the tile and masked via the length
-    operands — padding contributes exact zeros, so ragged serving
-    shapes stay on the Pallas kernel instead of silently routing to
-    the reference path.
+    ``config`` follows the module vocabulary (tile tuples are
+    ``(bq, bkv)`` pairs here; a KernelConfig contributes its
+    ``bq``/``bkv`` fields).  ``q_lens``/``kv_lens``: optional (B,)
+    per-sequence valid lengths (variable-length/continuous batches).
+    Non-tile-multiple sequence lengths are zero-padded up to the tile
+    and masked via the length operands — padding contributes exact
+    zeros, so ragged serving shapes stay on the Pallas kernel instead
+    of silently routing to the reference path.
     """
-    impl = resolve_impl(impl)
-    if impl == "jnp":
+    config = _legacy_config("attention", config, {
+        "impl": impl, "bq": bq, "bkv": bkv, "tiling": tiling})
+    backend = resolve_impl(_plan.config_backend(config, "attention"))
+    if backend == "jnp":
         return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
                                         q_lens=q_lens, kv_lens=kv_lens)
     B, H, Sq, D = q.shape
@@ -268,18 +358,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         _warn_fallback_once("causal attention with Sq != Skv and no "
                             "length operands has ambiguous alignment")
         return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
-    if tiling == "auto":
-        from repro import tune
-        bq, bkv = tune.best_attention_config(
-            Sq, Skv, D, dtype=q.dtype, backend=impl,
-            batch_heads=B * H)
-    elif isinstance(tiling, (tuple, list)) and len(tiling) == 2:
-        bq, bkv = map(int, tiling)
-    elif tiling is not None:
-        raise ValueError(f"attention tiling must be None, 'auto' or "
-                         f"(bq, bkv), got {tiling!r}")
-    bq_ = min(bq, Sq)
-    bkv_ = min(bkv, Skv)
+    cfg = _plan.resolve(config, op="attention", M=Sq, N=D, K=Skv,
+                        dtype=q.dtype, backend=backend, batch_heads=B * H)
+    bq_ = min(cfg.bq, Sq)
+    bkv_ = min(cfg.bkv, Skv)
     if Sq % bq_ or Skv % bkv_:
         # pad to tile multiples and mask — the lengths default to the
         # unpadded extents, so padding contributes exact zeros.
@@ -292,7 +374,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         v = _pad_to(v, (1, 1, bkv_, 1))
     out = _flash(q, k, v, q_lens=q_lens, kv_lens=kv_lens,
                  bq=bq_, bkv=bkv_, causal=causal, scale=scale,
-                 interpret=(impl == "interpret"))
+                 interpret=(backend == "interpret"))
     return out[:, :, :Sq]
 
 
@@ -306,7 +388,8 @@ def host_tiled_matmul(a: jax.Array, b: jax.Array, *,
     arithmetic, bounds tests, dynamic slices) instead of the grid
     sequencer — the analogue of Snitch's 2-instructions-per-outer-
     iteration overhead.  Used by benchmarks to quantify the ZONL win;
-    math is identical.
+    math is identical.  (Deliberately outside the plan/config API: this
+    IS the old world the plan machinery replaces.)
     """
     (M, K), (_, N) = a.shape, b.shape
     if M % bm or N % bn or K % bk:

@@ -54,29 +54,12 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+# canonical (variant, slots) rules — shared with KernelConfig validation
+from repro.plan.config import resolve_slots
 
 __all__ = ["zero_stall_matmul", "DEFAULT_TILES", "resolve_slots"]
 
 DEFAULT_TILES = (128, 128, 128)  # MXU-aligned (multiples of 128)
-
-
-def resolve_slots(variant: str, slots: int | None) -> int:
-    """Buffer depth from the (variant, slots) pair; slots wins if given.
-
-    ``variant`` is the paper's two-point vocabulary ("dobu" = 2-slot
-    revolving buffer, "single" = serialized); ``slots`` generalizes it.
-    Contradictory combinations are rejected rather than guessed.
-    """
-    if slots is None:
-        return 2 if variant == "dobu" else 1
-    if slots < 1:
-        raise ValueError(f"slots must be >= 1, got {slots}")
-    if variant == "single" and slots != 1:
-        raise ValueError(f"variant='single' means slots=1, got slots={slots}")
-    if variant == "dobu" and slots < 2:
-        raise ValueError("variant='dobu' needs slots >= 2 "
-                         "(use variant='single' for the serialized baseline)")
-    return slots
 
 
 def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,

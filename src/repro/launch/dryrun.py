@@ -122,7 +122,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, run: RunConfig | None = None
     shape = SHAPES[shape_name]
     model = build_model(cfg)
     # ctx.mesh enables sequence-parallel activation constraints
-    ctx = Ctx(impl="jnp", dtype=jnp.bfloat16, mesh=mesh)
+    ctx = Ctx(plan="jnp", dtype=jnp.bfloat16, mesh=mesh)
     import os as _os
     mb_env = _os.environ.get("REPRO_MB")
     run = run or RunConfig(

@@ -15,6 +15,7 @@ the masked flash-attention kernel.
 from __future__ import annotations
 
 import argparse
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -56,22 +57,41 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
                 prompt_len: int = 32, gen_len: int = 32, seed: int = 0,
                 dtype=jnp.float32, num_slots: int | None = None,
                 mixed: bool = False, impl: str = "jnp",
+                plan=None, plan_out: str | None = None,
                 step_timeout_s: float | None = None) -> dict:
+    """Run a synthetic request batch through the serving engine.
+
+    ``impl`` is the backend; ``plan`` is forwarded to
+    :class:`~repro.serve.ServeEngine` (a :class:`repro.plan.Plan`, a
+    path to a saved plan JSON, or ``"trace"`` to resolve every kernel
+    config ahead of time); ``plan_out`` saves the engine's active plan
+    afterwards — the execution schedule as a shippable artifact.
+    """
+    from repro.plan import Plan
     cfg = get_config(arch, reduced=reduced)
     model = build_model(cfg)
-    ctx = Ctx(impl=impl, dtype=dtype)
+    ctx = Ctx(plan=impl, dtype=dtype)
     key = jax.random.PRNGKey(seed)
     params = model.init(key, dtype=jnp.float32)
 
+    if isinstance(plan, str) and plan != "trace":
+        plan = Plan.load(plan)
+    if isinstance(plan, Plan) and plan.backend != impl:
+        warnings.warn(
+            f"serve: the loaded plan's backend {plan.backend!r} overrides "
+            f"impl={impl!r} — the engine executes under the plan's backend",
+            RuntimeWarning, stacklevel=2)
     slots = num_slots or min(batch, 4)
     frontier = prompt_len + (cfg.frontend_tokens if cfg.frontend else 0)
     max_len = frontier + gen_len
     cache_kwargs = {"enc_len": prompt_len} if cfg.family == "encdec" else None
     engine = ServeEngine(model, params, ctx, num_slots=slots,
                          max_len=max_len, cache_dtype=dtype,
-                         cache_kwargs=cache_kwargs)
+                         cache_kwargs=cache_kwargs, plan=plan)
     reqs = _make_requests(cfg, key, batch, prompt_len, gen_len, mixed)
     results = engine.run(reqs, step_timeout_s=step_timeout_s)
+    if plan_out:
+        engine.plan.save(plan_out)
 
     gen = np.full((batch, gen_len), -1, np.int64)
     for rid, res in results.items():
@@ -102,13 +122,19 @@ def main():
                     help="mixed prompt lengths (ragged traffic)")
     ap.add_argument("--impl", default="jnp",
                     choices=["auto", "jnp", "pallas", "interpret"])
+    ap.add_argument("--plan", default=None,
+                    help="'trace' to resolve all kernel configs ahead of "
+                         "time, or a path to a saved plan JSON")
+    ap.add_argument("--plan-out", default=None,
+                    help="save the engine's active execution plan here")
     ap.add_argument("--step-timeout", type=float, default=None,
                     help="fail if any engine step exceeds this many seconds")
     args = ap.parse_args()
     out = serve_batch(args.arch, reduced=args.reduced, batch=args.batch,
                       prompt_len=args.prompt_len, gen_len=args.gen_len,
                       num_slots=args.num_slots, mixed=args.mixed,
-                      impl=args.impl, step_timeout_s=args.step_timeout)
+                      impl=args.impl, plan=args.plan, plan_out=args.plan_out,
+                      step_timeout_s=args.step_timeout)
     s = out["stats"]
     print(f"generated shape: {out['generated'].shape}")
     print(f"prefill: {out['prefill_s']:.2f}s ({out['prefill_tok_s']:.1f} tok/s)  "

@@ -70,7 +70,7 @@ def train_loop(arch: str, run: RunConfig, *, reduced: bool = True,
     cfg = get_config(arch, reduced=reduced)
     model = build_model(cfg)
     mesh = make_host_mesh()
-    ctx = Ctx(impl="jnp",
+    ctx = Ctx(plan="jnp",
               dtype=jnp.float32 if run.dtype == "float32" else jnp.bfloat16,
               mesh=mesh if mesh.devices.size > 1 else None)
 

@@ -64,8 +64,8 @@ def _cross_attention(p: Params, x, enc_k, enc_v, cfg: ModelConfig,
     hd = cfg.resolved_head_dim
     q = L.linear(p["wq"], x, ctx).reshape(B, S, cfg.n_heads, hd)
     o = L._gqa_full(q, enc_k, enc_v, causal=False,
-                    impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
-                    tiling=L.attn_tiling(ctx))
+                    impl=L.ops.resolve_impl(ctx.plan.backend), ctx=ctx,
+                    config=ctx.plan)
     return L.linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd), ctx)
 
 
@@ -180,8 +180,8 @@ def prefill(params: Params, tokens: jax.Array, frames: jax.Array,
         q = L.rope(q, positions, cfg.rope_theta)
         k = L.rope(k, positions, cfg.rope_theta)
         o = L._gqa_full(q, k, v, causal=True,
-                        impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
-                        tiling=L.attn_tiling(ctx), lengths=lens)
+                        impl=L.ops.resolve_impl(ctx.plan.backend), ctx=ctx,
+                        config=ctx.plan, lengths=lens)
         x = x + L.linear(lp["self_attn"]["wo"],
                          o.reshape(B, S, cfg.n_heads * hd), ctx)
         h = L.rms_norm(lp["cross_norm"], x, cfg.norm_eps)

@@ -155,8 +155,8 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
         q = L.rope(q, positions, cfg.rope_theta)
         k = L.rope(k, positions, cfg.rope_theta)
         o = L._gqa_full(q, k, v, causal=True,
-                        impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
-                        tiling=L.attn_tiling(ctx), lengths=lens)
+                        impl=L.ops.resolve_impl(ctx.plan.backend), ctx=ctx,
+                        config=ctx.plan, lengths=lens)
         h = h + L.linear(sp["attn"]["wo"],
                          o.reshape(B, S, cfg.n_heads * hd), ctx)
         h = h + L.mlp(sp["mlp"], L.rms_norm(sp["mlp_norm"], h, cfg.norm_eps),

@@ -10,13 +10,16 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro import plan as _plan
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
+from repro.plan import UNSET as _UNSET
 from repro.quant.tensor import QTensor
 
 Params = dict[str, Any]
@@ -24,19 +27,79 @@ Params = dict[str, Any]
 
 @dataclasses.dataclass(frozen=True)
 class Ctx:
-    """Per-call execution context."""
-    impl: str = "auto"            # kernel dispatch: auto | jnp | pallas | interpret
+    """Per-call execution context.
+
+    ``plan`` is the one execution-configuration field
+    (:mod:`repro.plan`): a backend string ("auto" | "jnp" | "pallas" |
+    "interpret", with auto-tuned kernel configs), a
+    :class:`~repro.plan.KernelConfig` (one fixed config everywhere), a
+    :class:`~repro.plan.Plan` (per-call-site table, e.g. from
+    :func:`repro.plan.trace_model`), a tile tuple, or ``None`` (the
+    historical fixed 128³ default).  It is normalized to a ``Plan`` at
+    construction; quantized execution is the plan's ``quant`` field.
+
+    The pre-plan ``impl=``/``tiling=``/``quant=`` keywords still
+    construct (deprecated, one ``DeprecationWarning``) and remain
+    readable as attributes, derived from the plan.
+    """
+    plan: Any = "auto"            # execution plan (repro.plan vocabulary)
     dtype: Any = jnp.bfloat16     # compute dtype
     decode: bool = False
     mesh: Any = None              # when set, activation sharding constraints
                                   # (sequence parallelism) are applied
-    tiling: Any = "auto"          # kernel config: "auto" (repro.tune) |
-                                  # None (hardcoded 128³) | explicit triple;
-                                  # ignored on the jnp path
-    quant: Any = None             # quantized execution: None (QTensor weights
-                                  # dequantize on the fly) | "int8" (W8A8
-                                  # zero-stall kernels) | "fp8" (simulated:
-                                  # e4m3 storage rounding, fp compute)
+
+    # impl/tiling/quant are keyword-only constructor shims + derived
+    # read-only properties, NOT dataclass fields: dataclasses.replace()
+    # therefore round-trips on the real fields alone, so
+    # replace(ctx, plan=other) can never conflict with stale derived
+    # values.
+    def __init__(self, plan: Any = "auto", dtype: Any = jnp.bfloat16,
+                 decode: bool = False, mesh: Any = None, *,
+                 impl: Any = _UNSET, tiling: Any = _UNSET,
+                 quant: Any = _UNSET):
+        legacy = {n: v for n, v in
+                  (("impl", impl), ("tiling", tiling), ("quant", quant))
+                  if v is not _UNSET}
+        if legacy:
+            if isinstance(plan, _plan.Plan) or plan != "auto":
+                raise ValueError(
+                    f"Ctx: cannot combine plan= with the deprecated "
+                    f"{sorted(legacy)} keyword(s); set the value on the "
+                    f"plan instead")
+            warnings.warn(
+                "Ctx(impl=, tiling=, quant=) is deprecated; pass "
+                "Ctx(plan=...) — a backend string, KernelConfig, Plan, "
+                "tile tuple or None (see repro.plan)",
+                DeprecationWarning, stacklevel=2)
+            p = _plan.Plan.from_legacy(impl=legacy.get("impl", "auto"),
+                                       tiling=legacy.get("tiling", "auto"),
+                                       quant=legacy.get("quant"))
+        else:
+            p = _plan.as_plan(plan)
+        object.__setattr__(self, "plan", p)
+        object.__setattr__(self, "dtype", dtype)
+        object.__setattr__(self, "decode", decode)
+        object.__setattr__(self, "mesh", mesh)
+
+    @property
+    def impl(self) -> str:
+        """Deprecated read: the plan's backend."""
+        return self.plan.backend
+
+    @property
+    def tiling(self):
+        """Deprecated read: the plan's default policy, old vocabulary."""
+        return self.plan.legacy_tiling()
+
+    @property
+    def quant(self):
+        """Deprecated read: the plan's quantized-execution mode."""
+        return self.plan.quant
+
+    def with_plan(self, plan) -> "Ctx":
+        """This context with a different execution plan."""
+        return Ctx(plan=plan, dtype=self.dtype, decode=self.decode,
+                   mesh=self.mesh)
 
 
 def shard_seq(x: jax.Array, ctx: "Ctx") -> jax.Array:
@@ -128,10 +191,10 @@ def linear(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
     """x: (..., d_in) @ w -> (..., d_out) through the zero-stall engine.
 
     :class:`~repro.quant.QTensor` weights (``Model.quantize_weights``)
-    dispatch by ``ctx.quant``: ``"int8"`` runs the W8A8 zero-stall
-    kernel (dynamic per-row activation quantization, fused dequant
-    epilogue); anything else dequantizes the weight on the fly and
-    runs the standard kernel — so fp8-simulated and opted-out
+    dispatch by ``ctx.plan.quant``: ``"int8"`` runs the W8A8
+    zero-stall kernel (dynamic per-row activation quantization, fused
+    dequant epilogue); anything else dequantizes the weight on the fly
+    and runs the standard kernel — so fp8-simulated and opted-out
     quantized params still execute on the Pallas path, never a jnp
     fallback.
     """
@@ -139,17 +202,16 @@ def linear(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if isinstance(w, QTensor):
-        if ctx.quant == "int8" and w.fmt == "int8" and w.w8a8:
-            y = ops.quantized_matmul(x2, w, impl=ctx.impl,
-                                     tiling=ctx.tiling, out_dtype=ctx.dtype)
+        if ctx.plan.quant == "int8" and w.fmt == "int8" and w.w8a8:
+            y = ops.quantized_matmul(x2, w, config=ctx.plan,
+                                     out_dtype=ctx.dtype)
         else:
-            y = ops.matmul(x2, w.dequantize(ctx.dtype), impl=ctx.impl,
-                           tiling=ctx.tiling, out_dtype=ctx.dtype)
+            y = ops.matmul(x2, w.dequantize(ctx.dtype), config=ctx.plan,
+                           out_dtype=ctx.dtype)
         d_out = w.shape[-1]
     else:
         w = w.astype(ctx.dtype)
-        y = ops.matmul(x2, w, impl=ctx.impl, tiling=ctx.tiling,
-                       out_dtype=ctx.dtype)
+        y = ops.matmul(x2, w, config=ctx.plan, out_dtype=ctx.dtype)
         d_out = w.shape[-1]
     y = y.reshape(*lead, d_out)
     if "b" in p:
@@ -262,13 +324,6 @@ def _seq_shard4(t: jax.Array, ctx: "Ctx | None") -> jax.Array:
         t, NamedSharding(ctx.mesh, P(b_ax, "model", None, None)))
 
 
-def attn_tiling(ctx: "Ctx") -> "str | None":
-    """Ctx.tiling projected onto attention: matmul-shaped (bm, bn, bk)
-    triples don't apply to attention's (bq, bkv) tiles; None and
-    "auto" pass through so a Ctx-level opt-out is honored everywhere."""
-    return ctx.tiling if ctx.tiling in (None, "auto") else None
-
-
 def _lengths_mask(S: int, T: int, lengths: jax.Array,
                   causal: bool) -> jax.Array:
     """(B, S, T) validity mask for per-sequence valid lengths.
@@ -283,8 +338,26 @@ def _lengths_mask(S: int, T: int, lengths: jax.Array,
     return m
 
 
+def _attn_config(config, impl: str):
+    """ops.attention config for an already-resolved backend.
+
+    Plans and KernelConfigs carry their own backend; the bare-string /
+    tuple / None vocabulary gets ``impl`` folded in so both dispatch
+    decisions (here and inside ops.attention) agree."""
+    if isinstance(config, (_plan.Plan, _plan.KernelConfig)):
+        return config
+    if config == "auto":
+        return _plan.Plan(backend=impl)
+    if config is None:
+        return _plan.KernelConfig(backend=impl)
+    if isinstance(config, (tuple, list)) and len(config) == 2:
+        return _plan.KernelConfig(backend=impl, bq=int(config[0]),
+                                  bkv=int(config[1]))
+    return config
+
+
 def _gqa_full(q, k, v, *, causal: bool, impl: str,
-              ctx: "Ctx | None" = None, tiling="auto",
+              ctx: "Ctx | None" = None, config="auto",
               lengths: jax.Array | None = None) -> jax.Array:
     """q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D).
 
@@ -312,7 +385,7 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
         kr = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
         vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
         o = ops.attention(q.transpose(0, 2, 1, 3), kr, vr,
-                          impl=impl, causal=causal, tiling=tiling,
+                          config=_attn_config(config, impl), causal=causal,
                           q_lens=lengths, kv_lens=lengths)
         return o.transpose(0, 2, 1, 3)
     # merged-head path (callers gate via _merged_head_plan):
@@ -516,9 +589,10 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     n_pad = _merged_head_plan(cfg.n_heads, k.shape[2], ctx)
     if n_pad is not None:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, n_pad), (0, 0)))
-    o = _gqa_full(q, k, v, causal=causal, impl=ops.resolve_impl(ctx.impl),
+    o = _gqa_full(q, k, v, causal=causal,
+                  impl=ops.resolve_impl(ctx.plan.backend),
                   ctx=ctx if n_pad is not None else None,
-                  tiling=attn_tiling(ctx), lengths=lengths)
+                  config=ctx.plan, lengths=lengths)
     if n_pad:
         o = o[:, :, :cfg.n_heads]
     return linear(p["wo"], o.reshape(B, S, cfg.n_heads * hd), ctx)

@@ -16,8 +16,9 @@ the launcher / dry-run / tests treat every family identically:
 per-channel scales); it is the same generic pytree walk for all five
 families because every family lays weights out as ``(..., d_in,
 d_out)`` leaves under ``"w"`` (linear layers) or raw expert banks
-(MoE).  Pair it with ``Ctx(quant="int8")`` to run the W8A8 zero-stall
-kernels; with ``Ctx.quant=None`` the quantized params still serve
+(MoE).  Pair it with ``Ctx(plan=Plan(quant="int8"))`` to run the
+W8A8 zero-stall kernels; with the default (``plan.quant=None``) the
+quantized params still serve
 (dequantize-on-the-fly) — see :mod:`repro.quant`.
 
 `prefill` is the fused cache-populating prompt ingestion used by the

@@ -30,18 +30,17 @@ def _expert_matmul(x: jax.Array, w, ctx: Ctx) -> jax.Array:
     """(E,C,d) @ expert bank through the grouped zero-stall engine.
 
     Mirrors ``layers.linear``'s quantized dispatch: QTensor banks run
-    the W8A8 grouped kernel under ``ctx.quant == "int8"`` and
+    the W8A8 grouped kernel under ``ctx.plan.quant == "int8"`` and
     dequantize onto the standard grouped kernel otherwise.
     """
     if isinstance(w, QTensor):
-        if ctx.quant == "int8" and w.fmt == "int8" and w.w8a8:
+        if ctx.plan.quant == "int8" and w.fmt == "int8" and w.w8a8:
             return ops.quantized_grouped_matmul(
-                x, w, impl=ctx.impl, tiling=ctx.tiling, out_dtype=ctx.dtype)
+                x, w, config=ctx.plan, out_dtype=ctx.dtype)
         w = w.dequantize(ctx.dtype)
     else:
         w = w.astype(ctx.dtype)
-    return ops.grouped_matmul(x, w, impl=ctx.impl, tiling=ctx.tiling,
-                              out_dtype=ctx.dtype)
+    return ops.grouped_matmul(x, w, config=ctx.plan, out_dtype=ctx.dtype)
 
 
 def init_moe_mlp(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:

@@ -227,8 +227,8 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
         q = L.rope(q, positions, cfg.rope_theta)
         k = L.rope(k, positions, cfg.rope_theta)
         o = L._gqa_full(q, k, v, causal=True,
-                        impl=L.ops.resolve_impl(ctx.impl), ctx=ctx,
-                        tiling=L.attn_tiling(ctx), lengths=lens)
+                        impl=L.ops.resolve_impl(ctx.plan.backend), ctx=ctx,
+                        config=ctx.plan, lengths=lens)
         x = x + L.linear(lp["attn"]["wo"],
                          o.reshape(B, S, cfg.n_heads * hd), ctx)
         h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)

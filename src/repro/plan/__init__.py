@@ -1,0 +1,49 @@
+"""Typed execution plans (`repro.plan`).
+
+The paper's zero-overhead loop nests work because the loop/tile
+configuration is programmed ONCE, ahead of the hot loop (CSR writes),
+not re-decided per iteration.  This package is the software analogue:
+the execution configuration of every kernel call is a first-class,
+validated, serializable artifact instead of a per-call kwarg spray.
+
+Three types:
+
+* :class:`KernelConfig` — one frozen, validated execution
+  configuration (backend, matmul tiles ``bm/bn/bk``, revolving-buffer
+  ``variant``/``slots``, ``grid_order``, attention tiles ``bq/bkv``,
+  quantized-execution format, output dtype).  The CSR-write analogue.
+* :class:`OpKey` — the signature of one kernel call site:
+  ``(op, M, N, K, groups, dtype)``, shape-bucketed exactly like the
+  tuner cache.
+* :class:`Plan` — a JSON-serializable mapping ``OpKey → KernelConfig``
+  plus the plan-wide backend / quant mode / default policy.  A tuned
+  :class:`repro.tune.TuneCache` exports a Plan
+  (:meth:`Plan.from_tune_cache`); a Plan pre-seeds the cache
+  (:meth:`Plan.seed_tune_cache`).
+
+Every ``ops.*`` entry point takes a single ``config`` argument with
+the vocabulary ``KernelConfig | Plan | "auto" | (bm, bn, bk) | None``;
+model code threads a plan through ``models.Ctx(plan=...)``.
+
+:func:`trace_model` abstract-evals a model's prefill / decode / train
+call shapes (``jax.eval_shape`` — no FLOPs, no memory) and returns a
+Plan with every kernel config resolved ahead of time, so e.g. the
+serving decode loop never touches the tuner:
+
+    plan = trace_model(model, [batch_sds], ctx, max_len=128)
+    plan.save("gemma.plan.json")                   # diffable, shippable
+    engine = ServeEngine(model, params, ctx, plan=plan)
+"""
+
+from __future__ import annotations
+
+from repro.plan.config import (BACKENDS, KernelConfig, OpKey, UNSET,
+                               dtype_name)
+from repro.plan.plan import Plan, as_plan, config_backend, resolve
+from repro.plan.trace import trace_model
+
+__all__ = [
+    "KernelConfig", "OpKey", "Plan",
+    "as_plan", "config_backend", "resolve", "trace_model",
+    "dtype_name", "BACKENDS", "UNSET",
+]

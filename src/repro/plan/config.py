@@ -1,0 +1,233 @@
+"""`KernelConfig` and `OpKey`: the typed vocabulary of execution plans.
+
+A :class:`KernelConfig` is one complete, validated execution
+configuration of the zero-stall kernel family — the analogue of the
+paper's ahead-of-time CSR writes.  Field combinations are validated at
+construction with explicit ``ValueError`` messages (the old
+stringly-typed ``_resolve_tiling`` silently ignored contradictory
+kwargs); tests lock each message.
+
+An :class:`OpKey` names one kernel call site by its mathematical
+signature ``(op, M, N, K, groups, dtype)``.  Keys bucket their shape
+to the next power of two — the same bucketing as
+:class:`repro.tune.TuneCache` — so a ragged serving shape resolves to
+the same entry as its bucket.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+class _Unset:
+    """Sentinel for 'keyword not passed' with a stable repr (the API
+    snapshot in docs/api_surface.txt renders signature defaults)."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "<unset>"
+
+
+#: Module-wide "keyword not passed" sentinel (deprecation shims).
+UNSET = _Unset()
+
+BACKENDS = ("auto", "pallas", "interpret", "jnp")
+_VARIANTS = ("dobu", "single")
+_QUANTS = (None, "int8", "fp8")
+_GRID_ORDERS = ("ijk", "jik")
+_OPS = ("matmul", "grouped_matmul", "attention")
+
+
+def dtype_name(dtype) -> str:
+    """Canonical dtype name for plan/tune keys ('bfloat16', 'int8', ...)."""
+    import numpy as np
+    try:
+        return np.dtype(dtype).name
+    except TypeError:
+        # jnp.bfloat16 & friends: not a numpy dtype on older stacks
+        return getattr(dtype, "__name__", None) or str(dtype)
+
+
+def _dtype_bytes(name: str) -> int:
+    import numpy as np
+    try:
+        return np.dtype(name).itemsize
+    except TypeError:
+        return 2 if "16" in name else 1 if "8" in name else 4
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def resolve_slots(variant: str, slots: int | None) -> int:
+    """Buffer depth from the (variant, slots) pair; slots wins if given.
+
+    ``variant`` is the paper's two-point vocabulary ("dobu" = 2-slot
+    revolving buffer, "single" = serialized); ``slots`` generalizes it.
+    Contradictory combinations are rejected rather than guessed.  The
+    ONE place the rules live: the kernels
+    (``kernels.zero_stall_matmul``) and :class:`KernelConfig`
+    validation both delegate here.
+    """
+    if slots is None:
+        return 2 if variant == "dobu" else 1
+    if slots < 1:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    if variant == "single" and slots != 1:
+        raise ValueError(f"variant='single' means slots=1, got slots={slots}")
+    if variant == "dobu" and slots < 2:
+        raise ValueError("variant='dobu' needs slots >= 2 "
+                         "(use variant='single' for the serialized baseline)")
+    return slots
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One complete execution configuration, resolved ahead of time.
+
+    ``backend`` selects the kernel dispatch ("auto" = pallas on TPU,
+    jnp elsewhere); ``bm/bn/bk`` the matmul tiles; ``variant``/
+    ``slots`` the revolving-buffer depth (the paper's dobu/single
+    vocabulary, generalized); ``grid_order`` the grid walk;
+    ``bq/bkv`` the flash-attention tiles; ``quant`` the quantized
+    execution mode models dispatch on (None | "int8" | "fp8");
+    ``out_dtype`` an optional output dtype name.
+
+    All field combinations are validated here, once — a KernelConfig
+    that constructs is a KernelConfig every kernel accepts.
+    """
+
+    backend: str = "auto"
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+    variant: str = "dobu"
+    slots: int | None = None
+    grid_order: str = "ijk"
+    bq: int = 128
+    bkv: int = 128
+    quant: str | None = None
+    out_dtype: str | None = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"KernelConfig.backend must be one of {BACKENDS}, "
+                f"got {self.backend!r}")
+        for name in ("bm", "bn", "bk", "bq", "bkv"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(
+                    f"KernelConfig.{name} must be a positive integer, "
+                    f"got {v!r}")
+        if self.variant not in _VARIANTS:
+            raise ValueError(
+                f"KernelConfig.variant must be one of {_VARIANTS}, "
+                f"got {self.variant!r}")
+        if self.slots is not None and (not isinstance(self.slots, int)
+                                       or isinstance(self.slots, bool)):
+            raise ValueError(
+                f"KernelConfig.slots must be an integer >= 1 or None, "
+                f"got {self.slots!r}")
+        try:
+            resolve_slots(self.variant, self.slots)
+        except ValueError as e:
+            raise ValueError(f"KernelConfig: {e}") from None
+        if self.grid_order not in _GRID_ORDERS:
+            raise ValueError(
+                f"KernelConfig.grid_order must be a permutation in "
+                f"{_GRID_ORDERS}, got {self.grid_order!r}")
+        if self.quant not in _QUANTS:
+            raise ValueError(
+                f"KernelConfig.quant must be one of {_QUANTS}, "
+                f"got {self.quant!r}")
+        if self.out_dtype is not None and not isinstance(self.out_dtype, str):
+            # jnp.bfloat16 / np.dtype spellings canonicalize to the name
+            object.__setattr__(self, "out_dtype", dtype_name(self.out_dtype))
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_slots(self) -> int:
+        """Buffer depth: explicit ``slots`` wins, else variant default."""
+        return resolve_slots(self.variant, self.slots)
+
+    def matmul_kwargs(self) -> dict:
+        """Kwargs for ``zero_stall_matmul`` (grouped drops grid_order)."""
+        return {"bm": self.bm, "bn": self.bn, "bk": self.bk,
+                "variant": self.variant, "slots": self.slots,
+                "grid_order": self.grid_order}
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> dict:
+        """Non-default fields only (diffable, forward-compatible)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v != f.default:
+                out[f.name] = v
+        return out
+
+    @classmethod
+    def from_json(cls, d: dict) -> "KernelConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def from_candidate(cls, cand, **overrides) -> "KernelConfig":
+        """Build from a :class:`repro.tune.Candidate` (duck-typed)."""
+        kw = {"bm": cand.bm, "bn": cand.bn, "bk": cand.bk,
+              "variant": cand.variant, "slots": cand.slots,
+              "grid_order": cand.grid_order}
+        kw.update(overrides)
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class OpKey:
+    """The signature of one kernel call site.
+
+    For matmuls, ``(M, N, K)`` are the GEMM dims (``groups`` > 1 for
+    the grouped/MoE form); for attention, ``M`` = query length, ``N``
+    = head dim, ``K`` = kv length — the same convention as
+    :class:`repro.tune.Problem`.
+    """
+
+    op: str
+    M: int
+    N: int
+    K: int
+    groups: int = 1
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.op not in _OPS:
+            raise ValueError(f"OpKey.op must be one of {_OPS}, "
+                             f"got {self.op!r}")
+
+    def bucketed(self) -> "OpKey":
+        """Power-of-two shape bucket (same rounding as the tune cache)."""
+        return dataclasses.replace(
+            self, M=_next_pow2(self.M), N=_next_pow2(self.N),
+            K=_next_pow2(self.K), groups=_next_pow2(self.groups))
+
+    @property
+    def dtype_bytes(self) -> int:
+        return _dtype_bytes(self.dtype)
+
+    # ------------------------------------------------------------------
+    def to_str(self) -> str:
+        return (f"{self.op}|{self.M}x{self.N}x{self.K}"
+                f"|g{self.groups}|{self.dtype}")
+
+    @classmethod
+    def from_str(cls, s: str) -> "OpKey":
+        op, dims, g, dtype = s.split("|")
+        M, N, K = (int(d) for d in dims.split("x"))
+        return cls(op=op, M=M, N=N, K=K, groups=int(g[1:]), dtype=dtype)

@@ -1,0 +1,350 @@
+"""`Plan`: a serializable OpKey → KernelConfig execution schedule.
+
+A Plan is the whole-model analogue of one KernelConfig: the plan-wide
+backend and quantized-execution mode, a default policy for call sites
+it has no entry for, and a bucketed ``OpKey → KernelConfig`` table.
+It is what :func:`repro.plan.trace_model` produces, what
+``ServeEngine(plan=...)`` warms up from, and what ``Plan.save`` /
+``Plan.load`` round-trip through JSON — the execution schedule as a
+saveable, diffable, shippable artifact.
+
+Resolution semantics (``Plan.resolve``): an entry hit returns the
+stored config verbatim; a miss falls back to the default policy —
+``"auto"`` resolves through :mod:`repro.tune` (and memoizes the result
+into the table, so the Nth call per shape bucket is a dict lookup, and
+a traced plan performs **zero** tuner calls at run time), a
+:class:`KernelConfig` default applies unconditionally.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Iterator, Mapping
+
+from repro.plan.config import BACKENDS, KernelConfig, OpKey, dtype_name
+
+__all__ = ["Plan", "as_plan", "config_backend", "resolve"]
+
+_SCHEMA = 1
+
+
+def _tune_config(op: str, M: int, N: int, K: int, *, dtype, backend: str,
+                 groups: int = 1, batch_heads: int = 1) -> KernelConfig:
+    """One tuner resolution → KernelConfig (lazy tune import)."""
+    from repro import tune
+    if op == "attention":
+        bq, bkv = tune.best_attention_config(
+            M, K, N, dtype=dtype, backend=backend, batch_heads=batch_heads)
+        return KernelConfig(bq=bq, bkv=bkv)
+    cand = tune.best_config(op, M, N, K, dtype=dtype, backend=backend,
+                            groups=groups)
+    return KernelConfig.from_candidate(cand)
+
+
+def _tiles_config(tiles, op: str | None = None) -> KernelConfig:
+    """(bm, bn, bk) or (bq, bkv) tuple → KernelConfig.
+
+    With ``op`` given (an ops.*-level tuple), the arity must match the
+    op — a 2-tuple on a matmul (or a triple on attention) is a typo
+    whose tiles would otherwise be silently ignored.  Ctx-level tuples
+    (op=None, via :func:`as_plan`) accept either arity: a (bm, bn, bk)
+    plan legitimately leaves attention on its default (bq, bkv).
+    """
+    vals = tuple(int(t) for t in tiles)
+    if op == "attention" and len(vals) != 2:
+        raise ValueError(f"attention config tile tuple must be (bq, bkv), "
+                         f"got {tiles!r}")
+    if op in ("matmul", "grouped_matmul") and len(vals) != 3:
+        raise ValueError(f"{op} config tile tuple must be (bm, bn, bk), "
+                         f"got {tiles!r}")
+    if len(vals) == 3:
+        return KernelConfig(bm=vals[0], bn=vals[1], bk=vals[2])
+    if len(vals) == 2:
+        return KernelConfig(bq=vals[0], bkv=vals[1])
+    raise ValueError(
+        f"config tile tuple must be (bm, bn, bk) or (bq, bkv), got {tiles!r}")
+
+
+class Plan:
+    """Execution plan: backend + quant mode + default + OpKey table."""
+
+    def __init__(self, *, backend: str = "auto", quant: str | None = None,
+                 default: "KernelConfig | str | tuple | None" = "auto",
+                 entries: Mapping[OpKey, KernelConfig] | None = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"Plan.backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        if quant not in (None, "int8", "fp8"):
+            raise ValueError(f"Plan.quant must be None, 'int8' or 'fp8', "
+                             f"got {quant!r}")
+        self.backend = backend
+        self.quant = quant
+        if default is None:
+            default = KernelConfig()
+        elif isinstance(default, (tuple, list)):
+            default = _tiles_config(default)
+        if default != "auto" and not isinstance(default, KernelConfig):
+            raise ValueError(
+                f"Plan.default must be 'auto', a KernelConfig, a tile "
+                f"tuple or None, got {default!r}")
+        self.default = default
+        self.entries: dict[OpKey, KernelConfig] = {
+            k.bucketed(): v for k, v in (entries or {}).items()}
+
+    # ------------------------------------------------------------------
+    def lookup(self, key: OpKey) -> KernelConfig | None:
+        return self.entries.get(key.bucketed())
+
+    def add(self, key: OpKey, config: KernelConfig) -> None:
+        self.entries[key.bucketed()] = config
+
+    def resolve(self, op: str, M: int, N: int, K: int, *, dtype,
+                backend: str | None = None, groups: int = 1,
+                batch_heads: int = 1) -> KernelConfig:
+        """Concrete KernelConfig for one call site (see module doc)."""
+        key = OpKey(op, int(M), int(N), int(K), groups=int(groups),
+                    dtype=dtype_name(dtype)).bucketed()
+        hit = self.entries.get(key)
+        if hit is not None:
+            return hit
+        if isinstance(self.default, KernelConfig):
+            return self.default
+        cfg = _tune_config(op, M, N, K, dtype=dtype,
+                           backend=backend or self.backend,
+                           groups=groups, batch_heads=batch_heads)
+        self.entries[key] = cfg      # programmed once, ahead of the loop
+        return cfg
+
+    def copy(self) -> "Plan":
+        return Plan(backend=self.backend, quant=self.quant,
+                    default=self.default, entries=dict(self.entries))
+
+    # ------------------------------------------------------------------
+    def legacy_tiling(self):
+        """This plan projected onto the deprecated ``Ctx.tiling`` vocab
+        (lossy for per-op tables; only used to keep old reads alive)."""
+        if self.default == "auto":
+            return "auto"
+        d = self.default
+        if (d.bm, d.bn, d.bk) == (128, 128, 128):
+            return None
+        return (d.bm, d.bn, d.bk)
+
+    @classmethod
+    def from_legacy(cls, *, impl: str = "auto", tiling="auto",
+                    quant: str | None = None) -> "Plan":
+        """Build from the deprecated Ctx(impl=, tiling=, quant=) vocab."""
+        default = "auto" if tiling == "auto" else tiling
+        return cls(backend=impl, quant=quant, default=default)
+
+    # ------------------------------------------------------------------
+    # JSON persistence
+    # ------------------------------------------------------------------
+    def to_json(self) -> dict:
+        default = (self.default if self.default == "auto"
+                   else self.default.to_json())
+        return {
+            "schema": _SCHEMA,
+            "backend": self.backend,
+            "quant": self.quant,
+            "default": default,
+            "entries": {k.to_str(): v.to_json()
+                        for k, v in sorted(self.entries.items())},
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Plan":
+        if d.get("schema") != _SCHEMA:
+            raise ValueError(f"unknown plan schema {d.get('schema')!r}")
+        default = d.get("default", "auto")
+        if isinstance(default, dict):
+            default = KernelConfig.from_json(default)
+        return cls(
+            backend=d.get("backend", "auto"), quant=d.get("quant"),
+            default=default,
+            entries={OpKey.from_str(k): KernelConfig.from_json(v)
+                     for k, v in d.get("entries", {}).items()})
+
+    def save(self, path: str | os.PathLike) -> None:
+        Path(path).write_text(
+            json.dumps(self.to_json(), indent=1, sort_keys=True) + "\n")
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "Plan":
+        return cls.from_json(json.loads(Path(path).read_text()))
+
+    # ------------------------------------------------------------------
+    # TuneCache interop
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_tune_cache(cls, cache=None, *, backend: str | None = None,
+                        quant: str | None = None) -> "Plan":
+        """Export a tuned cache as a Plan.
+
+        ``backend``: keep only entries tuned for this backend (and
+        stamp it as the plan backend).  With ``backend=None`` the cache
+        must be single-backend (OpKeys carry no backend, so entries
+        tuned for different backends of the same shape would silently
+        overwrite each other) — a mixed cache raises.
+        """
+        from repro import tune
+        cache = cache if cache is not None else tune.get_cache()
+        plan = cls(backend=backend or "auto", quant=quant)
+        seen_backends: set[str] = set()
+        for key_str, cand in cache.items():
+            op, (M, N, K), groups, dtype, kbackend = \
+                tune.TuneCache.parse_key(key_str)
+            if backend is not None and kbackend != backend:
+                continue
+            seen_backends.add(kbackend)
+            if len(seen_backends) > 1:
+                raise ValueError(
+                    f"Plan.from_tune_cache: cache holds entries for "
+                    f"multiple backends {sorted(seen_backends)}; pass "
+                    f"backend= to select one")
+            key = OpKey(op, M, N, K, groups=groups, dtype=dtype)
+            if op == "attention":
+                # best_attention_config stores (bq, bkv) in (bm, bn)
+                plan.add(key, KernelConfig(bq=cand.bm, bkv=cand.bn))
+            else:
+                plan.add(key, KernelConfig.from_candidate(cand))
+        return plan
+
+    def seed_tune_cache(self, cache=None, *, backend: str | None = None):
+        """Pre-seed a :class:`repro.tune.TuneCache` from this plan, so
+        legacy ``tiling="auto"`` call sites resolve to the plan's
+        configs without searching.  Returns the cache."""
+        from repro import tune
+        cache = cache if cache is not None else tune.get_cache()
+        backend = backend or self.backend
+        if backend == "auto":
+            import jax
+            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        items = []
+        for key, cfg in self.entries.items():
+            problem = tune.Problem(op=key.op, M=key.M, N=key.N, K=key.K,
+                                   dtype_bytes=key.dtype_bytes,
+                                   groups=key.groups)
+            if key.op == "attention":
+                cand = tune.Candidate(bm=cfg.bq, bn=cfg.bkv, bk=key.N,
+                                      slots=2, grid_order="ijk")
+            else:
+                cand = tune.Candidate(bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
+                                      slots=cfg.resolved_slots,
+                                      grid_order=cfg.grid_order)
+            items.append((tune.TuneCache.key(problem, backend=backend,
+                                             dtype=key.dtype), cand))
+        cache.put_many(items)
+        return cache
+
+    # ------------------------------------------------------------------
+    def items(self) -> Iterator[tuple[OpKey, KernelConfig]]:
+        return iter(self.entries.items())
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Plan):
+            return NotImplemented
+        return (self.backend == other.backend and self.quant == other.quant
+                and self.default == other.default
+                and self.entries == other.entries)
+
+    def __hash__(self) -> int:
+        # Deliberately ignores the (mutable, memoizing) entry table:
+        # stable over the object's lifetime, and equal plans — which
+        # necessarily share backend/quant/default — hash equal, so the
+        # hash/eq contract holds.  Keeps Ctx (a frozen dataclass
+        # holding a Plan) hashable.
+        return hash((Plan, self.backend, self.quant,
+                     self.default if isinstance(self.default, KernelConfig)
+                     else str(self.default)))
+
+    def __repr__(self) -> str:
+        default = ("auto" if self.default == "auto"
+                   else f"{type(self.default).__name__}(...)")
+        return (f"Plan(backend={self.backend!r}, quant={self.quant!r}, "
+                f"default={default}, entries={len(self.entries)})")
+
+
+# ----------------------------------------------------------------------
+# the `config` argument vocabulary
+# ----------------------------------------------------------------------
+def as_plan(config) -> Plan:
+    """Normalize the Ctx-level config vocabulary to a Plan.
+
+    ``"auto"`` (and a bare backend name) → auto-resolving plan; ``None``
+    → the historical fixed default config; a tile tuple / KernelConfig
+    → that config for every op; a Plan passes through unchanged.
+    """
+    if isinstance(config, Plan):
+        return config
+    if config is None:
+        return Plan(default=None)
+    if isinstance(config, str):
+        if config in BACKENDS:
+            return Plan(backend=config)
+        raise ValueError(
+            f"Ctx plan string must be one of {BACKENDS} (got {config!r}); "
+            f"pass a KernelConfig, Plan, tile tuple or None otherwise")
+    if isinstance(config, KernelConfig):
+        return Plan(backend=config.backend, quant=config.quant,
+                    default=config)
+    if isinstance(config, (tuple, list)):
+        return Plan(default=_tiles_config(config))
+    raise ValueError(
+        f"cannot interpret {config!r} as an execution plan; expected a "
+        f"Plan, KernelConfig, backend string, tile tuple or None")
+
+
+def config_backend(config, op: str | None = None) -> str:
+    """The backend a `config` argument implies (before resolve_impl).
+
+    Also the vocabulary gate: every ``ops.*`` call funnels its config
+    through here first (passing its ``op``), so malformed configs —
+    including wrong-arity tile tuples — fail loudly even on the jnp
+    path, which never reaches schedule resolution."""
+    if isinstance(config, Plan):
+        return config.backend
+    if isinstance(config, KernelConfig):
+        return config.backend
+    if config is None or config == "auto":
+        return "auto"
+    if isinstance(config, (tuple, list)):
+        _tiles_config(config, op)      # arity/type validation only
+        return "auto"
+    raise ValueError(
+        f"config must be a KernelConfig, Plan, 'auto', a tile tuple or "
+        f"None, got {config!r}")
+
+
+def resolve(config, *, op: str, M: int, N: int, K: int, dtype,
+            backend: str, groups: int = 1,
+            batch_heads: int = 1) -> KernelConfig:
+    """Resolve an ``ops.*``-level ``config`` argument to a concrete
+    KernelConfig for one call site.
+
+    Vocabulary: a :class:`KernelConfig` is used verbatim; a
+    :class:`Plan` looks up / memoizes by bucketed OpKey; ``"auto"``
+    resolves through :mod:`repro.tune`; a tile tuple fixes the tiles;
+    ``None`` is the historical 128³ dobu default.  ``backend`` is the
+    already-resolved concrete backend (tuner search spaces differ).
+    """
+    if isinstance(config, Plan):
+        return config.resolve(op, M, N, K, dtype=dtype, backend=backend,
+                              groups=groups, batch_heads=batch_heads)
+    if isinstance(config, KernelConfig):
+        return config
+    if config is None:
+        return KernelConfig()
+    if isinstance(config, (tuple, list)):
+        return _tiles_config(config, op)
+    if config == "auto":
+        return _tune_config(op, M, N, K, dtype=dtype, backend=backend,
+                            groups=groups, batch_heads=batch_heads)
+    raise ValueError(
+        f"ops.{op}: config must be a KernelConfig, Plan, 'auto', a tile "
+        f"tuple or None, got {config!r}")

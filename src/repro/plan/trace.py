@@ -1,0 +1,110 @@
+"""Ahead-of-time plan resolution by abstract evaluation.
+
+``trace_model`` runs a model's prefill / decode / train entry points
+under ``jax.eval_shape`` — shapes only, no FLOPs, no buffers — with a
+fresh auto-resolving :class:`~repro.plan.Plan` threaded through the
+``Ctx``.  Every ``ops.*`` call the model makes resolves its
+:class:`~repro.plan.KernelConfig` during the trace (through
+:mod:`repro.tune` for the "auto" policy) and memoizes it into the
+plan, so the returned Plan covers **all** kernel configs of those call
+shapes: at run time resolution is a dict lookup and the tuner is never
+consulted — the software analogue of programming the paper's loop-nest
+CSRs once, ahead of the hot loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.plan.plan import Plan, as_plan
+
+__all__ = ["trace_model"]
+
+
+def _as_sds(spec) -> Any:
+    """Shape tuple / (shape, dtype) pair / SDS / array → ShapeDtypeStruct."""
+    if isinstance(spec, jax.ShapeDtypeStruct):
+        return spec
+    if hasattr(spec, "shape") and hasattr(spec, "dtype"):
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype)
+    if isinstance(spec, tuple) and len(spec) == 2 \
+            and isinstance(spec[0], (tuple, list)):
+        return jax.ShapeDtypeStruct(tuple(spec[0]), spec[1])
+    return jax.ShapeDtypeStruct(tuple(spec), jnp.int32)
+
+
+def trace_model(model, batch_shapes: Sequence[Mapping[str, Any]], ctx, *,
+                max_len: int | None = None,
+                modes: Sequence[str] = ("prefill", "decode"),
+                decode_batch: int | None = None,
+                cache_dtype=jnp.float32,
+                cache_kwargs: Mapping[str, Any] | None = None,
+                params=None) -> Plan:
+    """Resolve every kernel config of a model's call shapes into a Plan.
+
+    Parameters
+    ----------
+    model, ctx : a ``build_model`` bundle and the execution context the
+        plan is for (``ctx.plan`` supplies backend / quant / default
+        policy; its entry table is copied, then extended by the trace).
+    batch_shapes : batch dicts of shapes — each value a shape tuple
+        (int32 assumed), a ``(shape, dtype)`` pair, a
+        ``jax.ShapeDtypeStruct`` or an array.  One "prefill" / "train"
+        trace per dict (e.g. one per serving bucket size).
+    max_len : cache capacity for the "prefill" / "decode" modes.
+    modes : any of "prefill", "decode", "train".
+    decode_batch : decode batch width (e.g. ``ServeEngine.num_slots``);
+        defaults to the largest batch dim in ``batch_shapes``.
+    params : optional concrete or abstract params; defaults to
+        ``jax.eval_shape`` of ``model.init`` (quantized per
+        ``ctx.plan.quant``).
+
+    Returns the extended Plan — JSON-serializable via ``Plan.save``.
+    """
+    plan = as_plan(ctx.plan).copy()
+    ctx = dataclasses.replace(ctx, plan=plan)
+    batches = [{k: _as_sds(v) for k, v in bs.items()} for bs in batch_shapes]
+    unknown = set(modes) - {"prefill", "decode", "train"}
+    if unknown:
+        raise ValueError(f"trace_model: unknown modes {sorted(unknown)}")
+    if max_len is None and ("prefill" in modes or "decode" in modes):
+        raise ValueError("trace_model: max_len is required for the "
+                         "'prefill'/'decode' modes")
+
+    if params is None:
+        params = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+        if plan.quant is not None:
+            params = jax.eval_shape(
+                lambda p: model.quantize_weights(p, fmt=plan.quant), params)
+
+    for batch in batches:
+        if "prefill" in modes:
+            jax.eval_shape(
+                lambda p, b: model.prefill(p, b, ctx, max_len),
+                params, batch)
+        if "train" in modes:
+            # forward only: the backward matmuls are XLA transposes of
+            # the forward kernels and never route through ops.* (and
+            # the Pallas kernels define no JVP rule to trace through)
+            train_batch = dict(batch)
+            train_batch.setdefault("targets", train_batch["tokens"])
+            jax.eval_shape(lambda p, b: model.loss(p, b, ctx),
+                           params, train_batch)
+
+    if "decode" in modes:
+        if decode_batch is None:
+            decode_batch = max(
+                (b["tokens"].shape[0] for b in batches if "tokens" in b),
+                default=1)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(decode_batch, max_len, cache_dtype,
+                                     **dict(cache_kwargs or {})))
+        tokens = jax.ShapeDtypeStruct((decode_batch, 1), jnp.int32)
+        jax.eval_shape(lambda p, c, t: model.decode(p, c, t, ctx),
+                       params, cache, tokens)
+    return plan

@@ -23,15 +23,15 @@ The pieces, bottom-up:
   ``ops.quantized_grouped_matmul`` — padding/tuning wrappers; the
   tuner searches the int8 configuration space (1-byte tiles halve the
   VMEM bill, so the legal tile space grows).
-* ``models.layers.Ctx(quant="int8")`` — models opt in per call, like
-  ``Ctx.tiling``; ``Model.quantize_weights(params)`` converts any
-  family's params.
+* ``models.layers.Ctx(plan=Plan(quant="int8"))`` — models opt in
+  through the execution plan (:mod:`repro.plan`);
+  ``Model.quantize_weights(params)`` converts any family's params.
 
 Usage::
 
     model = build_model(cfg)
     params = model.quantize_weights(model.init(key))     # QTensor weights
-    ctx = Ctx(impl="auto", quant="int8")                 # int8 kernel path
+    ctx = Ctx(plan=Plan(quant="int8"))                   # int8 kernel path
     logits, cache = model.prefill(params, batch, ctx, max_len)
 
 With ``quant=None`` (the default) QTensor weights are dequantized on

@@ -69,9 +69,9 @@ class ServeEngine:
     Parameters
     ----------
     model, params, ctx : the ``build_model`` bundle, its params, and the
-        execution context (``ctx.impl`` selects jnp / pallas / interpret
-        exactly as everywhere else).  Quantized params
-        (``model.quantize_weights(params)`` + ``ctx.quant="int8"``)
+        execution context (``ctx.plan`` selects the backend and the
+        kernel configs exactly as everywhere else).  Quantized params
+        (``model.quantize_weights(params)`` + a ``quant="int8"`` plan)
         serve unchanged: the engine only ever slices/updates the
         *cache*, never the params, so QTensor weights flow straight
         through to the int8 kernels.
@@ -83,16 +83,24 @@ class ServeEngine:
     eos_id : optional early-stop token id.
     cache_kwargs : forwarded to ``model.init_cache`` (e.g. ``enc_len``
         for the encdec family, which must be shared by all requests).
+    plan : optional :class:`repro.plan.Plan` the engine executes under
+        (replaces ``ctx``'s plan), or the string ``"trace"`` to resolve
+        one ahead of time via :func:`repro.plan.trace_model` over this
+        engine's exact prefill buckets and decode shape — the serving
+        analogue of the paper's ahead-of-the-loop CSR writes: with a
+        traced (or otherwise complete) plan, admission and the decode
+        loop never touch the tuner.  The active plan is ``self.plan``
+        (``Plan.save`` makes it a shippable artifact).
     """
 
     def __init__(self, model, params, ctx, *, num_slots: int = 4,
                  max_len: int = 128, cache_dtype=jnp.float32,
                  bucket_sizes: Sequence[int] | None = None,
                  eos_id: int | None = None,
-                 cache_kwargs: dict | None = None):
+                 cache_kwargs: dict | None = None,
+                 plan=None):
         self.model = model
         self.params = params
-        self.ctx = ctx
         self.num_slots = int(num_slots)
         self.max_len = int(max_len)
         self.eos_id = eos_id
@@ -105,6 +113,13 @@ class ServeEngine:
                 b *= 2
             bucket_sizes.append(max_len)
         self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
+
+        if plan is not None:
+            if isinstance(plan, str) and plan == "trace":
+                plan = self._trace_plan(model, ctx, kw, cache_dtype)
+            ctx = ctx.with_plan(plan)
+        self.ctx = ctx
+        self.plan = ctx.plan
 
         # probe each cache leaf's batch axis once (family-agnostic
         # slots); eval_shape gets the shapes without allocating two
@@ -134,6 +149,45 @@ class ServeEngine:
             "decode_steps": 0, "admitted": 0, "retired": 0,
             "max_concurrent": 0,
         }
+
+    # ------------------------------------------------------------------
+    def _trace_plan(self, model, ctx, cache_kwargs: dict, cache_dtype):
+        """Resolve every kernel config this engine will need, ahead of
+        time: one abstract prefill per bucket size (batch 1, exactly
+        the admission shape) plus one abstract decode at the slot
+        width.  Costs shapes only (``jax.eval_shape``)."""
+        from repro.plan import trace_model
+        cfg = model.cfg
+        n_front = 0
+        if cfg.family == "encdec":
+            front = ("frontend_embeds",
+                     (1, int(cache_kwargs.get("enc_len", 8)), cfg.d_model))
+        elif getattr(cfg, "frontend", None):
+            front = ("frontend_embeds", (1, cfg.frontend_tokens, cfg.d_model))
+            n_front = cfg.frontend_tokens
+        else:
+            front = None
+        shapes, seen = [], set()
+        for b in self.bucket_sizes:
+            sb = min(b, self.max_len - n_front)
+            if sb < 1 or sb in seen:
+                continue
+            seen.add(sb)
+            bs = {"tokens": ((1, sb), jnp.int32),
+                  "lengths": ((1,), jnp.int32)}
+            if front is not None:
+                bs[front[0]] = (front[1], jnp.float32)
+            shapes.append(bs)
+        # trace with the engine's REAL params: param dtypes feed type
+        # promotion, so a float32-init trace of a bf16 model would
+        # memoize wrong-dtype OpKeys and the serving loop would still
+        # hit the tuner on the mismatched buckets
+        return trace_model(model, shapes, ctx, max_len=self.max_len,
+                           modes=("prefill", "decode"),
+                           decode_batch=self.num_slots,
+                           cache_dtype=cache_dtype,
+                           cache_kwargs=cache_kwargs,
+                           params=self.params)
 
     # ------------------------------------------------------------------
     def submit(self, request: Request) -> None:

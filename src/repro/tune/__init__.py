@@ -12,7 +12,11 @@ problem shape.
                             dtype=jnp.bfloat16, backend="pallas")
     # -> Candidate(bm, bn, bk, slots, grid_order)
 
-or, one level up, simply ``ops.matmul(a, b, tiling="auto")``.
+or, one level up, simply ``ops.matmul(a, b, config="auto")`` — and
+one level above that, :func:`repro.plan.trace_model` freezes tuned
+resolutions into a serializable :class:`repro.plan.Plan`
+(``Plan.from_tune_cache`` / ``Plan.seed_tune_cache`` convert in both
+directions).
 
 Pieces (each its own module):
 
@@ -65,15 +69,13 @@ def set_cache(cache: TuneCache | None) -> None:
 
 
 def _dtype_info(dtype) -> tuple[str, int]:
-    """(canonical name, itemsize bytes) for a jnp/np dtype or string."""
-    import numpy as np
-    try:
-        d = np.dtype(dtype)
-        return d.name, d.itemsize
-    except TypeError:
-        # jnp.bfloat16 & friends: not a numpy dtype on older stacks
-        name = getattr(dtype, "__name__", None) or str(dtype)
-        return name, 2 if "16" in name else 4
+    """(canonical name, itemsize bytes) for a jnp/np dtype or string.
+
+    Delegates to :mod:`repro.plan.config` so plan OpKeys and tune keys
+    canonicalize dtypes identically (one rule, one home)."""
+    from repro.plan.config import _dtype_bytes, dtype_name
+    name = dtype_name(dtype)
+    return name, _dtype_bytes(name)
 
 
 def space_for_backend(backend: str) -> KernelSpace:

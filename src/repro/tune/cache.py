@@ -21,6 +21,9 @@ import os
 import tempfile
 from pathlib import Path
 
+from repro.plan.config import _next_pow2   # ONE pow-2 bucketing rule:
+                                           # OpKey.bucketed and this
+                                           # cache must agree exactly
 from repro.tune.space import Candidate, Problem
 
 __all__ = ["TuneCache", "default_cache_path", "shape_bucket"]
@@ -33,10 +36,6 @@ def default_cache_path() -> Path:
     if env:
         return Path(env)
     return Path.home() / ".cache" / "repro" / "tune.json"
-
-
-def _next_pow2(n: int) -> int:
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 def shape_bucket(p: Problem) -> tuple[int, int, int]:
@@ -62,6 +61,21 @@ class TuneCache:
         g = f"|g{_next_pow2(p.groups)}" if p.groups > 1 else ""
         return f"{p.op}|{bm}x{bn}x{bk}{g}|{dtype}|{backend}"
 
+    @staticmethod
+    def parse_key(key: str) -> tuple[str, tuple[int, int, int], int,
+                                     str, str]:
+        """Inverse of :meth:`key`: ``(op, (M, N, K), groups, dtype,
+        backend)`` with bucketed dims.  Lives next to ``key`` so the
+        string format has exactly one home (``Plan.from_tune_cache``
+        consumes this)."""
+        op, dims, *rest = key.split("|")
+        groups = 1
+        if rest and rest[0].startswith("g") and rest[0][1:].isdigit():
+            groups = int(rest.pop(0)[1:])
+        dtype, backend = rest
+        M, N, K = (int(d) for d in dims.split("x"))
+        return op, (M, N, K), groups, dtype, backend
+
     # ------------------------------------------------------------------
     def _load(self) -> dict[str, dict]:
         if self._entries is None:
@@ -83,6 +97,18 @@ class TuneCache:
         if predicted_s is not None:
             rec["predicted_s"] = predicted_s
         entries[key] = rec
+        self.save()
+
+    def put_many(self, items) -> None:
+        """Insert ``(key, Candidate)`` pairs with ONE disk write.
+
+        ``put`` re-reads and atomically rewrites the whole file per
+        call (concurrent-tuner merge); bulk seeding (e.g.
+        :meth:`repro.plan.Plan.seed_tune_cache`) would pay that O(N)
+        cycle N times."""
+        entries = self._load()
+        for key, cand in items:
+            entries[key] = cand.to_json()
         self.save()
 
     def _read_disk(self) -> dict[str, dict]:
@@ -125,6 +151,11 @@ class TuneCache:
                     os.unlink(tmp)
         except OSError:
             pass
+
+    def items(self):
+        """Iterate ``(key, Candidate)`` pairs (Plan export interop)."""
+        for key, rec in self._load().items():
+            yield key, Candidate.from_json(rec)
 
     def clear(self) -> None:
         self._entries = {}

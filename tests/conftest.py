@@ -15,3 +15,14 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_fallback_warnings():
+    """ops._warn_fallback_once is process-global warn-once state; reset
+    it around every test so warn-once assertions (and their absence)
+    are independent of test execution order."""
+    from repro.kernels import ops
+    ops.reset_fallback_warnings()
+    yield
+    ops.reset_fallback_warnings()

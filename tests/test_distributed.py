@@ -46,7 +46,7 @@ def test_sharding_rules_and_compile():
         mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = get_config("gemma-7b", reduced=True)
         model = build_model(cfg)
-        ctx = Ctx(impl="jnp", dtype=jnp.float32, mesh=mesh)
+        ctx = Ctx(plan="jnp", dtype=jnp.float32, mesh=mesh)
         run = RunConfig(seq_len=32, global_batch=4)
         params_sds = jax.eval_shape(
             lambda: model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
@@ -93,7 +93,7 @@ def test_real_execution_under_mesh():
         mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = get_config("olmoe-1b-7b", reduced=True)
         model = build_model(cfg)
-        ctx = Ctx(impl="jnp", dtype=jnp.float32, mesh=mesh)
+        ctx = Ctx(plan="jnp", dtype=jnp.float32, mesh=mesh)
         run = RunConfig(seq_len=16, global_batch=4, lr=1e-3)
         params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
         p_sh = shr.param_shardings(mesh, params)
@@ -129,7 +129,7 @@ def test_pipeline_parallel_parity():
 
         cfg = get_config("gemma-7b", reduced=True)
         model = build_model(cfg)
-        ctx = Ctx(impl="jnp", dtype=jnp.float32)
+        ctx = Ctx(plan="jnp", dtype=jnp.float32)
         params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
         B, S = 4, 16
         key = jax.random.PRNGKey(1)

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.plan import KernelConfig
 from repro.kernels.zero_stall_matmul import zero_stall_matmul
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
 
@@ -50,7 +51,8 @@ def test_zero_stall_matmul_rejects_ragged(rng):
 def test_ops_matmul_pads_ragged(rng):
     a = jnp.asarray(rng.standard_normal((13, 21)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((21, 9)), jnp.float32)
-    got = ops.matmul(a, b, impl="interpret", bm=8, bn=8, bk=8)
+    got = ops.matmul(a, b, config=KernelConfig(backend="interpret",
+                                               bm=8, bn=8, bk=8))
     np.testing.assert_allclose(got, ref.matmul_ref(a, b), atol=2e-5)
 
 
@@ -74,8 +76,9 @@ def test_flash_attention(rng, s, d, bq, bkv, causal):
     q = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((2, 2, s, d)), jnp.float32)
-    got = ops.attention(q, k, v, impl="interpret", causal=causal,
-                        bq=bq, bkv=bkv)
+    got = ops.attention(q, k, v, causal=causal,
+                        config=KernelConfig(backend="interpret",
+                                            bq=bq, bkv=bkv))
     want = ref.flash_attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
 
@@ -92,5 +95,5 @@ def test_dispatch_jnp_path(rng):
     a = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
     assert ops.resolve_impl("auto") == "jnp"    # CPU container
-    np.testing.assert_allclose(ops.matmul(a, b, impl="auto"),
+    np.testing.assert_allclose(ops.matmul(a, b),
                                ref.matmul_ref(a, b), atol=1e-6)

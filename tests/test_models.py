@@ -15,7 +15,7 @@ import pytest
 from repro.configs import get_config, list_configs
 from repro.models import Ctx, build_model
 
-CTX = Ctx(impl="jnp", dtype=jnp.float32)
+CTX = Ctx(plan="jnp", dtype=jnp.float32)
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 16
 

@@ -13,7 +13,7 @@ from repro.configs import get_config
 from repro.models import Ctx
 from repro.models.moe import init_moe_mlp, moe_mlp, router_assignments
 
-CTX = Ctx(impl="jnp", dtype=jnp.float32)
+CTX = Ctx(plan="jnp", dtype=jnp.float32)
 
 
 @settings(max_examples=50, deadline=None)

@@ -1,0 +1,511 @@
+"""repro.plan: typed execution-plan API.
+
+Covers the plan-API acceptance criteria:
+
+  * KernelConfig validates field combinations with locked error
+    messages (the old ``_resolve_tiling`` silently ignored them);
+  * deprecation-shim parity: every old-kwarg call spelling is
+    bit-identical to its config= equivalent and emits exactly one
+    DeprecationWarning;
+  * Plan JSON round-trip (including int8 and attention entries) and
+    TuneCache interop (export / pre-seed);
+  * ServeEngine warmed from a traced Plan performs ZERO tuner calls
+    (monkeypatched counters) while serving;
+  * trace_model + JSON round-trip is bit-identical to the legacy
+    ``tiling="auto"`` path for all five model families in interpret
+    mode.
+"""
+
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models import Ctx, build_model
+from repro.plan import KernelConfig, OpKey, Plan, as_plan, trace_model
+from repro.quant import quantize
+from repro.serve import Request, ServeEngine
+from repro.tune import TuneCache
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path):
+    cache = TuneCache(tmp_path / "tune.json")
+    tune.set_cache(cache)
+    yield cache
+    tune.set_cache(None)
+
+
+def _deprecations(rec):
+    return [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+# ----------------------------------------------------------------------
+# KernelConfig validation (each message locked)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kwargs,msg", [
+    ({"backend": "cuda"}, r"KernelConfig\.backend must be one of"),
+    ({"bm": 0}, r"KernelConfig\.bm must be a positive integer"),
+    ({"bn": -8}, r"KernelConfig\.bn must be a positive integer"),
+    ({"bk": "128"}, r"KernelConfig\.bk must be a positive integer"),
+    ({"slots": "3"}, r"KernelConfig\.slots must be an integer >= 1"),
+    ({"bq": 0}, r"KernelConfig\.bq must be a positive integer"),
+    ({"bkv": 0}, r"KernelConfig\.bkv must be a positive integer"),
+    ({"variant": "triple"}, r"KernelConfig\.variant must be one of"),
+    ({"slots": 0}, r"KernelConfig: slots must be >= 1"),
+    ({"variant": "single", "slots": 3},
+     r"variant='single' means slots=1, got slots=3"),
+    ({"variant": "dobu", "slots": 1}, r"variant='dobu' needs slots >= 2"),
+    ({"grid_order": "kij"},
+     r"KernelConfig\.grid_order must be a permutation"),
+    ({"quant": "int4"}, r"KernelConfig\.quant must be one of"),
+])
+def test_kernel_config_validation_messages(kwargs, msg):
+    with pytest.raises(ValueError, match=msg):
+        KernelConfig(**kwargs)
+
+
+def test_kernel_config_valid_combinations():
+    assert KernelConfig().resolved_slots == 2            # dobu default
+    assert KernelConfig(variant="single").resolved_slots == 1
+    assert KernelConfig(variant="dobu", slots=4).resolved_slots == 4
+    assert KernelConfig(grid_order="jik").grid_order == "jik"
+    # dtype spellings canonicalize
+    assert KernelConfig(out_dtype=jnp.bfloat16).out_dtype == "bfloat16"
+
+
+def test_opkey_roundtrip_and_bucketing():
+    k = OpKey("matmul", 33, 47, 21, groups=3, dtype="int8")
+    assert OpKey.from_str(k.to_str()) == k
+    b = k.bucketed()
+    assert (b.M, b.N, b.K, b.groups) == (64, 64, 32, 4)
+    assert b.dtype_bytes == 1
+    with pytest.raises(ValueError, match=r"OpKey\.op must be one of"):
+        OpKey("conv", 8, 8, 8)
+
+
+# ----------------------------------------------------------------------
+# Plan: lookup, JSON round-trip, TuneCache interop
+# ----------------------------------------------------------------------
+def test_plan_lookup_buckets_ragged_shapes():
+    cfg = KernelConfig(bm=256, bn=256, bk=128)
+    plan = Plan(backend="interpret",
+                entries={OpKey("matmul", 4096, 11008, 4096): cfg})
+    # ragged shape in the same power-of-two bucket resolves identically
+    assert plan.resolve("matmul", 4095, 11007, 4000,
+                        dtype=jnp.float32, backend="interpret") == cfg
+
+
+def test_plan_json_roundtrip_including_int8_keys(tmp_path):
+    plan = Plan(backend="interpret", quant="int8",
+                default=KernelConfig(bm=256))
+    plan.add(OpKey("matmul", 64, 64, 64, dtype="int8"),
+             KernelConfig(bm=64, bn=64, bk=64, slots=3))
+    plan.add(OpKey("attention", 128, 16, 128, dtype="float32"),
+             KernelConfig(bq=32, bkv=64))
+    plan.add(OpKey("grouped_matmul", 16, 32, 16, groups=4, dtype="int8"),
+             KernelConfig(variant="single", slots=1))
+    loaded = Plan.from_json(json.loads(json.dumps(plan.to_json())))
+    assert loaded == plan
+    path = tmp_path / "x.plan.json"
+    plan.save(path)
+    assert Plan.load(path) == plan
+
+
+def test_plan_tune_cache_export_and_seed(tmp_path):
+    src = TuneCache(tmp_path / "src.json")
+    cand = tune.best_config("matmul", 33, 47, 21, dtype=jnp.float32,
+                            backend="interpret", cache=src)
+    tune.best_attention_config(32, 32, 16, dtype=jnp.float32,
+                               backend="interpret", cache=src)
+    plan = Plan.from_tune_cache(src, backend="interpret")
+    assert len(plan) == 2
+    hit = plan.resolve("matmul", 33, 47, 21, dtype=jnp.float32,
+                       backend="interpret")
+    assert (hit.bm, hit.bn, hit.bk) == (cand.bm, cand.bn, cand.bk)
+    assert hit.resolved_slots == cand.slots
+
+    # pre-seed a fresh cache: resolution is a hit, no re-search
+    dst = TuneCache(tmp_path / "dst.json")
+    plan.seed_tune_cache(dst, backend="interpret")
+    again = tune.best_config("matmul", 33, 47, 21, dtype=jnp.float32,
+                             backend="interpret", cache=dst)
+    assert again == cand
+    assert dst.hits >= 1 and dst.misses == 0
+
+
+def test_plan_memoizes_auto_resolutions(tmp_cache):
+    plan = Plan(backend="interpret")
+    c1 = plan.resolve("matmul", 32, 32, 32, dtype=jnp.float32,
+                      backend="interpret")
+    assert len(plan) == 1
+    hits = tmp_cache.hits
+    c2 = plan.resolve("matmul", 32, 32, 32, dtype=jnp.float32,
+                      backend="interpret")
+    assert c1 == c2
+    assert tmp_cache.hits == hits     # second resolve = plan dict lookup
+
+
+def test_as_plan_vocabulary():
+    assert as_plan(None).default == KernelConfig()
+    assert as_plan("auto").default == "auto"
+    assert as_plan("interpret").backend == "interpret"
+    p = as_plan((8, 16, 32))
+    assert (p.default.bm, p.default.bn, p.default.bk) == (8, 16, 32)
+    p2 = as_plan(KernelConfig(backend="jnp", quant="fp8"))
+    assert p2.backend == "jnp" and p2.quant == "fp8"
+    with pytest.raises(ValueError, match="plan string must be one of"):
+        as_plan("bogus")
+    existing = Plan()
+    assert as_plan(existing) is existing
+
+
+# ----------------------------------------------------------------------
+# deprecation-shim parity: old spelling == config= spelling, 1 warning
+# ----------------------------------------------------------------------
+def _one_warning_result(fn):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn()
+    dep = _deprecations(rec)
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    return out
+
+
+@pytest.mark.parametrize("legacy,config", [
+    (dict(impl="interpret", bm=8, bn=8, bk=8),
+     KernelConfig(backend="interpret", bm=8, bn=8, bk=8)),
+    (dict(impl="interpret", tiling=(8, 16, 8)),
+     KernelConfig(backend="interpret", bm=8, bn=16, bk=8)),
+    (dict(impl="interpret", bm=8, bn=8, bk=8, variant="single"),
+     KernelConfig(backend="interpret", bm=8, bn=8, bk=8,
+                  variant="single")),
+    (dict(impl="interpret", bm=8, bn=8, bk=8, slots=3, grid_order="jik"),
+     KernelConfig(backend="interpret", bm=8, bn=8, bk=8, slots=3,
+                  grid_order="jik")),
+    (dict(impl="jnp"), KernelConfig(backend="jnp")),
+])
+def test_matmul_shim_parity(rng, legacy, config):
+    a = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    old = _one_warning_result(lambda: ops.matmul(a, b, **legacy))
+    new = ops.matmul(a, b, config=config)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_matmul_shim_parity_auto(rng, tmp_cache):
+    a = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    old = _one_warning_result(
+        lambda: ops.matmul(a, b, impl="interpret", tiling="auto"))
+    new = ops.matmul(a, b, config=Plan(backend="interpret"))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_grouped_matmul_shim_parity(rng):
+    a = jnp.asarray(rng.standard_normal((3, 16, 24)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((3, 24, 16)), jnp.float32)
+    old = _one_warning_result(
+        lambda: ops.grouped_matmul(a, b, impl="interpret",
+                                   bm=8, bn=8, bk=8))
+    new = ops.grouped_matmul(a, b, config=KernelConfig(
+        backend="interpret", bm=8, bn=8, bk=8))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+@pytest.mark.parametrize("legacy,config", [
+    (dict(impl="interpret", bq=8, bkv=8),
+     KernelConfig(backend="interpret", bq=8, bkv=8)),
+    (dict(impl="interpret", tiling=(8, 16)),
+     KernelConfig(backend="interpret", bq=8, bkv=16)),
+])
+def test_attention_shim_parity(legacy, config):
+    q = jax.random.normal(KEY, (1, 2, 32, 16), jnp.float32)
+    old = _one_warning_result(
+        lambda: ops.attention(q, q, q, causal=True, **legacy))
+    new = ops.attention(q, q, q, causal=True, config=config)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_quantized_matmul_shim_parity(rng):
+    x = jnp.asarray(rng.standard_normal((13, 21)), jnp.float32)
+    qw = quantize(jnp.asarray(rng.standard_normal((21, 9)), jnp.float32))
+    old = _one_warning_result(
+        lambda: ops.quantized_matmul(x, qw, impl="interpret",
+                                     tiling=(8, 8, 8)))
+    new = ops.quantized_matmul(x, qw, config=KernelConfig(
+        backend="interpret", bm=8, bn=8, bk=8))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_shim_rejects_mixing_config_with_legacy(rng):
+    a = jnp.zeros((8, 8), jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="cannot mix config="):
+            ops.matmul(a, a, config=KernelConfig(), bm=8)
+
+
+def test_ctx_shim_parity():
+    """Legacy Ctx(impl=, tiling=, quant=) == Ctx(plan=...), one warning."""
+    ctx_old = _one_warning_result(
+        lambda: Ctx(impl="jnp", dtype=jnp.float32))
+    ctx_new = Ctx(plan="jnp", dtype=jnp.float32)
+    assert ctx_new.plan.backend == ctx_old.plan.backend == "jnp"
+    assert ctx_old.impl == "jnp" and ctx_old.tiling == "auto"
+    assert ctx_old.quant is None
+
+    ctx_old = _one_warning_result(
+        lambda: Ctx(impl="interpret", tiling=None, quant="int8"))
+    assert ctx_old.plan.backend == "interpret"
+    assert ctx_old.plan.default == KernelConfig()
+    assert ctx_old.plan.quant == "int8"
+    # the derived legacy attributes stay readable
+    assert ctx_old.impl == "interpret"
+    assert ctx_old.tiling is None and ctx_old.quant == "int8"
+
+
+def test_ctx_replace_roundtrips_without_warning():
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ctx2 = dataclasses.replace(ctx, decode=True)
+    assert not _deprecations(rec)
+    assert ctx2.decode and ctx2.plan.backend == "jnp"
+
+
+def test_ctx_rejects_mixing_legacy_and_plan():
+    with pytest.raises(ValueError, match="cannot combine plan="):
+        Ctx(plan="jnp", quant="int8")
+
+
+def test_ctx_replace_swaps_plan_cleanly():
+    """replace(ctx, plan=other) must neither warn nor raise — the
+    deprecated names are properties, not fields, so replace() cannot
+    re-feed stale derived values."""
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ctx2 = dataclasses.replace(
+            ctx, plan=Plan(backend="interpret", quant="int8"))
+    assert not _deprecations(rec)
+    assert ctx2.plan.backend == "interpret" and ctx2.quant == "int8"
+    assert ctx.plan.backend == "jnp"                  # original untouched
+
+
+def test_config_out_dtype_consistent_across_backends(rng):
+    """KernelConfig.out_dtype is honored on EVERY backend (the jnp
+    short-circuit and the quantized wrappers used to drop it)."""
+    a = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    for backend in ("jnp", "interpret"):
+        cfg = KernelConfig(backend=backend, bm=8, bn=8, bk=8,
+                           out_dtype="bfloat16")
+        assert ops.matmul(a, a, config=cfg).dtype == jnp.bfloat16, backend
+        assert ops.grouped_matmul(a[None], a[None],
+                                  config=cfg).dtype == jnp.bfloat16, backend
+        qw = quantize(a)
+        assert ops.quantized_matmul(
+            a, qw, config=cfg).dtype == jnp.bfloat16, backend
+
+
+def test_ops_reject_wrong_arity_tile_tuples(rng):
+    """A typo'd tuple must raise, not silently run on default tiles —
+    on every backend, including the jnp short-circuit."""
+    a = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    q = jnp.zeros((1, 1, 8, 8), jnp.float32)
+    with pytest.raises(ValueError, match=r"must be \(bm, bn, bk\)"):
+        ops.matmul(a, a, config=(8, 8))
+    with pytest.raises(ValueError, match=r"must be \(bm, bn, bk\)"):
+        ops.grouped_matmul(a[None], a[None], config=(8, 8))
+    with pytest.raises(ValueError, match=r"must be \(bq, bkv\)"):
+        ops.attention(q, q, q, config=(8, 8, 8))
+    # Ctx-level tuples stay generic: a matmul triple legitimately
+    # leaves attention on its default (bq, bkv)
+    assert Ctx(plan=(8, 8, 8), dtype=jnp.float32).plan.default.bm == 8
+
+
+def test_ctx_and_plan_are_hashable():
+    """Ctx is a frozen dataclass and must stay usable as a dict key;
+    Plan hashes on (backend, quant, default) — stable under entry
+    memoization, and equal plans hash equal."""
+    p1, p2 = Plan(backend="jnp"), Plan(backend="jnp")
+    assert p1 == p2 and hash(p1) == hash(p2)
+    h = hash(p1)
+    p1.add(OpKey("matmul", 8, 8, 8), KernelConfig())
+    assert hash(p1) == h                       # memoization can't rehash
+    assert {Ctx(plan="jnp", dtype=jnp.float32): 1}
+
+
+def test_plan_entry_out_dtype_beats_plan_default(rng):
+    """out_dtype priority is argument > per-entry > plan default, on
+    the jnp and kernel backends alike."""
+    a = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    key = OpKey("matmul", 8, 8, 8, dtype="float32")
+    for backend in ("jnp", "interpret"):
+        plan = Plan(backend=backend,
+                    default=KernelConfig(bm=8, bn=8, bk=8,
+                                         out_dtype="bfloat16"),
+                    entries={key: KernelConfig(bm=8, bn=8, bk=8,
+                                               out_dtype="float32")})
+        assert ops.matmul(a, a, config=plan).dtype == jnp.float32, backend
+        assert ops.matmul(a, a, config=plan,
+                          out_dtype=jnp.bfloat16).dtype == jnp.bfloat16
+
+
+def test_from_tune_cache_rejects_mixed_backends_without_backend(tmp_path):
+    cache = TuneCache(tmp_path / "mixed.json")
+    tune.best_config("matmul", 32, 32, 32, dtype=jnp.float32,
+                     backend="interpret", cache=cache)
+    tune.best_config("matmul", 32, 32, 32, dtype=jnp.float32,
+                     backend="pallas", cache=cache)
+    with pytest.raises(ValueError, match="multiple backends"):
+        Plan.from_tune_cache(cache)
+    assert len(Plan.from_tune_cache(cache, backend="pallas")) == 1
+
+
+# ----------------------------------------------------------------------
+# ServeEngine warmed from a Plan: zero tuner calls while serving
+# ----------------------------------------------------------------------
+def test_engine_traced_plan_zero_tune_calls(monkeypatch, tmp_cache):
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    ctx = Ctx(plan="interpret", dtype=jnp.float32)
+    # tracing happens in __init__ (ahead of the loop): the tuner runs
+    # HERE, never in the serving loop below
+    engine = ServeEngine(model, params, ctx, num_slots=2, max_len=32,
+                         plan="trace")
+    assert len(engine.plan) > 0
+    assert engine.ctx.plan is engine.plan
+
+    calls = {"n": 0}
+
+    def counting(fn):
+        def wrapped(*a, **kw):
+            calls["n"] += 1
+            return fn(*a, **kw)
+        return wrapped
+
+    monkeypatch.setattr(tune, "best_config", counting(tune.best_config))
+    monkeypatch.setattr(tune, "best_attention_config",
+                        counting(tune.best_attention_config))
+    prompts = [list(np.random.default_rng(i).integers(0, cfg.vocab_size, n))
+               for i, n in enumerate((5, 11, 3, 8))]
+    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=3)
+                          for i, p in enumerate(prompts)])
+    assert all(len(results[i].tokens) == 3 for i in range(4))
+    assert calls["n"] == 0, (
+        f"{calls['n']} tuner calls during serving despite a traced plan")
+
+
+def test_engine_traced_plan_zero_tune_calls_bf16(monkeypatch, tmp_cache):
+    """The trace runs on the engine's REAL params: a float32-init trace
+    of a bf16 serving setup would memoize wrong-dtype OpKeys and the
+    serving loop would still hit the tuner on the mismatched buckets."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.bfloat16)
+    ctx = Ctx(plan="interpret", dtype=jnp.bfloat16)
+    engine = ServeEngine(model, params, ctx, num_slots=1, max_len=16,
+                         plan="trace")
+
+    calls = {"n": 0}
+
+    def counting(fn):
+        def wrapped(*a, **kw):
+            calls["n"] += 1
+            return fn(*a, **kw)
+        return wrapped
+
+    monkeypatch.setattr(tune, "best_config", counting(tune.best_config))
+    monkeypatch.setattr(tune, "best_attention_config",
+                        counting(tune.best_attention_config))
+    engine.run([Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2)])
+    assert calls["n"] == 0, (
+        f"{calls['n']} tuner calls while serving bf16 from a traced plan")
+
+
+def test_engine_accepts_saved_plan(tmp_path, tmp_cache):
+    """Plan round-trips through JSON and warms a fresh engine."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    ctx = Ctx(plan="interpret", dtype=jnp.float32)
+    traced = ServeEngine(model, params, ctx, num_slots=2, max_len=32,
+                         plan="trace").plan
+    path = tmp_path / "engine.plan.json"
+    traced.save(path)
+    engine = ServeEngine(model, params, ctx, num_slots=2, max_len=32,
+                         plan=Plan.load(path))
+    assert engine.plan == traced
+
+
+# ----------------------------------------------------------------------
+# trace_model == legacy tiling="auto", bit-identical, all 5 families
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["gemma-7b", "olmoe-1b-7b", "mamba2-130m",
+                                  "zamba2-2.7b", "seamless-m4t-large-v2"])
+def test_trace_model_matches_legacy_auto(arch, tmp_cache):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    B, S, max_len = 1, 8, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens,
+             "lengths": jnp.full((B,), S, jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frontend_embeds"] = jax.random.normal(
+            KEY, (B, 6, cfg.d_model)) * 0.1
+
+    ctx = Ctx(plan="interpret", dtype=jnp.float32)
+    traced = trace_model(model, [batch], ctx, max_len=max_len,
+                         modes=("prefill", "decode"), decode_batch=B)
+    assert len(traced) > 0
+    loaded = Plan.from_json(json.loads(json.dumps(traced.to_json())))
+    assert loaded == traced
+
+    logits_plan, cache_plan = model.prefill(
+        params, batch, Ctx(plan=loaded, dtype=jnp.float32), max_len)
+    with pytest.warns(DeprecationWarning):
+        ctx_legacy = Ctx(impl="interpret", tiling="auto", dtype=jnp.float32)
+    logits_legacy, cache_legacy = model.prefill(
+        params, batch, ctx_legacy, max_len)
+    np.testing.assert_array_equal(np.asarray(logits_plan),
+                                  np.asarray(logits_legacy))
+    # one decode step from each cache agrees too
+    nxt = jnp.full((B, 1), 3, jnp.int32)
+    d_plan, _ = model.decode(params, cache_plan, nxt,
+                             Ctx(plan=loaded, dtype=jnp.float32))
+    d_legacy, _ = model.decode(params, cache_legacy, nxt, ctx_legacy)
+    np.testing.assert_array_equal(np.asarray(d_plan), np.asarray(d_legacy))
+
+
+def test_trace_model_train_mode(tmp_cache):
+    """Train-shape tracing resolves the forward's kernel configs (the
+    backward matmuls are XLA transposes and never route through ops)."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    ctx = Ctx(plan="interpret", dtype=jnp.float32)
+    plan = trace_model(model, [{"tokens": ((1, 8), jnp.int32)}], ctx,
+                       max_len=16, modes=("train",))
+    assert len(plan) > 0
+    assert any(k.op == "matmul" for k, _ in plan.items())
+
+
+def test_trace_model_requires_max_len():
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="max_len is required"):
+        trace_model(model, [], Ctx(plan="jnp", dtype=jnp.float32))
+    with pytest.raises(ValueError, match="unknown modes"):
+        trace_model(model, [], Ctx(plan="jnp", dtype=jnp.float32),
+                    max_len=8, modes=("serve",))

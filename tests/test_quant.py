@@ -28,6 +28,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.quantized_matmul import (
     quantized_grouped_zero_stall_matmul, quantized_zero_stall_matmul)
 from repro.models import Ctx, build_model
+from repro.plan import KernelConfig, Plan
 from repro.quant import QTensor, quantize, quantize_rows, quantize_tree
 
 KEY = jax.random.PRNGKey(0)
@@ -170,8 +171,9 @@ def test_quantized_grouped_kernel_matches_ref(rng, slots):
 def test_ops_quantized_matmul_pads_ragged(rng):
     x = jnp.asarray(rng.standard_normal((13, 21)), jnp.float32)
     qw = quantize(jnp.asarray(rng.standard_normal((21, 9)), jnp.float32))
-    got = ops.quantized_matmul(x, qw, impl="interpret", tiling=(8, 8, 8))
-    want = ops.quantized_matmul(x, qw, impl="jnp")
+    got = ops.quantized_matmul(x, qw, config=KernelConfig(
+        backend="interpret", bm=8, bn=8, bk=8))
+    want = ops.quantized_matmul(x, qw, config=KernelConfig(backend="jnp"))
     # padding rows/cols quantize to exact zero codes -> identical math
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-6, atol=1e-6)
@@ -188,7 +190,7 @@ def test_quantized_kernel_rejects_bad_operands(rng):
                                     jnp.ones((1, 8)), jnp.ones((1, 8)),
                                     bm=8, bn=8, bk=8, interpret=True)
     with pytest.raises(TypeError, match="QTensor"):
-        ops.quantized_matmul(x, x, impl="jnp")
+        ops.quantized_matmul(x, x, config=KernelConfig(backend="jnp"))
 
 
 def test_quantize_rows_padding_is_exact_zero():
@@ -262,10 +264,10 @@ def test_quantized_logits_within_tolerance_interpret(arch, monkeypatch):
             KEY, (B, 10, cfg.d_model)) * 0.1
 
     want = np.asarray(model.prefill_logits(
-        params, batch, Ctx(impl="jnp", dtype=jnp.float32)))
+        params, batch, Ctx(plan="jnp", dtype=jnp.float32)))
 
-    ctx_q = Ctx(impl="interpret", dtype=jnp.float32, quant="int8",
-                tiling=None)
+    ctx_q = Ctx(plan=KernelConfig(backend="interpret", quant="int8"),
+                dtype=jnp.float32)
     _boom_refs(monkeypatch)
     got = np.asarray(model.prefill_logits(qparams, batch, ctx_q))
     monkeypatch.undo()
@@ -282,7 +284,7 @@ def test_quantized_engine_matches_quantized_lockstep():
     cfg = get_config("gemma-7b", reduced=True)
     model = build_model(cfg)
     qparams = model.quantize_weights(model.init(KEY, dtype=jnp.float32))
-    ctx = Ctx(impl="jnp", dtype=jnp.float32, quant="int8")
+    ctx = Ctx(plan=Plan(backend="jnp", quant="int8"), dtype=jnp.float32)
     prompts = [list(np.random.default_rng(i).integers(0, cfg.vocab_size, n))
                for i, n in enumerate((5, 11, 3, 8))]
     max_new = [6, 3, 5, 4]
@@ -303,7 +305,7 @@ def test_quant_none_dequantizes_on_the_fly():
     params = model.init(KEY, dtype=jnp.float32)
     qparams = model.quantize_weights(params)
     tokens = jax.random.randint(KEY, (1, 6), 0, cfg.vocab_size)
-    ctx = Ctx(impl="jnp", dtype=jnp.float32)          # quant=None
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)          # plan.quant=None
     got = model.prefill_logits(qparams, {"tokens": tokens}, ctx)
     want = model.prefill_logits(params, {"tokens": tokens}, ctx)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -317,10 +319,10 @@ def test_fp8_simulated_path_runs():
     params = model.init(KEY, dtype=jnp.float32)
     qparams = model.quantize_weights(params, fmt="fp8")
     tokens = jax.random.randint(KEY, (1, 6), 0, cfg.vocab_size)
-    ctx = Ctx(impl="jnp", dtype=jnp.float32, quant="fp8")
+    ctx = Ctx(plan=Plan(backend="jnp", quant="fp8"), dtype=jnp.float32)
     got = model.prefill_logits(qparams, {"tokens": tokens}, ctx)
     want = model.prefill_logits(params, {"tokens": tokens},
-                                Ctx(impl="jnp", dtype=jnp.float32))
+                                Ctx(plan="jnp", dtype=jnp.float32))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=0.1, atol=0.1 * float(
                                    jnp.abs(want).max()))

@@ -27,10 +27,11 @@ from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention
 from repro.models import Ctx, build_model
 from repro.models import layers as L
+from repro.plan import KernelConfig
 from repro.serve import Request, ServeEngine, lockstep_generate
 
 KEY = jax.random.PRNGKey(0)
-CTX = Ctx(impl="jnp", dtype=jnp.float32)
+CTX = Ctx(plan="jnp", dtype=jnp.float32)
 
 
 def _qkv(B=2, H=2, S=48, D=16, T=None):
@@ -104,8 +105,8 @@ def test_ops_attention_pads_instead_of_fallback(monkeypatch):
         raise AssertionError("jnp reference fallback taken")
     monkeypatch.setattr(ops._ref, "flash_attention_ref", boom)
     q, k, v = _qkv(B=2, H=2, S=40, D=16)
-    got = ops.attention(q, k, v, impl="interpret", causal=True,
-                        tiling=(16, 16))
+    got = ops.attention(q, k, v, causal=True, config=KernelConfig(
+        backend="interpret", bq=16, bkv=16))
     monkeypatch.undo()
     want = _ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -116,10 +117,9 @@ def test_ops_attention_warns_on_remaining_fallback():
     # causal Sq != Skv without lengths is the one intentionally kept
     # fallback (kernel/ref causal alignment differs there)
     q, k, v = _qkv(B=1, H=1, S=16, D=8, T=32)
-    ops._FALLBACK_WARNED.clear()
     with pytest.warns(RuntimeWarning, match="falling back"):
-        ops.attention(q, k, v, impl="interpret", causal=True,
-                      tiling=(8, 8))
+        ops.attention(q, k, v, causal=True, config=KernelConfig(
+            backend="interpret", bq=8, bkv=8))
 
 
 def test_scatter_at_per_row_positions():
@@ -254,7 +254,7 @@ def test_engine_interpret_stays_on_pallas(monkeypatch):
     model = build_model(cfg)
     params = model.init(KEY, dtype=jnp.float32)
     prompts = _prompts(cfg.vocab_size)
-    ctx_i = Ctx(impl="interpret", dtype=jnp.float32, tiling=None)
+    ctx_i = Ctx(plan=KernelConfig(backend="interpret"), dtype=jnp.float32)
 
     def boom(*a, **kw):
         raise AssertionError("jnp reference fallback taken on the "

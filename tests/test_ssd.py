@@ -57,7 +57,7 @@ def test_ssd_initial_state_carries():
 def test_mamba_decode_matches_forward():
     """Recurrent decode == chunked training path, token by token."""
     cfg = get_config("mamba2-130m", reduced=True)
-    ctx = Ctx(impl="jnp", dtype=jnp.float32)
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
     key = jax.random.PRNGKey(0)
     p = init_mamba(key, cfg, jnp.float32)
     B, S = 2, 8

@@ -7,8 +7,9 @@ Covers the autotuning acceptance criteria:
     configs never lose to the serialized baseline;
   * N-slot kernel correctness vs ref.matmul_ref under interpret=True
     for slots in (1, 2, 3);
-  * ops.matmul(tiling="auto") is bit-identical to the default path and
-    the second resolution of the same shape is a cache hit.
+  * auto-plan ops.matmul (config=Plan(backend=...)) is bit-identical
+    to the default path and the second resolution of the same shape
+    is a cache hit.
 """
 
 import numpy as np
@@ -19,6 +20,7 @@ from repro import tune
 from repro.core.cyclemodel import TpuPipelineModel
 from repro.core.pipeline import DobuSchedule, RevolvingSchedule
 from repro.kernels import ops, ref
+from repro.plan import KernelConfig, Plan
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
 from repro.kernels.zero_stall_matmul import zero_stall_matmul
 from repro.tune import (AnalyticOracle, Candidate, KernelSpace, Problem,
@@ -223,19 +225,21 @@ def test_revolving_depth2_matches_dobu_slots():
 
 
 # ----------------------------------------------------------------------
-# ops integration: tiling="auto"
+# ops integration: auto-resolving plans
 # ----------------------------------------------------------------------
 def test_ops_matmul_auto_bit_identical_and_cached(rng, tmp_cache):
     # integer-valued fp32 inputs: every partial sum is exact, so the
     # result is bit-identical regardless of the tiling the tuner picks
     a = jnp.asarray(rng.integers(-4, 5, (33, 47)), jnp.float32)
     b = jnp.asarray(rng.integers(-4, 5, (47, 21)), jnp.float32)
-    default = ops.matmul(a, b, impl="interpret")
-    auto = ops.matmul(a, b, impl="interpret", tiling="auto")
+    default = ops.matmul(a, b, config=KernelConfig(backend="interpret"))
+    auto = ops.matmul(a, b, config=Plan(backend="interpret"))
     assert tmp_cache.misses >= 1          # tuner actually ran
     np.testing.assert_array_equal(np.asarray(default), np.asarray(auto))
     hits = tmp_cache.hits
-    auto2 = ops.matmul(a, b, impl="interpret", tiling="auto")
+    # a FRESH plan re-resolves through the persistent tune cache (a
+    # reused Plan would memoize in its own entry table instead)
+    auto2 = ops.matmul(a, b, config=Plan(backend="interpret"))
     assert tmp_cache.hits > hits          # second resolution = cache hit
     np.testing.assert_array_equal(np.asarray(auto), np.asarray(auto2))
 
@@ -243,30 +247,33 @@ def test_ops_matmul_auto_bit_identical_and_cached(rng, tmp_cache):
 def test_ops_grouped_matmul_auto(rng, tmp_cache):
     a = jnp.asarray(rng.standard_normal((3, 16, 24)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((3, 24, 16)), jnp.float32)
-    got = ops.grouped_matmul(a, b, impl="interpret", tiling="auto")
+    got = ops.grouped_matmul(a, b, config=Plan(backend="interpret"))
     np.testing.assert_allclose(got, ref.grouped_matmul_ref(a, b),
                                atol=2e-5, rtol=2e-5)
 
 
 def test_ops_attention_auto(rng, tmp_cache):
     q = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
-    got = ops.attention(q, q, q, impl="interpret", tiling="auto")
+    got = ops.attention(q, q, q, config=Plan(backend="interpret"))
     np.testing.assert_allclose(got, ref.flash_attention_ref(q, q, q),
                                atol=3e-5, rtol=3e-5)
 
 
-def test_ops_matmul_explicit_tiling_triple(rng):
+def test_ops_matmul_explicit_tile_config(rng):
     a = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
-    got = ops.matmul(a, b, impl="interpret", tiling=(8, 8, 8))
+    got = ops.matmul(a, b, config=KernelConfig(backend="interpret",
+                                               bm=8, bn=8, bk=8))
     np.testing.assert_allclose(got, ref.matmul_ref(a, b), atol=2e-5)
     with pytest.raises(ValueError):
-        ops.matmul(a, b, impl="interpret", tiling="bogus")
+        ops.matmul(a, b, config="bogus")
 
 
-def test_ops_matmul_jnp_path_ignores_tiling(rng):
+def test_ops_matmul_jnp_path_skips_resolution(rng):
     a = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    plan = Plan(backend="jnp")
     np.testing.assert_allclose(
-        ops.matmul(a, b, impl="jnp", tiling="auto"),
+        ops.matmul(a, b, config=plan),
         ref.matmul_ref(a, b), atol=1e-6)
+    assert len(plan) == 0     # jnp path never consults the schedule
