@@ -1,23 +1,32 @@
 """Continuous batching vs lock-step serving throughput.
 
 For a set of architectures, runs the same mixed-length request trace
-twice — through the continuous-batching `ServeEngine` and through a
-lock-step emulation (the pre-engine behavior: the whole batch holds
-its slots until the slowest member finishes, and the next cohort only
-then starts) — and reports prefill/decode throughput for each.
+through the continuous-batching `ServeEngine` — sweeping
+``steps_per_dispatch`` (K decode+sample iterations fused into one
+jitted dispatch, one host sync per block) — and through a lock-step
+emulation (the pre-engine behavior: the whole batch holds its slots
+until the slowest member finishes, and the next cohort only then
+starts), and reports prefill/decode throughput for each.
 
 The decode win is structural, not numeric: with mixed generation
 lengths the lock-step pool runs `max(gen)` steps per cohort at
 shrinking effective occupancy, while the engine back-fills freed slots
 every step.  The printed `occupancy` column (active-slot fraction per
-decode step) is the quantity continuous batching exists to raise.
+decode step) is the quantity continuous batching exists to raise; the
+`dispatches` column is the per-token host-control count the fused
+block dispatch exists to cut (the serving analogue of the paper's
+hoisted loop bookkeeping).
 
 Run: ``PYTHONPATH=src python -m benchmarks.serve_throughput``
 (CPU jnp path — relative numbers/occupancy are meaningful, absolute
-tok/s are not.)
+tok/s are not.)  ``--smoke`` runs one small arch (CI);
+``--steps-per-dispatch K`` restricts the sweep to one K;
+``--step-timeout S`` fails hard if any engine step stalls.
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -33,62 +42,96 @@ N_REQUESTS = 12
 PROMPT_LENS = (24, 12, 6, 18)
 GEN_LENS = (24, 6, 12, 18)
 MAX_LEN = 64
+SWEEP_K = (1, 4)
 
 
-def _requests(cfg):
+def _requests(cfg, n_requests: int, prompt_lens, gen_lens):
     toks = np.asarray(jax.random.randint(
-        jax.random.PRNGKey(1), (N_REQUESTS, max(PROMPT_LENS)),
+        jax.random.PRNGKey(1), (n_requests, max(prompt_lens)),
         0, cfg.vocab_size))
     return [Request(rid=i,
-                    prompt=toks[i, :PROMPT_LENS[i % len(PROMPT_LENS)]].tolist(),
-                    max_new_tokens=GEN_LENS[i % len(GEN_LENS)])
-            for i in range(N_REQUESTS)]
+                    prompt=toks[i, :prompt_lens[i % len(prompt_lens)]].tolist(),
+                    max_new_tokens=gen_lens[i % len(gen_lens)])
+            for i in range(n_requests)]
 
 
-def _run_continuous(model, params, ctx):
-    eng = ServeEngine(model, params, ctx, num_slots=NUM_SLOTS,
-                      max_len=MAX_LEN)
-    eng.run(_requests(model.cfg))
-    occ = (eng.stats["decode_tokens"]
-           / max(eng.stats["decode_steps"] * NUM_SLOTS, 1))
-    return eng.throughput(), occ, eng.stats["decode_steps"]
+def _occupancy(eng):
+    return (eng.stats["decode_tokens"]
+            / max(eng.stats["decode_steps"] * eng.num_slots, 1))
 
 
-def _run_lockstep(model, params, ctx):
-    """Cohorts of NUM_SLOTS requests; every cohort decodes max(gen)
+def _run_continuous(model, params, ctx, reqs, *, num_slots, max_len,
+                    steps_per_dispatch, step_timeout_s=None):
+    eng = ServeEngine(model, params, ctx, num_slots=num_slots,
+                      max_len=max_len,
+                      steps_per_dispatch=steps_per_dispatch)
+    eng.run(reqs, step_timeout_s=step_timeout_s)
+    return eng.throughput(), _occupancy(eng), eng.stats
+
+
+def _run_lockstep(model, params, ctx, reqs, *, num_slots, max_len,
+                  step_timeout_s=None):
+    """Cohorts of ``num_slots`` requests; every cohort decodes max(gen)
     steps with no admission until the whole cohort retires."""
-    eng = ServeEngine(model, params, ctx, num_slots=NUM_SLOTS,
-                      max_len=MAX_LEN)
-    reqs = _requests(model.cfg)
-    tokens = steps = 0
-    for i in range(0, len(reqs), NUM_SLOTS):
-        cohort = reqs[i:i + NUM_SLOTS]
+    import time
+    eng = ServeEngine(model, params, ctx, num_slots=num_slots,
+                      max_len=max_len)
+    for i in range(0, len(reqs), num_slots):
+        cohort = reqs[i:i + num_slots]
         for r in cohort:
             eng.submit(r)
-        cohort_steps = max(r.max_new_tokens for r in cohort) - 1
-        for _ in range(cohort_steps):
+        for _ in range(max(r.max_new_tokens for r in cohort) - 1):
+            t0 = time.perf_counter()
             eng.step()
-        steps += cohort_steps
-        tokens += sum(r.max_new_tokens for r in cohort)
+            dt = time.perf_counter() - t0
+            if step_timeout_s is not None and dt > step_timeout_s:
+                raise RuntimeError(f"lockstep step took {dt:.1f}s "
+                                   f"(> {step_timeout_s}s)")
         assert eng.idle, "cohort should have drained"
-    tp = eng.throughput()
-    occ = (eng.stats["decode_tokens"]
-           / max(eng.stats["decode_steps"] * NUM_SLOTS, 1))
-    return tp, occ, eng.stats["decode_steps"]
+    return eng.throughput(), _occupancy(eng), eng.stats
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small arch, short trace (CI)")
+    ap.add_argument("--steps-per-dispatch", type=int, default=None,
+                    help="restrict the K sweep to this value")
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    help="fail if any engine step exceeds this many seconds")
+    args = ap.parse_args()
+
+    if args.smoke:
+        archs, n_req = ("gemma-7b",), 6
+        prompt_lens, gen_lens, max_len = (12, 6, 9), (8, 4, 6), 32
+    else:
+        archs, n_req = ARCHS, N_REQUESTS
+        prompt_lens, gen_lens, max_len = PROMPT_LENS, GEN_LENS, MAX_LEN
+    sweep = ((args.steps_per_dispatch,) if args.steps_per_dispatch
+             else SWEEP_K)
+
     ctx = Ctx(plan="jnp", dtype=jnp.float32)
-    print("arch,mode,prefill_tok_s,decode_tok_s,decode_steps,occupancy")
-    for arch in ARCHS:
+    print("arch,mode,steps_per_dispatch,prefill_tok_s,decode_tok_s,"
+          "decode_steps,dispatches,occupancy")
+    for arch in archs:
         cfg = get_config(arch, reduced=True)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
-        for mode, fn in (("continuous", _run_continuous),
-                         ("lockstep", _run_lockstep)):
-            tp, occ, steps = fn(model, params, ctx)
-            print(f"{arch},{mode},{tp['prefill_tok_s']:.1f},"
-                  f"{tp['decode_tok_s']:.1f},{steps},{occ:.2f}")
+        reqs = _requests(cfg, n_req, prompt_lens, gen_lens)
+        for k in sweep:
+            tp, occ, st = _run_continuous(
+                model, params, ctx, reqs, num_slots=NUM_SLOTS,
+                max_len=max_len, steps_per_dispatch=k,
+                step_timeout_s=args.step_timeout)
+            print(f"{arch},continuous,{k},{tp['prefill_tok_s']:.1f},"
+                  f"{tp['decode_tok_s']:.1f},{st['decode_steps']},"
+                  f"{st['dispatches']},{occ:.2f}")
+        tp, occ, st = _run_lockstep(model, params, ctx, reqs,
+                                    num_slots=NUM_SLOTS, max_len=max_len,
+                                    step_timeout_s=args.step_timeout)
+        print(f"{arch},lockstep,1,{tp['prefill_tok_s']:.1f},"
+              f"{tp['decode_tok_s']:.1f},{st['decode_steps']},"
+              f"{st['dispatches']},{occ:.2f}")
 
 
 if __name__ == "__main__":

@@ -13,14 +13,22 @@ from repro.launch.serve import serve_batch
 
 
 def main():
+    # steps_per_dispatch=4 fuses 4 decode+sample iterations into one
+    # jitted dispatch (one host sync per block); temperature/top_p run
+    # the on-device sampler with per-request seeds
     for arch in ("gemma-7b", "mamba2-130m"):
         out = serve_batch(arch, reduced=True, batch=4, prompt_len=16,
-                          gen_len=24, num_slots=2, mixed=True)
+                          gen_len=24, num_slots=2, mixed=True,
+                          steps_per_dispatch=4, temperature=0.8,
+                          top_p=0.95, seed=0)
+        s = out["stats"]
         print(f"{arch:14s} generated {tuple(out['generated'].shape)} tokens  "
               f"prefill {out['prefill_s']:.2f}s "
               f"({out['prefill_tok_s']:.0f} tok/s)  "
               f"decode {out['decode_s']:.2f}s "
-              f"({out['decode_tok_s']:.0f} tok/s)")
+              f"({out['decode_tok_s']:.0f} tok/s)  "
+              f"[{s['decode_steps']} decode steps in "
+              f"{s['dispatches']} dispatches]")
 
 
 if __name__ == "__main__":

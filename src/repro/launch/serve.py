@@ -29,7 +29,8 @@ __all__ = ["serve_batch"]
 
 
 def _make_requests(cfg, key, batch: int, prompt_len: int, gen_len: int,
-                   mixed: bool):
+                   mixed: bool, *, temperature: float = 0.0,
+                   top_k: int = 0, top_p: float = 1.0):
     """`batch` requests; with `mixed`, prompt lengths cycle through
     {prompt_len, prompt_len/2, prompt_len/4, 3*prompt_len/4} — the
     ragged traffic shape continuous batching exists for."""
@@ -49,7 +50,9 @@ def _make_requests(cfg, key, batch: int, prompt_len: int, gen_len: int,
             extra = np.asarray(
                 jax.random.normal(jax.random.fold_in(key, i), (p, d)) * 0.1)
         reqs.append(Request(rid=i, prompt=toks[i, :n].tolist(),
-                            max_new_tokens=gen_len, frontend_embeds=extra))
+                            max_new_tokens=gen_len, frontend_embeds=extra,
+                            temperature=temperature, top_k=top_k,
+                            top_p=top_p))
     return reqs
 
 
@@ -57,6 +60,8 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
                 prompt_len: int = 32, gen_len: int = 32, seed: int = 0,
                 dtype=jnp.float32, num_slots: int | None = None,
                 mixed: bool = False, impl: str = "jnp",
+                steps_per_dispatch: int = 1, temperature: float = 0.0,
+                top_k: int = 0, top_p: float = 1.0,
                 plan=None, plan_out: str | None = None,
                 step_timeout_s: float | None = None) -> dict:
     """Run a synthetic request batch through the serving engine.
@@ -66,6 +71,10 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
     path to a saved plan JSON, or ``"trace"`` to resolve every kernel
     config ahead of time); ``plan_out`` saves the engine's active plan
     afterwards — the execution schedule as a shippable artifact.
+    ``steps_per_dispatch`` fuses K decode+sample iterations into one
+    jitted dispatch (one host sync per block); ``temperature`` /
+    ``top_k`` / ``top_p`` select on-device sampling (0/0/1.0 = exact
+    greedy), seeded per request from ``seed``.
     """
     from repro.plan import Plan
     cfg = get_config(arch, reduced=reduced)
@@ -87,8 +96,10 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
     cache_kwargs = {"enc_len": prompt_len} if cfg.family == "encdec" else None
     engine = ServeEngine(model, params, ctx, num_slots=slots,
                          max_len=max_len, cache_dtype=dtype,
+                         steps_per_dispatch=steps_per_dispatch, seed=seed,
                          cache_kwargs=cache_kwargs, plan=plan)
-    reqs = _make_requests(cfg, key, batch, prompt_len, gen_len, mixed)
+    reqs = _make_requests(cfg, key, batch, prompt_len, gen_len, mixed,
+                          temperature=temperature, top_k=top_k, top_p=top_p)
     results = engine.run(reqs, step_timeout_s=step_timeout_s)
     if plan_out:
         engine.plan.save(plan_out)
@@ -122,6 +133,18 @@ def main():
                     help="mixed prompt lengths (ragged traffic)")
     ap.add_argument("--impl", default="jnp",
                     choices=["auto", "jnp", "pallas", "interpret"])
+    ap.add_argument("--steps-per-dispatch", type=int, default=1,
+                    help="decode+sample iterations fused into one jitted "
+                         "dispatch (one host sync per block)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling cutoff (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine sampling seed (per-request chains are "
+                         "folded in from it)")
     ap.add_argument("--plan", default=None,
                     help="'trace' to resolve all kernel configs ahead of "
                          "time, or a path to a saved plan JSON")
@@ -133,14 +156,19 @@ def main():
     out = serve_batch(args.arch, reduced=args.reduced, batch=args.batch,
                       prompt_len=args.prompt_len, gen_len=args.gen_len,
                       num_slots=args.num_slots, mixed=args.mixed,
-                      impl=args.impl, plan=args.plan, plan_out=args.plan_out,
+                      impl=args.impl, seed=args.seed,
+                      steps_per_dispatch=args.steps_per_dispatch,
+                      temperature=args.temperature, top_k=args.top_k,
+                      top_p=args.top_p,
+                      plan=args.plan, plan_out=args.plan_out,
                       step_timeout_s=args.step_timeout)
     s = out["stats"]
     print(f"generated shape: {out['generated'].shape}")
     print(f"prefill: {out['prefill_s']:.2f}s ({out['prefill_tok_s']:.1f} tok/s)  "
           f"decode: {out['decode_s']:.2f}s ({out['decode_tok_s']:.1f} tok/s)")
-    print(f"steps: {s['decode_steps']}  admitted: {s['admitted']}  "
-          f"retired: {s['retired']}  max concurrent: {s['max_concurrent']}")
+    print(f"steps: {s['decode_steps']}  dispatches: {s['dispatches']}  "
+          f"admitted: {s['admitted']}  retired: {s['retired']}  "
+          f"max concurrent: {s['max_concurrent']}")
 
 
 if __name__ == "__main__":

@@ -147,6 +147,15 @@ def cache_shardings(mesh: Mesh, cache: Any, *, seq_axis_threshold: int = 65536
     — sequence parallelism (DESIGN.md §4 SP).
     """
     dp = batch_axes(mesh)
+    # a DP-only (or pod/stage) mesh has no 'model' axis: every
+    # TP-shardable dim replicates instead of raising — same membership
+    # guard _apply_axes/batch_shardings already use.  model_size=0 makes
+    # the `% model_size == 0` guards below unsatisfiable without a
+    # second conditional (Python's `x % 0` never runs: `has_model and`
+    # short-circuits first).
+    has_model = "model" in mesh.axis_names
+    model_size = (mesh.devices.shape[mesh.axis_names.index("model")]
+                  if has_model else 0)
 
     def one(path, leaf):
         name = path_str(path)
@@ -157,14 +166,14 @@ def cache_shardings(mesh: Mesh, cache: Any, *, seq_axis_threshold: int = 65536
             # (L?, B, S, KV, hd|1) — int8-KV scale leaves shard like KV
             spec = [None] * leaf.ndim
             b_ax, s_ax, kv_ax = leaf.ndim - 4, leaf.ndim - 3, leaf.ndim - 2
-            model_size = mesh.devices.shape[mesh.axis_names.index("model")]
             if _fits(leaf.shape[b_ax], mesh, dp):
                 spec[b_ax] = dp
             elif leaf.shape[s_ax] >= seq_axis_threshold and "data" in mesh.axis_names:
                 spec[s_ax] = "data"   # SP for long_500k-style caches
-            if leaf.shape[kv_ax] % model_size == 0:
+            if has_model and leaf.shape[kv_ax] % model_size == 0:
                 spec[kv_ax] = "model"
-            elif leaf.shape[s_ax] % model_size == 0 and spec[s_ax] is None:
+            elif has_model and leaf.shape[s_ax] % model_size == 0 \
+                    and spec[s_ax] is None:
                 # GQA with few KV heads (8 < 16-way TP): shard the cache
                 # sequence over 'model' instead — decode attention over a
                 # sharded context ("flash-decode" style partial softmax,
@@ -175,15 +184,14 @@ def cache_shardings(mesh: Mesh, cache: Any, *, seq_axis_threshold: int = 65536
             spec = [None] * leaf.ndim
             if _fits(leaf.shape[-3], mesh, dp):
                 spec[-3] = dp
-            spec[-1] = ("model" if leaf.shape[-1] % mesh.devices.shape[
-                mesh.axis_names.index("model")] == 0 else None)
+            spec[-1] = ("model" if has_model
+                        and leaf.shape[-1] % model_size == 0 else None)
             return NamedSharding(mesh, P(*spec))
         if name.endswith("ssm"):      # (L?, B, H, N, P)
             spec = [None] * leaf.ndim
             if _fits(leaf.shape[-4], mesh, dp):
                 spec[-4] = dp
-            if leaf.shape[-3] % mesh.devices.shape[
-                    mesh.axis_names.index("model")] == 0:
+            if has_model and leaf.shape[-3] % model_size == 0:
                 spec[-3] = "model"
             return NamedSharding(mesh, P(*spec))
         return replicated(mesh)

@@ -4,30 +4,38 @@ The serving counterpart of the zero-stall kernels: decode is
 bandwidth-bound and batch-starved (TROOP's low-operational-intensity
 analysis; "Know your rooflines!", PAPERS.md), so the way to serve
 heavy traffic fast is to keep the decode batch full — admit new
-requests into freed slots every step (continuous batching) and ingest
+requests into freed slots every step (continuous batching), ingest
 prompts in ONE fused ``Model.prefill`` call instead of ``prompt_len``
-lock-step dispatches.
+lock-step dispatches, and amortize per-token host control across
+``steps_per_dispatch`` fused decode+sample iterations (on-device
+sampling + one sync per block — the serving analogue of the paper's
+zero-overhead loop nests).
 
     from repro.serve import ServeEngine, Request
 
-    engine = ServeEngine(model, params, ctx, num_slots=8, max_len=256)
-    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=32)
+    engine = ServeEngine(model, params, ctx, num_slots=8, max_len=256,
+                         steps_per_dispatch=4)
+    results = engine.run([Request(rid=i, prompt=p, max_new_tokens=32,
+                                  temperature=0.8, top_p=0.95, seed=i)
                           for i, p in enumerate(prompts)])
 
 Pieces:
 
-* :mod:`repro.serve.engine`  — `ServeEngine` (slots, admission,
-  streaming, throughput accounting) and the `lockstep_generate`
-  correctness oracle.
-* :mod:`repro.serve.request` — `Request` / `GenerationResult` types.
+* :mod:`repro.serve.engine`   — `ServeEngine` (slots, admission, block
+  decode dispatch, streaming, throughput accounting) and the
+  `lockstep_generate` correctness oracle.
+* :mod:`repro.serve.sampling` — on-device batched greedy/temperature/
+  top-k/top-p sampling over per-slot PRNG key rows.
+* :mod:`repro.serve.request`  — `Request` / `GenerationResult` types.
 
 Variable-length correctness rides the masked flash-attention path
 (:func:`repro.kernels.ops.attention` with per-sequence lengths), so
 ragged continuous batches stay on the Pallas kernel.
 """
 
+from repro.serve import sampling
 from repro.serve.engine import ServeEngine, lockstep_generate
 from repro.serve.request import GenerationResult, Request
 
 __all__ = ["ServeEngine", "Request", "GenerationResult",
-           "lockstep_generate"]
+           "lockstep_generate", "sampling"]

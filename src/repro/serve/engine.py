@@ -1,13 +1,26 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with block decode dispatch.
 
 Replaces the lock-step serve loop: a request queue feeds a fixed pool
 of decode *slots*.  Each engine step (1) admits queued requests into
 free slots — one fused ``Model.prefill`` call per request populates
 that slot's stripe of the shared KV/state cache — and (2) runs ONE
-jitted decode step over all slots, so sequences of different lengths
-and arrival times decode together and a finished request's slot is
-refilled on the very next step instead of stalling the batch until its
-slowest member drains.
+jitted *block* of ``steps_per_dispatch`` decode+sample iterations over
+all slots, so sequences of different lengths and arrival times decode
+together and a finished request's slot is refilled on the next step
+instead of stalling the batch until its slowest member drains.
+
+Why blocks: decode is bandwidth-bound, so per-iteration host control
+(readback, argmax, re-dispatch) is a first-order cost — the software
+analogue of the per-iteration loop overhead the paper's zero-overhead
+loop nests eliminate.  The block path hoists that control out of the
+hot loop: sampling runs on device (:mod:`repro.serve.sampling`), K
+decode+sample iterations run inside a single ``lax.scan`` dispatch,
+and the host syncs ONCE per block to read the ``(num_slots, K)``
+token tile.  Per-slot done masks (eos hit or ``max_new_tokens``
+reached) freeze finished rows inside the block — the frozen row
+re-emits its last token, stops advancing its PRNG key, and the host
+discards everything past the done point — so emitted tokens are
+identical for every ``steps_per_dispatch``.
 
 Why this is family-agnostic: every family's cache is a pytree whose
 leaves carry the batch dimension *somewhere* (axis 1 for stacked-layer
@@ -19,13 +32,17 @@ decode depth rides the (B,) ``pos`` vector that ``Model.prefill``
 returns (rope offsets, causal masks and cache scatters are all
 per-row — see ``layers._scatter_at``).
 
-Determinism contract: greedy decode through the engine is
-token-for-token identical to :func:`lockstep_generate` for the
-row-independent families (dense/vlm, ssm, hybrid, encdec) — padding
-is masked to exact zeros, so bucket size and batch composition cannot
-leak into a request's logits.  MoE routing is batch-global (capacity
-competition), so MoE serves correctly but is not bit-matched to a
-differently-composed batch.
+Determinism contract: greedy decode (``temperature=0``) through the
+engine is token-for-token identical to :func:`lockstep_generate` for
+the row-independent families (dense/vlm, ssm, hybrid, encdec) at
+every ``steps_per_dispatch`` — padding is masked to exact zeros, so
+bucket size and batch composition cannot leak into a request's
+logits.  Stochastic decode is deterministic per request (seeded by
+``Request.seed``, defaulting to a fold-in of the engine seed and the
+rid) and independent of batch composition and block size: a request's
+sample chain advances exactly once per emitted token.  MoE routing is
+batch-global (capacity competition), so MoE serves correctly but is
+not bit-matched to a differently-composed batch.
 """
 
 from __future__ import annotations
@@ -38,9 +55,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve import sampling
 from repro.serve.request import GenerationResult, Request, SlotState
 
 __all__ = ["ServeEngine", "lockstep_generate"]
+
+
+def _host(x) -> np.ndarray:
+    """THE device->host boundary.  Every readback the engine performs
+    funnels through here, so tests can monkeypatch it and count the
+    syncs per dispatch (the quantity block dispatch exists to cut)."""
+    return np.asarray(x)
 
 
 def _vector_pos(cache: dict, batch: int) -> dict:
@@ -78,9 +103,18 @@ class ServeEngine:
     num_slots : decode batch width (the compiled decode shape).
     max_len : per-slot cache capacity; every request must satisfy
         ``len(prompt) [+ frontend] + max_new_tokens <= max_len``.
+    steps_per_dispatch : decode iterations fused into one jitted
+        dispatch (K).  The host syncs once per dispatch instead of
+        once per token; emitted tokens are identical for every K (the
+        in-block done mask freezes retired rows).  A slot freed
+        mid-block is refilled at the next block boundary, so very
+        large K trades a little occupancy for K-fold lower dispatch
+        overhead.
     bucket_sizes : prompt pad lengths (one prefill compilation each);
         defaults to powers of two from 8 up to ``max_len``.
     eos_id : optional early-stop token id.
+    seed : engine-level sampling seed; a request without an explicit
+        ``Request.seed`` samples from ``fold_in(PRNGKey(seed), rid)``.
     cache_kwargs : forwarded to ``model.init_cache`` (e.g. ``enc_len``
         for the encdec family, which must be shared by all requests).
     plan : optional :class:`repro.plan.Plan` the engine executes under
@@ -95,15 +129,21 @@ class ServeEngine:
 
     def __init__(self, model, params, ctx, *, num_slots: int = 4,
                  max_len: int = 128, cache_dtype=jnp.float32,
+                 steps_per_dispatch: int = 1,
                  bucket_sizes: Sequence[int] | None = None,
-                 eos_id: int | None = None,
+                 eos_id: int | None = None, seed: int = 0,
                  cache_kwargs: dict | None = None,
                  plan=None):
         self.model = model
         self.params = params
         self.num_slots = int(num_slots)
         self.max_len = int(max_len)
+        self.steps_per_dispatch = int(steps_per_dispatch)
+        if self.steps_per_dispatch < 1:
+            raise ValueError(
+                f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
         self.eos_id = eos_id
+        self.seed = int(seed)
         kw = dict(cache_kwargs or {})
 
         if bucket_sizes is None:
@@ -134,10 +174,32 @@ class ServeEngine:
             model.init_cache(self.num_slots, max_len, cache_dtype, **kw),
             self.num_slots)
 
-        self._decode: Callable = jax.jit(
-            lambda p, c, t: model.decode(p, c, t, ctx), donate_argnums=(1,))
+        # two static block specializations: an all-greedy slot pool
+        # (the default, and the determinism-contract path) never pays
+        # for the stochastic sampler's sorts/PRNG draws — the host
+        # knows every active row's temperature, so it picks per
+        # dispatch; at most both compile once
+        self._decode_block: Callable = jax.jit(
+            self._build_block(model, ctx, self.steps_per_dispatch,
+                              greedy_only=False),
+            donate_argnums=(1,))
+        self._decode_block_greedy: Callable = jax.jit(
+            self._build_block(model, ctx, self.steps_per_dispatch,
+                              greedy_only=True),
+            donate_argnums=(1,))
         self._prefill: Callable = jax.jit(
             lambda p, batch: model.prefill(p, batch, ctx, max_len))
+        self._sample1: Callable = jax.jit(sampling.sample)
+
+        # cache-adjacent sampling state: per-slot PRNG keys live on
+        # device next to the cache (overwritten at admission, carried
+        # through the jitted block); the tiny per-slot knob vectors are
+        # host mirrors shipped with each dispatch (traced operands, so
+        # heterogeneous requests share one compiled program)
+        self._keys = sampling.make_keys(self.num_slots)
+        self._temp = np.zeros((self.num_slots,), np.float32)
+        self._topk = np.zeros((self.num_slots,), np.int32)
+        self._topp = np.ones((self.num_slots,), np.float32)
 
         self._pending: collections.deque[Request] = collections.deque()
         self._slots: list[SlotState | None] = [None] * self.num_slots
@@ -146,9 +208,54 @@ class ServeEngine:
         self.stats = {
             "prefill_s": 0.0, "decode_s": 0.0,
             "prefill_tokens": 0, "decode_tokens": 0,
-            "decode_steps": 0, "admitted": 0, "retired": 0,
+            "decode_steps": 0, "dispatches": 0,
+            "admitted": 0, "retired": 0,
             "max_concurrent": 0,
         }
+
+    # ------------------------------------------------------------------
+    def _build_block(self, model, ctx, K: int, *, greedy_only: bool):
+        """The fused decode block: K decode+sample iterations in one
+        ``lax.scan`` under one jit.  Carries (cache, fed token, keys,
+        done, budget); finished rows are frozen — they re-feed their
+        last token, keep their key, and stop consuming budget — so the
+        emitted ``(num_slots, K)`` tile is bit-identical to running K
+        single-step dispatches.  Cache rows of frozen slots still see
+        writes (masking them per-leaf would need per-family code), but
+        a retired slot's stripe is fully overwritten at admission and
+        ``_scatter_at``'s dynamic-update-slice clamps in-bounds, so the
+        garbage is never observable.
+
+        ``greedy_only=True`` compiles the pure-argmax variant (no
+        sorts, no PRNG): keys pass through untouched, which is sound
+        because greedy rows never consume their key and a stochastic
+        row is never dispatched through this block."""
+        eos_id = self.eos_id
+
+        def block(params, cache, tok, keys, temp, topk, topp, done, budget):
+            def one(carry, _):
+                cache, tok, keys, done, budget = carry
+                logits, cache = model.decode(params, cache, tok[:, None], ctx)
+                if greedy_only:
+                    nxt = sampling.greedy(logits[:, -1])
+                else:
+                    keys2, nxt = sampling.sample(logits[:, -1], keys,
+                                                 temp, topk, topp)
+                    keys = jnp.where(done[:, None], keys, keys2)
+                nxt = jnp.where(done, tok, nxt)
+                budget = budget - jnp.where(done, 0, 1)
+                newly_done = budget <= 0
+                if eos_id is not None:
+                    newly_done = newly_done | (nxt == eos_id)
+                done = done | newly_done
+                return (cache, nxt, keys, done, budget), nxt
+
+            carry = (cache, tok, keys, done, budget)
+            (cache, tok, keys, done, budget), toks = jax.lax.scan(
+                one, carry, None, length=K)
+            return cache, toks.T, keys   # toks: (K, B) -> (B, K)
+
+        return block
 
     # ------------------------------------------------------------------
     def _trace_plan(self, model, ctx, cache_kwargs: dict, cache_dtype):
@@ -198,9 +305,13 @@ class ServeEngine:
         if budget > self.max_len:
             raise ValueError(f"request {request.rid}: prompt + generation "
                              f"({budget}) exceeds max_len {self.max_len}")
+        # a rid is live from submission to result pickup: results,
+        # occupied slots AND the pending queue (a pending duplicate used
+        # to be accepted and its result silently overwrote the first)
         if request.rid in self._results or any(
                 s is not None and s.request.rid == request.rid
-                for s in self._slots):
+                for s in self._slots) or any(
+                r.rid == request.rid for r in self._pending):
             raise ValueError(f"duplicate request id {request.rid}")
         self._pending.append(request)
 
@@ -219,6 +330,13 @@ class ServeEngine:
         raise ValueError(f"prompt length {n} exceeds the largest bucket "
                          f"{self.bucket_sizes[-1]}")
 
+    def _request_key(self, req: Request) -> jax.Array:
+        """(2,) uint32 sample-chain seed for one request."""
+        if req.seed is not None:
+            return sampling.request_key(req.seed)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), req.rid)
+        return jax.random.key_data(key).astype(jnp.uint32)
+
     def _admit(self, req: Request, slot: int) -> int:
         """Fused prefill into ``slot``; returns the first sampled token."""
         n = len(req.prompt)
@@ -234,7 +352,21 @@ class ServeEngine:
         if req.frontend_embeds is not None:
             batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)[None]
         logits, cache1 = self._prefill(self.params, batch)
-        tok = int(np.asarray(jnp.argmax(logits[0, -1], axis=-1)))
+
+        # the request's first token is sampled from the prefill logits
+        # with its own knobs/seed — one sync per admission (prefill is
+        # per-request anyway); the advanced key parks in the slot row
+        key = self._request_key(req)
+        new_key, tok_arr = self._sample1(
+            logits[:, -1], key[None],
+            jnp.full((1,), req.temperature, jnp.float32),
+            jnp.full((1,), req.top_k, jnp.int32),
+            jnp.full((1,), req.top_p, jnp.float32))
+        tok = int(_host(tok_arr)[0])
+        self._keys = self._keys.at[slot].set(new_key[0])
+        self._temp[slot] = req.temperature
+        self._topk[slot] = req.top_k
+        self._topp[slot] = req.top_p
 
         def insert(dst, src, ax):
             return jax.lax.dynamic_update_slice_in_dim(
@@ -258,8 +390,9 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> list[tuple[int, int]]:
-        """Admissions + one decode step.  Returns streamed (rid, token)
-        events in emission order."""
+        """Admissions + one fused decode block (``steps_per_dispatch``
+        decode iterations, one host sync).  Returns streamed
+        (rid, token) events in emission order."""
         events: list[tuple[int, int]] = []
         self._step += 1
 
@@ -285,25 +418,46 @@ class ServeEngine:
         if not active:
             return events
 
-        toks = np.zeros((self.num_slots, 1), np.int32)
-        for i in active:
-            toks[i, 0] = self._slots[i].next_token
-        t0 = time.perf_counter()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks))
-        new = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        self.stats["decode_s"] += time.perf_counter() - t0
-        self.stats["decode_steps"] += 1
-
+        K = self.steps_per_dispatch
+        toks = np.zeros((self.num_slots,), np.int32)
+        done = np.ones((self.num_slots,), bool)
+        budget = np.zeros((self.num_slots,), np.int32)
         for i in active:
             st = self._slots[i]
-            tok = int(new[i])
-            st.tokens.append(tok)
-            st.next_token = tok
-            self.stats["decode_tokens"] += 1
-            events.append((st.request.rid, tok))
-            if self._done(st, tok):
-                self._retire(i)
+            toks[i] = st.next_token
+            done[i] = False
+            budget[i] = st.request.max_new_tokens - len(st.tokens)
+
+        # all-greedy pools (the default) take the argmax-specialized
+        # block — no sampler sorts/draws in the hot loop
+        fn = (self._decode_block_greedy
+              if all(self._temp[i] == 0.0 for i in active)
+              else self._decode_block)
+        t0 = time.perf_counter()
+        self.cache, block, self._keys = fn(
+            self.params, self.cache, jnp.asarray(toks), self._keys,
+            jnp.asarray(self._temp), jnp.asarray(self._topk),
+            jnp.asarray(self._topp), jnp.asarray(done),
+            jnp.asarray(budget))
+        block = _host(block)         # THE one sync of this dispatch
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += K
+        self.stats["dispatches"] += 1
+
+        # drain the (num_slots, K) tile in step-major order so the
+        # event stream is ordered exactly like K single-step dispatches
+        for k in range(K):
+            for i in active:
+                st = self._slots[i]
+                if st is None:       # retired at an earlier k
+                    continue
+                tok = int(block[i, k])
+                st.tokens.append(tok)
+                st.next_token = tok
+                self.stats["decode_tokens"] += 1
+                events.append((st.request.rid, tok))
+                if self._done(st, tok):
+                    self._retire(i)
         return events
 
     # ------------------------------------------------------------------
@@ -315,7 +469,8 @@ class ServeEngine:
 
         ``step_timeout_s``: hard per-step wall-clock budget (CI uses it
         to turn a hung backend into a failure instead of a stall).
-        ``on_token``: streaming callback, called as tokens are emitted.
+        ``on_token``: streaming callback, called as tokens are emitted
+        (drained once per block dispatch).
         """
         for r in requests:
             self.submit(r)
@@ -352,7 +507,8 @@ def lockstep_generate(model, params, ctx, prompts: Sequence[Sequence[int]],
                       ) -> list[list[int]]:
     """Greedy lock-step oracle: one ragged batch, fused prefill, then
     synchronized decode.  The continuous-batching engine must match
-    this token-for-token per request (row-independent families)."""
+    this token-for-token per request (row-independent families) at
+    every ``steps_per_dispatch``."""
     B = len(prompts)
     if isinstance(max_new_tokens, int):
         max_new = [max_new_tokens] * B

@@ -16,11 +16,23 @@ class Request:
     includes the token sampled from the prefill logits.
     ``frontend_embeds``: optional (P, d) modality prefix (vlm) or
     (S_enc, d) source frames (encdec) — families that need them.
+
+    Sampling knobs (applied on device, per slot row — see
+    :mod:`repro.serve.sampling`): ``temperature`` (0 = exact greedy
+    argmax, the default), ``top_k`` (0 disables), ``top_p`` (1.0
+    disables), and ``seed`` for the request's private sample chain
+    (``None`` derives one from the engine seed and the rid).  A
+    request's samples depend only on its seed and token position,
+    never on batch composition or the engine's block size.
     """
     rid: int
     prompt: tuple[int, ...]
     max_new_tokens: int
     frontend_embeds: Any = None
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
@@ -28,6 +40,12 @@ class Request:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+        if self.temperature < 0:
+            raise ValueError(f"request {self.rid}: temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError(f"request {self.rid}: top_k must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"request {self.rid}: top_p must be in (0, 1]")
 
 
 @dataclasses.dataclass

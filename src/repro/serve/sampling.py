@@ -1,0 +1,114 @@
+"""On-device batched token sampling for the serving engine.
+
+The serving analogue of the paper's zero-overhead loop nests: the old
+engine read logits back to the host and ran ``np.argmax`` between
+every decode dispatch — a control-flow stall in the middle of the
+bandwidth-bound decode loop.  Everything here is pure jax on ``(B, V)``
+logits with per-row parameter vectors, so sampling fuses into the same
+jitted dispatch as the decode step itself (and into the K-step
+``lax.scan`` block — see :mod:`repro.serve.engine`), and the host only
+ever sees the sampled token ids.
+
+Per-row knobs (all ``(B,)`` vectors, so one compiled program serves a
+slot pool with heterogeneous requests):
+
+* ``temperature`` — ``0`` selects exact greedy argmax (bit-identical
+  to the historical host-side ``np.argmax`` path, independent of the
+  PRNG key); ``> 0`` divides logits before the softmax draw.
+* ``top_k`` — keep the k highest logits (``0`` disables).  Ties at
+  the k-th value are kept (threshold semantics).
+* ``top_p`` — nucleus: keep the smallest prefix of the
+  probability-sorted vocabulary whose mass reaches ``top_p``
+  (``1.0`` disables; the argmax token is always kept).
+
+Keys are raw ``(B, 2)`` uint32 threefry key data — a plain array, so
+they live inside the engine's jitted state next to the cache and
+``split``/``categorical`` vmap over rows.  Each call consumes one
+split per row; the engine freezes a finished row's key (and token), so
+a request's sample sequence depends only on its own seed and position
+— NOT on batch composition or ``steps_per_dispatch``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["greedy", "make_keys", "request_key", "sample"]
+
+_NEG = -1e30  # matches the masking constant used by the attention paths
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """(B, V) -> (B,) int32 exact argmax — the temperature=0 path,
+    also used standalone by the engine's greedy-specialized block so
+    an all-greedy slot pool never pays for sorts or PRNG draws."""
+    return jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+
+
+def request_key(seed: int) -> jax.Array:
+    """(2,) uint32 key data for one request's sample chain."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.key_data(key).astype(jnp.uint32)
+
+
+def make_keys(num_slots: int) -> jax.Array:
+    """Zeroed (num_slots, 2) key-array state (slots are overwritten at
+    admission; empty slots sample garbage that the host never reads)."""
+    return jnp.zeros((num_slots, 2), jnp.uint32)
+
+
+def _mask_top_k_top_p(logits: jax.Array, top_k: jax.Array,
+                      top_p: jax.Array) -> jax.Array:
+    """Fused per-row top-k + nucleus mask off ONE descending sort.
+
+    Both knobs keep a *prefix* of the sorted order, so their
+    intersection is a prefix too and a single threshold realizes both:
+    rank < k AND mass-before-rank < top_p (the argmax is always kept;
+    ties at the threshold value are kept).  top_k <= 0 (or >= V) and
+    top_p = 1.0 disable their respective cuts.
+    """
+    V = logits.shape[-1]
+    k = jnp.where((top_k <= 0) | (top_k >= V), V, top_k)
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]            # descending
+    ranks = jnp.arange(V)[None, :]
+    in_k = ranks < k[:, None]
+    # nucleus mass is measured on the top-k-truncated distribution
+    srt_k = jnp.where(in_k, srt, _NEG)
+    probs = jax.nn.softmax(srt_k, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs         # mass before j
+    kept = in_k & (before < top_p[:, None])
+    thresh = jnp.min(jnp.where(kept, srt, jnp.inf), axis=-1)
+    return jnp.where(logits >= thresh[:, None], logits, _NEG)
+
+
+def sample(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+           top_k: jax.Array, top_p: jax.Array
+           ) -> tuple[jax.Array, jax.Array]:
+    """Draw one token per row, entirely on device.
+
+    logits (B, V) float; keys (B, 2) uint32; temperature/top_p (B,)
+    float; top_k (B,) int.  Returns ``(new_keys, tokens)`` with tokens
+    (B,) int32.  Rows with ``temperature <= 0`` return the exact
+    argmax (key-independent); every row's key advances by one split
+    per call so the chain position stays uniform across rows.
+    """
+    logits = logits.astype(jnp.float32)
+    argmax = greedy(logits)
+
+    t = jnp.asarray(temperature, jnp.float32)
+    safe_t = jnp.where(t > 0, t, 1.0)
+    scaled = logits / safe_t[:, None]
+    scaled = _mask_top_k_top_p(scaled, jnp.asarray(top_k, jnp.int32),
+                               jnp.asarray(top_p, jnp.float32))
+
+    def one(key_data, row_logits):
+        key = jax.random.wrap_key_data(key_data.astype(jnp.uint32),
+                                       impl="threefry2x32")
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, row_logits)
+        return jax.random.key_data(key).astype(jnp.uint32), tok
+
+    new_keys, drawn = jax.vmap(one)(keys, scaled)
+    toks = jnp.where(t > 0, drawn.astype(jnp.int32), argmax)
+    return new_keys, toks

@@ -1,0 +1,152 @@
+"""On-device sampling unit tests (repro.serve.sampling).
+
+The engine's determinism contract hangs on these semantics:
+temperature=0 must be EXACT argmax (key-independent — greedy serving
+parity with `lockstep_generate` cannot depend on seeds), top-k/top-p
+must never leak mass outside the kept set, and the key chain must
+advance exactly one split per call so a request's samples are a pure
+function of (seed, token position).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import sampling
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _logits(B=4, V=64, scale=3.0, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, V)) * scale
+
+
+def _keys(B, base=0):
+    return jnp.stack([sampling.request_key(base + i) for i in range(B)])
+
+
+def _vec(B, val, dtype):
+    return jnp.full((B,), val, dtype)
+
+
+def test_temperature_zero_is_exact_argmax():
+    logits = _logits()
+    B = logits.shape[0]
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    for key_seed in (0, 123):   # greedy must ignore the keys entirely
+        _, toks = sampling.sample(
+            logits, _keys(B, key_seed), _vec(B, 0.0, jnp.float32),
+            _vec(B, 0, jnp.int32), _vec(B, 1.0, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(toks), greedy)
+
+
+@pytest.mark.parametrize("knob", ["top_k_1", "top_p_tiny"])
+def test_degenerate_knobs_reduce_to_argmax(knob):
+    """top_k=1 and a top_p below the argmax's own probability both
+    collapse the kept set to the single best token."""
+    logits = _logits()
+    B = logits.shape[0]
+    topk = _vec(B, 1 if knob == "top_k_1" else 0, jnp.int32)
+    topp = _vec(B, 1e-6 if knob == "top_p_tiny" else 1.0, jnp.float32)
+    _, toks = sampling.sample(logits, _keys(B), _vec(B, 1.3, jnp.float32),
+                              topk, topp)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+def test_top_k_never_leaves_kept_set():
+    logits = _logits(B=2, V=32)
+    k = 5
+    kept = [set(np.argsort(np.asarray(logits[b]))[::-1][:k].tolist())
+            for b in range(2)]
+    for trial in range(25):
+        _, toks = sampling.sample(
+            logits, _keys(2, 1000 + trial), _vec(2, 1.5, jnp.float32),
+            _vec(2, k, jnp.int32), _vec(2, 1.0, jnp.float32))
+        for b, t in enumerate(np.asarray(toks)):
+            assert int(t) in kept[b]
+
+
+def test_top_p_keeps_nucleus_only():
+    """Construct a row where 2 tokens carry ~all the mass: top_p=0.9
+    must only ever emit those two."""
+    V = 16
+    row = np.full(V, -10.0, np.float32)
+    row[3], row[7] = 5.0, 4.5
+    logits = jnp.asarray(np.stack([row, row]))
+    for trial in range(25):
+        _, toks = sampling.sample(
+            logits, _keys(2, 2000 + trial), _vec(2, 1.0, jnp.float32),
+            _vec(2, 0, jnp.int32), _vec(2, 0.9, jnp.float32))
+        assert set(np.asarray(toks).tolist()) <= {3, 7}
+
+
+def test_key_chain_deterministic_and_advancing():
+    logits = _logits()
+    B = logits.shape[0]
+    args = (_vec(B, 0.8, jnp.float32), _vec(B, 0, jnp.int32),
+            _vec(B, 1.0, jnp.float32))
+    k0 = _keys(B)
+    k1, t1 = sampling.sample(logits, k0, *args)
+    k1b, t1b = sampling.sample(logits, k0, *args)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t1b))
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k1b))
+    assert (np.asarray(k1) != np.asarray(k0)).any()   # chain moved
+    k2, t2 = sampling.sample(logits, k1, *args)
+    assert (np.asarray(k2) != np.asarray(k1)).any()
+
+
+def test_per_row_knobs_are_independent():
+    """One batched call applies each row's own knobs: a greedy row next
+    to a stochastic row must produce the exact argmax regardless of
+    what its neighbors do."""
+    logits = _logits(B=3, V=32)
+    temp = jnp.array([0.0, 1.2, 0.0], jnp.float32)
+    topk = jnp.array([0, 3, 1], jnp.int32)
+    topp = jnp.array([1.0, 0.8, 1.0], jnp.float32)
+    _, toks = sampling.sample(logits, _keys(3), temp, topk, topp)
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    assert int(toks[0]) == greedy[0]
+    assert int(toks[2]) == greedy[2]
+
+
+def test_sample_is_jit_and_scan_compatible():
+    """The engine runs sample() inside a jitted lax.scan — lock that
+    shape here with a minimal carry loop."""
+    logits = _logits(B=2, V=16)
+    args = (_vec(2, 0.7, jnp.float32), _vec(2, 4, jnp.int32),
+            _vec(2, 0.9, jnp.float32))
+
+    @jax.jit
+    def chain(keys):
+        def one(keys, _):
+            keys, toks = sampling.sample(logits, keys, *args)
+            return keys, toks
+        return jax.lax.scan(one, keys, None, length=5)
+
+    keys, toks = chain(_keys(2))
+    assert toks.shape == (5, 2)
+    # scanned chain == 5 sequential eager calls (same key evolution)
+    k = _keys(2)
+    seq = []
+    for _ in range(5):
+        k, t = sampling.sample(logits, k, *args)
+        seq.append(np.asarray(t))
+    np.testing.assert_array_equal(np.asarray(toks), np.stack(seq))
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(k))
+
+
+def test_greedy_helper_matches_argmax():
+    logits = _logits()
+    np.testing.assert_array_equal(np.asarray(sampling.greedy(logits)),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+    assert sampling.greedy(logits).dtype == jnp.int32
+
+
+def test_request_key_roundtrip():
+    kd = sampling.request_key(42)
+    assert kd.shape == (2,) and kd.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(kd),
+                                  np.asarray(sampling.request_key(42)))
+    assert (np.asarray(kd) != np.asarray(sampling.request_key(43))).any()

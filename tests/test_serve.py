@@ -198,17 +198,21 @@ def test_prefill_matches_decode_loop(arch):
 # ----------------------------------------------------------------------
 # continuous batching vs lock-step oracle
 # ----------------------------------------------------------------------
+@pytest.mark.parametrize("steps_per_dispatch", [1, 4])
 @pytest.mark.parametrize("arch", ["gemma-7b", "mamba2-130m", "zamba2-2.7b"])
-def test_engine_matches_lockstep_oracle(arch):
+def test_engine_matches_lockstep_oracle(arch, steps_per_dispatch):
     """Mixed prompt lengths, differing generation lengths, 2 slots for
     4 requests — admission into freed slots must be token-for-token
-    identical to decoding everything lock-step in one ragged batch."""
+    identical to decoding everything lock-step in one ragged batch, at
+    K=1 AND through the fused K=4 block (every max_new here is
+    indivisible by 4, so requests retire mid-block)."""
     cfg = get_config(arch, reduced=True)
     model = build_model(cfg)
     params = model.init(KEY, dtype=jnp.float32)
     prompts = _prompts(cfg.vocab_size)
-    max_new = [6, 3, 5, 4]
-    engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32)
+    max_new = [6, 3, 5, 7]
+    engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32,
+                         steps_per_dispatch=steps_per_dispatch)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=m)
             for i, (p, m) in enumerate(zip(prompts, max_new))]
     results = engine.run(reqs, step_timeout_s=300.0)
@@ -222,9 +226,13 @@ def test_engine_matches_lockstep_oracle(arch):
     assert engine.stats["retired"] == 4
     assert engine.stats["max_concurrent"] <= 2
     assert engine.stats["prefill_tokens"] == sum(len(p) for p in prompts)
+    # block dispatch amortization: K decode steps per host dispatch
+    assert engine.stats["decode_steps"] == (
+        engine.stats["dispatches"] * steps_per_dispatch)
 
 
-def test_engine_matches_lockstep_encdec():
+@pytest.mark.parametrize("steps_per_dispatch", [1, 4])
+def test_engine_matches_lockstep_encdec(steps_per_dispatch):
     cfg = get_config("seamless-m4t-large-v2", reduced=True)
     model = build_model(cfg)
     params = model.init(KEY, dtype=jnp.float32)
@@ -234,6 +242,7 @@ def test_engine_matches_lockstep_encdec():
     prompts = _prompts(cfg.vocab_size)
     max_new = [6, 3, 5, 4]
     engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32,
+                         steps_per_dispatch=steps_per_dispatch,
                          cache_kwargs={"enc_len": S_enc})
     reqs = [Request(rid=i, prompt=p, max_new_tokens=m,
                     frontend_embeds=frames[i])
@@ -245,11 +254,13 @@ def test_engine_matches_lockstep_encdec():
         assert results[i].tokens == oracle[i]
 
 
-def test_engine_interpret_stays_on_pallas(monkeypatch):
+@pytest.mark.parametrize("steps_per_dispatch", [1, 4])
+def test_engine_interpret_stays_on_pallas(monkeypatch, steps_per_dispatch):
     """The acceptance shape: ragged continuous batch under
     impl="interpret" runs the Pallas flash kernel end to end (the jnp
     reference is monkeypatched to explode) and matches the jnp-path
-    lock-step oracle token-for-token."""
+    lock-step oracle token-for-token — including through the fused
+    K=4 scan block (max_new=3 retires every request mid-block)."""
     cfg = get_config("gemma-7b", reduced=True)
     model = build_model(cfg)
     params = model.init(KEY, dtype=jnp.float32)
@@ -260,13 +271,152 @@ def test_engine_interpret_stays_on_pallas(monkeypatch):
         raise AssertionError("jnp reference fallback taken on the "
                              "interpret serving path")
     monkeypatch.setattr(ops._ref, "flash_attention_ref", boom)
-    engine = ServeEngine(model, params, ctx_i, num_slots=2, max_len=32)
+    engine = ServeEngine(model, params, ctx_i, num_slots=2, max_len=32,
+                         steps_per_dispatch=steps_per_dispatch)
     results = engine.run([Request(rid=i, prompt=p, max_new_tokens=3)
                           for i, p in enumerate(prompts)])
     monkeypatch.undo()
     oracle = lockstep_generate(model, params, CTX, prompts, 3, max_len=32)
     for i in range(4):
         assert results[i].tokens == oracle[i]
+
+
+def test_engine_eos_retires_mid_block():
+    """eos hit inside a K=4 block freezes the row on device and the
+    host truncates at the eos token — identical to what K=1 emits."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompts = _prompts(cfg.vocab_size)
+    oracle = lockstep_generate(model, params, CTX, prompts, 8, max_len=32)
+    # pick an eos id that greedy decode actually emits mid-sequence
+    eos = oracle[0][2]
+
+    def truncate(toks):
+        return toks[:toks.index(eos) + 1] if eos in toks else toks
+
+    outs = {}
+    for K in (1, 4):
+        engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32,
+                             steps_per_dispatch=K, eos_id=eos)
+        results = engine.run([Request(rid=i, prompt=p, max_new_tokens=8)
+                              for i, p in enumerate(prompts)])
+        outs[K] = [results[i].tokens for i in range(4)]
+    assert outs[1] == outs[4]
+    for i in range(4):
+        assert outs[4][i] == truncate(oracle[i])
+    assert outs[4][0][-1] == eos    # request 0 genuinely stopped early
+    assert len(outs[4][0]) == 3
+
+
+def test_engine_one_host_sync_per_dispatch(monkeypatch):
+    """The zero-stall claim, counted: every device->host readback the
+    engine performs goes through engine._host; the decode loop must
+    sync exactly once per block dispatch (plus one per admission for
+    the prefill-sampled first token), never once per token."""
+    from repro.serve import engine as engine_mod
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompts = _prompts(cfg.vocab_size)
+    counter = {"n": 0}
+    real = engine_mod._host
+
+    def counting_host(x):
+        counter["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(engine_mod, "_host", counting_host)
+    engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32,
+                         steps_per_dispatch=4)
+    engine.run([Request(rid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)])
+    monkeypatch.undo()
+    s = engine.stats
+    assert counter["n"] == s["admitted"] + s["dispatches"]
+    # 4 requests x 6 tokens decoded through far fewer syncs than tokens
+    assert s["dispatches"] < s["decode_tokens"]
+
+
+def test_engine_seeded_sampling_reproducible_and_block_invariant():
+    """Stochastic decode: per-request seeds make output deterministic,
+    independent of steps_per_dispatch (the chain advances exactly once
+    per emitted token; frozen rows stop advancing), and different
+    seeds actually diversify."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompts = _prompts(cfg.vocab_size)
+    max_new = [6, 3, 5, 7]
+
+    def run(K, seed):
+        engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32,
+                             steps_per_dispatch=K, seed=seed)
+        res = engine.run([Request(rid=i, prompt=p, max_new_tokens=m,
+                                  temperature=0.9, top_k=20, top_p=0.95)
+                          for i, (p, m) in enumerate(zip(prompts, max_new))])
+        return [res[i].tokens for i in range(4)]
+
+    a = run(1, seed=7)
+    assert run(4, seed=7) == a          # block-size invariant
+    assert run(1, seed=7) == a          # reproducible
+    b = run(1, seed=8)
+    assert a != b                       # seeds diversify (w.h.p.)
+    for toks, m in zip(a, max_new):
+        assert len(toks) == m
+        assert all(0 <= t < cfg.vocab_size for t in toks)
+
+
+def test_engine_all_greedy_pool_skips_stochastic_sampler():
+    """An all-greedy slot pool must dispatch the argmax-specialized
+    block (no sorts/PRNG in the hot loop); any stochastic row flips
+    the pool to the full sampler block."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    prompts = _prompts(cfg.vocab_size)
+
+    def run(temp):
+        engine = ServeEngine(model, params, CTX, num_slots=2, max_len=32,
+                             steps_per_dispatch=4)
+        used = {"full": 0, "greedy": 0}
+
+        def wrap(name, fn):
+            def inner(*a):
+                used[name] += 1
+                return fn(*a)
+            return inner
+
+        engine._decode_block = wrap("full", engine._decode_block)
+        engine._decode_block_greedy = wrap(
+            "greedy", engine._decode_block_greedy)
+        engine.run([Request(rid=i, prompt=p, max_new_tokens=4,
+                            temperature=temp)
+                    for i, p in enumerate(prompts)])
+        return used
+
+    used = run(0.0)
+    assert used["greedy"] > 0 and used["full"] == 0
+    used = run(0.7)
+    assert used["full"] > 0 and used["greedy"] == 0
+
+
+def test_engine_rejects_pending_duplicate_rid():
+    """A rid queued but not yet admitted must already be a duplicate —
+    the second submit used to be accepted and its result silently
+    overwrote the first."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(KEY, dtype=jnp.float32)
+    engine = ServeEngine(model, params, CTX, num_slots=1, max_len=32)
+    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate request id 0"):
+        engine.submit(Request(rid=0, prompt=[4, 5], max_new_tokens=2))
+    # distinct rid is still fine, and both requests complete
+    engine.submit(Request(rid=1, prompt=[4, 5], max_new_tokens=2))
+    results = engine.run()
+    assert sorted(results) == [0, 1]
+    assert results[0].prompt_len == 3   # the FIRST rid-0 request won
 
 
 def test_engine_moe_serves():
