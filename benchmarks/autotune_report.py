@@ -41,7 +41,11 @@ def _gemms_for(cfg, seq_tokens: int):
     return [g for g in out if all(g[1:4])]
 
 
-def run(shape_name: str = "train_4k", batch_tokens: int = 8192) -> None:
+def collect(shape_name: str = "train_4k",
+            batch_tokens: int = 8192) -> list[dict]:
+    """Tuned-vs-default rows for every registered arch (pure analytic,
+    no hardware): the data behind :func:`run`'s CSV and the ``tune``
+    section of ``BENCH_tune.json`` (``benchmarks.bench_snapshot``)."""
     from repro import tune
     from repro.configs import get_config, list_configs
     from repro.core.cyclemodel import TpuPipelineModel
@@ -57,7 +61,7 @@ def run(shape_name: str = "train_4k", batch_tokens: int = 8192) -> None:
                            dma_cv=oracle.dma_cv)
         return est.mxu_utilization
 
-    print("arch,gemm,M,N,K,default_util,tuned_util,config,speedup")
+    rows = []
     for arch in list_configs():
         cfg = get_config(arch)
         for name, M, N, K, groups in _gemms_for(cfg, batch_tokens):
@@ -66,13 +70,24 @@ def run(shape_name: str = "train_4k", batch_tokens: int = 8192) -> None:
             default = tune.DEFAULT_SPACE.default(p)
             tuned = tune.autotune(p, backend="pallas", dtype_name="bfloat16",
                                   oracle=oracle, cache=cache)
-            u0, u1 = util(default, p), util(tuned, p)
-            t0 = oracle.estimate(default, p)
-            t1 = oracle.estimate(tuned, p)
-            cfg_s = (f"{tuned.bm}x{tuned.bn}x{tuned.bk}"
-                     f"/s{tuned.slots}/{tuned.grid_order}")
-            print(f"{arch},{name},{M},{N},{K},{u0:.3f},{u1:.3f},{cfg_s},"
-                  f"{t0 / t1:.3f}")
+            rows.append({
+                "arch": arch, "gemm": name, "M": M, "N": N, "K": K,
+                "default_util": util(default, p),
+                "tuned_util": util(tuned, p),
+                "config": (f"{tuned.bm}x{tuned.bn}x{tuned.bk}"
+                           f"/s{tuned.slots}/{tuned.grid_order}"),
+                "speedup": (oracle.estimate(default, p)
+                            / oracle.estimate(tuned, p)),
+            })
+    return rows
+
+
+def run(shape_name: str = "train_4k", batch_tokens: int = 8192) -> None:
+    print("arch,gemm,M,N,K,default_util,tuned_util,config,speedup")
+    for r in collect(shape_name, batch_tokens):
+        print(f"{r['arch']},{r['gemm']},{r['M']},{r['N']},{r['K']},"
+              f"{r['default_util']:.3f},{r['tuned_util']:.3f},"
+              f"{r['config']},{r['speedup']:.3f}")
 
 
 def main() -> None:

@@ -1,0 +1,152 @@
+"""Schema-versioned benchmark snapshots: the repo's perf trajectory.
+
+Writes three JSON files — ``BENCH_serve.json``, ``BENCH_tune.json``,
+``BENCH_quant.json`` — capturing, on the CPU-reproducible paths, the
+numbers every future PR must not regress:
+
+* **serve** (interpret backend, reduced gemma-7b): engine scheduling
+  metrics per ``steps_per_dispatch`` — decode steps, dispatches,
+  admissions, occupancy — plus the per-op predicted-utilization table
+  of every kernel the run dispatched.  Scheduling counts are exact by
+  the engine's determinism contract; wall-clock fields ride along as
+  informational context only.
+* **tune** (analytic): tuned-vs-default predicted utilization for the
+  dominant GEMMs of every registered arch
+  (``benchmarks.autotune_report.collect``).
+* **quant** (analytic + accuracy): bf16-vs-int8 predicted utilization
+  (``benchmarks.quant_report.collect_analytic``) and the measured
+  W8A8 max relative logit error per serve arch (informational —
+  last-ulp float behavior varies across BLAS builds).
+
+``scripts/check_bench.py`` diffs a fresh run against the committed
+snapshots (exact on ints/strings, rtol on analytic floats, ignore on
+wall-clock) — CI's regression gate.
+
+Regenerate (THE single documented command; run from the repo root):
+
+    PYTHONPATH=src python -m benchmarks.bench_snapshot --out .
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+SCHEMA = 1
+COMMAND = "PYTHONPATH=src python -m benchmarks.bench_snapshot --out ."
+
+# the serve workload: mixed lengths and budgets sized so admissions
+# happen mid-run (slots < requests) and retirements are staggered
+SERVE_ARCH = "gemma-7b"
+PROMPT_LENS = (5, 11, 3, 8, 6, 2)
+MAX_NEW = (5, 3, 4, 6, 2, 4)
+NUM_SLOTS = 2
+MAX_LEN = 32
+SWEEP_K = (1, 4)
+
+
+def _serve_payload() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import obs
+    from repro.configs import get_config
+    from repro.models import Ctx, build_model
+    from repro.plan import KernelConfig
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config(SERVE_ARCH, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    ctx = Ctx(plan=KernelConfig(backend="interpret"), dtype=jnp.float32)
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (len(PROMPT_LENS), max(PROMPT_LENS)),
+        0, cfg.vocab_size))
+    runs = {}
+    obs.enable()
+    obs.reset_records()
+    for k in SWEEP_K:
+        eng = ServeEngine(model, params, ctx, num_slots=NUM_SLOTS,
+                          max_len=MAX_LEN, steps_per_dispatch=k)
+        reqs = [Request(rid=i, prompt=toks[i, :n].tolist(),
+                        max_new_tokens=m)
+                for i, (n, m) in enumerate(zip(PROMPT_LENS, MAX_NEW))]
+        results = eng.run(reqs)
+        s = eng.stats
+        lat = s.latency_summary()
+        runs[f"k{k}"] = {
+            # deterministic scheduling metrics (gated exact/approx)
+            "steps_per_dispatch": k,
+            "admitted": s.admitted, "retired": s.retired,
+            "max_concurrent": s.max_concurrent,
+            "prefill_tokens": s.prefill_tokens,
+            "decode_tokens": s.decode_tokens,
+            "decode_steps": s.decode_steps,
+            "dispatches": s.dispatches,
+            "mean_dispatch_occupancy": s.mean_dispatch_occupancy,
+            # informational (wall-clock / float-sensitive; not gated)
+            "prefill_tok_s": s.prefill_tok_s,
+            "decode_tok_s": s.decode_tok_s,
+            "ttft": lat["ttft"], "queue_wait": lat["queue_wait"],
+            "token_latency": lat["token_latency"],
+            "tokens_checksum": int(sum(sum(r.tokens)
+                                       for r in results.values())),
+        }
+    # predicted-only utilization rows: config strings and counts are
+    # exact (the dispatch signature set of the compiled programs),
+    # predicted floats approx
+    util = [{kk: vv for kk, vv in row.items()
+             if kk not in ("measured_s", "measured_util")}
+            for row in obs.utilization_table()]
+    obs.reset_records()
+    obs.disable()
+    return {"arch": SERVE_ARCH, "num_slots": NUM_SLOTS, "max_len": MAX_LEN,
+            "prompt_lens": list(PROMPT_LENS), "max_new": list(MAX_NEW),
+            "runs": runs, "op_utilization": util}
+
+
+def _tune_payload() -> dict:
+    from benchmarks.autotune_report import collect
+    return {"rows": collect()}
+
+
+def _quant_payload() -> dict:
+    from benchmarks.quant_report import (SERVE_ARCHS, collect_analytic,
+                                         collect_measured)
+    rows = collect_measured(SERVE_ARCHS, throughput=False)
+    return {"analytic": collect_analytic(),
+            "accuracy": [{"arch": r["arch"], "family": r["family"],
+                          "max_rel_logit_err": r["max_rel_logit_err"]}
+                         for r in rows]}
+
+
+def write_snapshots(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for kind, backend, payload in (
+            ("serve", "interpret", _serve_payload),
+            ("tune", "analytic", _tune_payload),
+            ("quant", "analytic", _quant_payload)):
+        doc = {"schema": SCHEMA, "kind": kind, "command": COMMAND,
+               "backend": backend, "data": payload()}
+        path = os.path.join(out_dir, f"BENCH_{kind}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        paths.append(path)
+        print(f"wrote {path}")
+    return paths
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=".",
+                    help="directory for the BENCH_*.json files "
+                         "(repo root when committing)")
+    args = ap.parse_args()
+    write_snapshots(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,10 @@ ACCURACY_ARCHS = ("gemma-7b", "olmoe-1b-7b", "mamba2-130m", "zamba2-2.7b",
                   "seamless-m4t-large-v2")
 
 
-def analytic_section(batch_tokens: int = 8192) -> None:
+def collect_analytic(batch_tokens: int = 8192) -> list[dict]:
+    """Tuned bf16-vs-int8 rows (pure analytic): the data behind
+    :func:`analytic_section`'s CSV and the ``analytic`` block of
+    ``BENCH_quant.json`` (``benchmarks.bench_snapshot``)."""
     from repro import tune
     from repro.configs import get_config, list_configs
     from repro.core.cyclemodel import TpuPipelineModel
@@ -51,8 +54,7 @@ def analytic_section(batch_tokens: int = 8192) -> None:
                            dma_cv=oracle.dma_cv)
         return cand, est
 
-    print("# section=analytic")
-    print("arch,gemm,M,N,K,bf16_util,int8_util,int8_config,pred_speedup")
+    rows = []
     for arch in list_configs():
         cfg = get_config(arch)
         for name, M, N, K, groups in _gemms_for(cfg, batch_tokens):
@@ -61,10 +63,23 @@ def analytic_section(batch_tokens: int = 8192) -> None:
                                       groups=groups))
             c8, e8 = estimate(Problem(op, M, N, K, dtype_bytes=1,
                                       groups=groups))
-            cfg_s = f"{c8.bm}x{c8.bn}x{c8.bk}/s{c8.slots}"
-            print(f"{arch},{name},{M},{N},{K},{e16.mxu_utilization:.3f},"
-                  f"{e8.mxu_utilization:.3f},{cfg_s},"
-                  f"{e16.total_s / e8.total_s:.3f}")
+            rows.append({
+                "arch": arch, "gemm": name, "M": M, "N": N, "K": K,
+                "bf16_util": e16.mxu_utilization,
+                "int8_util": e8.mxu_utilization,
+                "int8_config": f"{c8.bm}x{c8.bn}x{c8.bk}/s{c8.slots}",
+                "pred_speedup": e16.total_s / e8.total_s,
+            })
+    return rows
+
+
+def analytic_section(batch_tokens: int = 8192) -> None:
+    print("# section=analytic")
+    print("arch,gemm,M,N,K,bf16_util,int8_util,int8_config,pred_speedup")
+    for r in collect_analytic(batch_tokens):
+        print(f"{r['arch']},{r['gemm']},{r['M']},{r['N']},{r['K']},"
+              f"{r['bf16_util']:.3f},{r['int8_util']:.3f},"
+              f"{r['int8_config']},{r['pred_speedup']:.3f}")
 
 
 def _logit_err(model, params, qparams, cfg, ctx_f, ctx_q):
@@ -94,30 +109,50 @@ def _decode_tok_s(model, params, ctx, cfg, gen_len: int) -> float:
     return engine.throughput()["decode_tok_s"]
 
 
-def measured_section(archs, gen_len: int = 8) -> None:
+def collect_measured(archs, gen_len: int = 8, *,
+                     throughput: bool = True) -> list[dict]:
+    """Accuracy (exact) + decode tok/s (directional on CPU) rows; the
+    data behind :func:`measured_section` and the ``accuracy`` block of
+    ``BENCH_quant.json`` (which sets ``throughput=False`` — wall-clock
+    has no place in a committed snapshot)."""
     import jax.numpy as jnp
     from repro.configs import get_config
     from repro.models import Ctx, build_model
+    from repro.plan import Plan
     import jax
 
-    print("# section=measured (reduced configs, jnp path on CPU; tok/s "
-          "directional)")
-    print("arch,family,max_rel_logit_err,fp_decode_tok_s,int8_decode_tok_s")
-    from repro.plan import Plan
     ctx_f = Ctx(plan="jnp", dtype=jnp.float32)
     ctx_q = Ctx(plan=Plan(backend="jnp", quant="int8"), dtype=jnp.float32)
+    rows = []
     for arch in archs:
         cfg = get_config(arch, reduced=True)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
         qparams = model.quantize_weights(params)
-        err = _logit_err(model, params, qparams, cfg, ctx_f, ctx_q)
-        if arch in SERVE_ARCHS:
-            tok_f = _decode_tok_s(model, params, ctx_f, cfg, gen_len)
-            tok_q = _decode_tok_s(model, qparams, ctx_q, cfg, gen_len)
-            print(f"{arch},{cfg.family},{err:.4f},{tok_f:.1f},{tok_q:.1f}")
+        row = {"arch": arch, "family": cfg.family,
+               "max_rel_logit_err": _logit_err(model, params, qparams, cfg,
+                                               ctx_f, ctx_q),
+               "fp_decode_tok_s": None, "int8_decode_tok_s": None}
+        if throughput and arch in SERVE_ARCHS:
+            row["fp_decode_tok_s"] = _decode_tok_s(model, params, ctx_f,
+                                                   cfg, gen_len)
+            row["int8_decode_tok_s"] = _decode_tok_s(model, qparams, ctx_q,
+                                                     cfg, gen_len)
+        rows.append(row)
+    return rows
+
+
+def measured_section(archs, gen_len: int = 8) -> None:
+    print("# section=measured (reduced configs, jnp path on CPU; tok/s "
+          "directional)")
+    print("arch,family,max_rel_logit_err,fp_decode_tok_s,int8_decode_tok_s")
+    for r in collect_measured(archs, gen_len):
+        if r["fp_decode_tok_s"] is not None:
+            print(f"{r['arch']},{r['family']},{r['max_rel_logit_err']:.4f},"
+                  f"{r['fp_decode_tok_s']:.1f},{r['int8_decode_tok_s']:.1f}")
         else:
-            print(f"{arch},{cfg.family},{err:.4f},,")
+            print(f"{r['arch']},{r['family']},"
+                  f"{r['max_rel_logit_err']:.4f},,")
 
 
 def main() -> None:

@@ -17,11 +17,20 @@ decode step) is the quantity continuous batching exists to raise; the
 block dispatch exists to cut (the serving analogue of the paper's
 hoisted loop bookkeeping).
 
+Per-request latency (TTFT / per-token p50/p99, from the engine's
+`EngineStats` samples) rides along in the CSV, and a second
+``# section=op_utilization`` block prints the :mod:`repro.obs`
+per-op predicted-vs-measured utilization table for every kernel
+dispatch the runs traced — the repo's analogue of the paper's Fig. 5
+stall breakdown (predicted = cycle model; measured only with
+``--measure-util``, wall-clock standalone replay).
+
 Run: ``PYTHONPATH=src python -m benchmarks.serve_throughput``
 (CPU jnp path — relative numbers/occupancy are meaningful, absolute
 tok/s are not.)  ``--smoke`` runs one small arch (CI);
 ``--steps-per-dispatch K`` restricts the sweep to one K;
-``--step-timeout S`` fails hard if any engine step stalls.
+``--step-timeout S`` fails hard if any engine step stalls;
+``--measure-util`` adds the measured column to the utilization table.
 """
 
 from __future__ import annotations
@@ -32,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import Ctx, build_model
 from repro.serve import Request, ServeEngine
@@ -56,8 +66,8 @@ def _requests(cfg, n_requests: int, prompt_lens, gen_lens):
 
 
 def _occupancy(eng):
-    return (eng.stats["decode_tokens"]
-            / max(eng.stats["decode_steps"] * eng.num_slots, 1))
+    return (eng.stats.decode_tokens
+            / max(eng.stats.decode_steps * eng.num_slots, 1))
 
 
 def _run_continuous(model, params, ctx, reqs, *, num_slots, max_len,
@@ -99,6 +109,9 @@ def main():
                     help="restrict the K sweep to this value")
     ap.add_argument("--step-timeout", type=float, default=None,
                     help="fail if any engine step exceeds this many seconds")
+    ap.add_argument("--measure-util", action="store_true",
+                    help="add measured wall-clock to the utilization table "
+                         "(standalone per-op replay)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -110,9 +123,15 @@ def main():
     sweep = ((args.steps_per_dispatch,) if args.steps_per_dispatch
              else SWEEP_K)
 
+    # record every kernel dispatch the runs trace (near-zero overhead;
+    # feeds the op_utilization section below)
+    obs.enable()
+    obs.reset_records()
+
     ctx = Ctx(plan="jnp", dtype=jnp.float32)
     print("arch,mode,steps_per_dispatch,prefill_tok_s,decode_tok_s,"
-          "decode_steps,dispatches,occupancy")
+          "decode_steps,dispatches,occupancy,ttft_p50_s,ttft_p99_s,"
+          "tok_p50_s,tok_p99_s")
     for arch in archs:
         cfg = get_config(arch, reduced=True)
         model = build_model(cfg)
@@ -123,15 +142,41 @@ def main():
                 model, params, ctx, reqs, num_slots=NUM_SLOTS,
                 max_len=max_len, steps_per_dispatch=k,
                 step_timeout_s=args.step_timeout)
+            lat = st.latency_summary()
             print(f"{arch},continuous,{k},{tp['prefill_tok_s']:.1f},"
-                  f"{tp['decode_tok_s']:.1f},{st['decode_steps']},"
-                  f"{st['dispatches']},{occ:.2f}")
+                  f"{tp['decode_tok_s']:.1f},{st.decode_steps},"
+                  f"{st.dispatches},{occ:.2f},"
+                  f"{lat['ttft']['p50']:.4f},{lat['ttft']['p99']:.4f},"
+                  f"{lat['token_latency']['p50']:.4f},"
+                  f"{lat['token_latency']['p99']:.4f}")
         tp, occ, st = _run_lockstep(model, params, ctx, reqs,
                                     num_slots=NUM_SLOTS, max_len=max_len,
                                     step_timeout_s=args.step_timeout)
+        lat = st.latency_summary()
         print(f"{arch},lockstep,1,{tp['prefill_tok_s']:.1f},"
-              f"{tp['decode_tok_s']:.1f},{st['decode_steps']},"
-              f"{st['dispatches']},{occ:.2f}")
+              f"{tp['decode_tok_s']:.1f},{st.decode_steps},"
+              f"{st.dispatches},{occ:.2f},"
+              f"{lat['ttft']['p50']:.4f},{lat['ttft']['p99']:.4f},"
+              f"{lat['token_latency']['p50']:.4f},"
+              f"{lat['token_latency']['p99']:.4f}")
+
+    # per-op predicted-vs-measured utilization (the Fig.-5 analogue):
+    # every distinct (op, shape, dtype, backend, config) the runs traced
+    print("# section=op_utilization"
+          + (" (measured: standalone replay on this host)"
+             if args.measure_util else " (predicted only)"))
+    print("op,M,N,K,groups,batch_heads,dtype,backend,config,count,"
+          "predicted_s,predicted_util,measured_s,measured_util")
+    for r in obs.utilization_table(measure=args.measure_util, repeats=2):
+        ms = "" if r["measured_s"] is None else f"{r['measured_s']:.3e}"
+        mu = ("" if r["measured_util"] is None
+              else f"{r['measured_util']:.4f}")
+        print(f"{r['op']},{r['M']},{r['N']},{r['K']},{r['groups']},"
+              f"{r['batch_heads']},{r['dtype']},{r['backend']},"
+              f"{r['config']},{r['count']},{r['predicted_s']:.3e},"
+              f"{r['predicted_util']:.4f},{ms},{mu}")
+    obs.reset_records()
+    obs.disable()
 
 
 if __name__ == "__main__":

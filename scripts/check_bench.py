@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Diff fresh benchmark snapshots against the committed BENCH_*.json.
+
+The repo's first perf-regression gate: CI regenerates the snapshots on
+the interpret/analytic paths (``python -m benchmarks.bench_snapshot
+--out /tmp/bench``) and this script compares them against the files
+committed at the repo root.
+
+Comparison rules, by JSON leaf:
+
+* ints / strings / bools — **exact**.  Scheduling metrics (decode
+  steps, dispatches, occupancy counts), tuned config strings, and
+  shapes are deterministic; any drift is a real behavior change.
+* floats — **relative tolerance** (``--rtol``, default 1e-4).  The
+  analytic cycle-model numbers are pure float arithmetic; the slack
+  only absorbs libm-level differences.
+* keys under an **informational** name (wall-clock seconds, tok/s,
+  latency summaries, token checksums, measured logit error) — ignored.
+  They vary across hosts/BLAS builds and are context, not contract.
+
+Structural drift (missing/extra keys, different row counts) always
+fails: a snapshot that silently loses coverage is a regression too.
+
+Usage:
+    python scripts/check_bench.py --fresh-dir /tmp/bench [--rtol 1e-4]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+KINDS = ("serve", "tune", "quant")
+
+# leaf/subtree key names that are informational (host-dependent):
+# compared never, reported never
+INFO_KEYS = {
+    "prefill_s", "decode_s", "prefill_tok_s", "decode_tok_s",
+    "ttft", "queue_wait", "token_latency",
+    "tokens_checksum", "measured_s", "measured_util",
+    "max_rel_logit_err", "fp_decode_tok_s", "int8_decode_tok_s",
+}
+
+
+def _diff(committed, fresh, rtol: float, path: str, out: list[str]) -> None:
+    if isinstance(committed, dict) and isinstance(fresh, dict):
+        for key in sorted(set(committed) | set(fresh)):
+            sub = f"{path}.{key}" if path else key
+            if key in INFO_KEYS:
+                continue
+            if key not in committed:
+                out.append(f"{sub}: extra key in fresh run")
+            elif key not in fresh:
+                out.append(f"{sub}: missing from fresh run")
+            else:
+                _diff(committed[key], fresh[key], rtol, sub, out)
+    elif isinstance(committed, list) and isinstance(fresh, list):
+        if len(committed) != len(fresh):
+            out.append(f"{path}: length {len(committed)} -> {len(fresh)}")
+            return
+        for i, (c, f) in enumerate(zip(committed, fresh)):
+            _diff(c, f, rtol, f"{path}[{i}]", out)
+    elif isinstance(committed, bool) or isinstance(fresh, bool):
+        if committed != fresh:
+            out.append(f"{path}: {committed} -> {fresh}")
+    elif isinstance(committed, float) or isinstance(fresh, float):
+        c, f = float(committed), float(fresh)
+        if abs(c - f) > rtol * max(abs(c), abs(f), 1e-12):
+            out.append(f"{path}: {c!r} -> {f!r} (rtol {rtol})")
+    else:
+        if committed != fresh:
+            out.append(f"{path}: {committed!r} -> {fresh!r}")
+
+
+def check(committed_dir: str, fresh_dir: str, rtol: float) -> int:
+    failures = 0
+    for kind in KINDS:
+        name = f"BENCH_{kind}.json"
+        cpath = os.path.join(committed_dir, name)
+        fpath = os.path.join(fresh_dir, name)
+        missing = [p for p in (cpath, fpath) if not os.path.exists(p)]
+        if missing:
+            print(f"FAIL {name}: missing {', '.join(missing)}")
+            failures += 1
+            continue
+        with open(cpath) as f:
+            committed = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        if committed.get("schema") != fresh.get("schema"):
+            print(f"FAIL {name}: schema {committed.get('schema')} -> "
+                  f"{fresh.get('schema')} (regenerate the committed "
+                  f"snapshot: {committed.get('command')})")
+            failures += 1
+            continue
+        diffs: list[str] = []
+        _diff(committed, fresh, rtol, "", diffs)
+        if diffs:
+            print(f"FAIL {name}: {len(diffs)} difference(s)")
+            for d in diffs[:40]:
+                print(f"  {d}")
+            if len(diffs) > 40:
+                print(f"  ... and {len(diffs) - 40} more")
+            failures += 1
+        else:
+            print(f"OK   {name}")
+    if failures:
+        print(f"\n{failures} snapshot(s) drifted. If the change is "
+              f"intentional, regenerate and commit:\n  "
+              f"PYTHONPATH=src python -m benchmarks.bench_snapshot --out .")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding the freshly generated "
+                         "BENCH_*.json files")
+    ap.add_argument("--committed-dir", default=".",
+                    help="directory holding the committed snapshots "
+                         "(default: repo root)")
+    ap.add_argument("--rtol", type=float, default=1e-4,
+                    help="relative tolerance for float leaves")
+    args = ap.parse_args()
+    return 1 if check(args.committed_dir, args.fresh_dir, args.rtol) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro import plan as _plan
 from repro.kernels import ref as _ref
 from repro.kernels.zero_stall_matmul import zero_stall_matmul
@@ -60,7 +61,23 @@ from repro.quant.tensor import QTensor, quantize_rows
 
 __all__ = ["matmul", "grouped_matmul", "attention", "host_tiled_matmul",
            "quantized_matmul", "quantized_grouped_matmul", "resolve_impl",
-           "reset_fallback_warnings"]
+           "reset_fallback_warnings", "fallback_counts"]
+
+
+def _record(op: str, *, M, N, K, dtype, backend, config=None, groups=1,
+            batch_heads=1) -> None:
+    """Report this dispatch to the observability layer (when on).
+
+    These wrappers execute at **trace time** under ``jax.jit``, so a
+    record is one traced call site per (shape, dtype, backend, config)
+    signature — exactly the kernel set of the compiled program, which
+    is what the utilization table prices (see
+    :mod:`repro.obs.kernel_watch`).  Off by default: one boolean check.
+    """
+    if _obs.enabled():
+        _obs.record_dispatch(op, M=M, N=N, K=K, dtype=dtype,
+                             backend=backend, config=config, groups=groups,
+                             batch_heads=batch_heads)
 
 
 def resolve_impl(impl: str) -> str:
@@ -173,9 +190,12 @@ def matmul(a: jax.Array, b: jax.Array, *, config=None, out_dtype=None,
         out_dtype = _config_out_dtype(config, _plan.OpKey(
             "matmul", M, N, K, dtype=_plan.dtype_name(a.dtype)))
     if backend == "jnp":
+        _record("matmul", M=M, N=N, K=K, dtype=a.dtype, backend=backend)
         return _ref.matmul_ref(a, b, out_dtype)
     cfg = _plan.resolve(config, op="matmul", M=M, N=N, K=K,
                         dtype=a.dtype, backend=backend)
+    _record("matmul", M=M, N=N, K=K, dtype=a.dtype, backend=backend,
+            config=cfg)
     ap = _pad_to(a, (cfg.bm, cfg.bk))
     bp = _pad_to(b, (cfg.bk, cfg.bn))
     c = zero_stall_matmul(ap, bp, interpret=(backend == "interpret"),
@@ -205,10 +225,14 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *, config=None,
             "grouped_matmul", M, N, K, groups=G,
             dtype=_plan.dtype_name(a.dtype)))
     if backend == "jnp":
+        _record("grouped_matmul", M=M, N=N, K=K, dtype=a.dtype,
+                backend=backend, groups=G)
         return _ref.grouped_matmul_ref(a, b, out_dtype)
     cfg = _plan.resolve(config, op="grouped_matmul", M=M, N=N,
                         K=K, dtype=a.dtype, backend=backend,
                         groups=G)
+    _record("grouped_matmul", M=M, N=N, K=K, dtype=a.dtype,
+            backend=backend, config=cfg, groups=G)
     ap = _pad_to(a, (1, cfg.bm, cfg.bk))
     bp = _pad_to(b, (1, cfg.bk, cfg.bn))
     c = grouped_zero_stall_matmul(ap, bp, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
@@ -255,9 +279,12 @@ def quantized_matmul(x: jax.Array, qw: QTensor, *, config=None,
     x_q, x_s = quantize_rows(x)
     w_q, w_s = qw.data, qw.scale.astype(jnp.float32)
     if backend == "jnp":
+        _record("matmul", M=M, N=N, K=K, dtype="int8", backend=backend)
         return _ref.quantized_matmul_ref(x_q, w_q, x_s, w_s, out_dtype)
     cfg = _plan.resolve(config, op="matmul", M=M, N=N, K=K,
                         dtype=jnp.int8, backend=backend)
+    _record("matmul", M=M, N=N, K=K, dtype="int8", backend=backend,
+            config=cfg)
     c = quantized_zero_stall_matmul(
         _pad_to(x_q, (cfg.bm, cfg.bk)), _pad_to(w_q, (cfg.bk, cfg.bn)),
         _pad_to(x_s, (cfg.bm, 1)), _pad_to(w_s, (1, cfg.bn)),
@@ -289,11 +316,15 @@ def quantized_grouped_matmul(x: jax.Array, qw: QTensor, *, config=None,
     x_q, x_s = quantize_rows(x)
     w_q, w_s = qw.data, qw.scale.astype(jnp.float32)
     if backend == "jnp":
+        _record("grouped_matmul", M=M, N=N, K=K, dtype="int8",
+                backend=backend, groups=G)
         return _ref.quantized_grouped_matmul_ref(x_q, w_q, x_s, w_s,
                                                  out_dtype)
     cfg = _plan.resolve(config, op="grouped_matmul", M=M, N=N,
                         K=K, dtype=jnp.int8, backend=backend,
                         groups=G)
+    _record("grouped_matmul", M=M, N=N, K=K, dtype="int8",
+            backend=backend, config=cfg, groups=G)
     c = quantized_grouped_zero_stall_matmul(
         _pad_to(x_q, (1, cfg.bm, cfg.bk)), _pad_to(w_q, (1, cfg.bk, cfg.bn)),
         _pad_to(x_s, (1, cfg.bm, 1)), _pad_to(w_s, (1, 1, cfg.bn)),
@@ -304,24 +335,44 @@ def quantized_grouped_matmul(x: jax.Array, qw: QTensor, *, config=None,
 
 
 _FALLBACK_WARNED: set[str] = set()
+_FALLBACK_PREFIX = "ops.fallback."
 
 
 def reset_fallback_warnings() -> None:
-    """Forget which fallback reasons have already warned.
+    """Forget which fallback reasons have already warned AND zero the
+    fallback counters.
 
     ``_warn_fallback_once`` is process-global warn-once state; tests
-    asserting on the warning (or its absence) call this (via an
-    autouse fixture) so their outcome is order-independent.
+    asserting on the warning / the counters (or their absence) call
+    this (via an autouse fixture) so their outcome is
+    order-independent.
     """
     _FALLBACK_WARNED.clear()
+    _obs.reset_counters(_FALLBACK_PREFIX)
 
 
-def _warn_fallback_once(reason: str) -> None:
+def fallback_counts() -> dict[str, int]:
+    """{fallback key -> times taken} since the last reset.
+
+    The queryable face of ``_warn_fallback_once``: the warning fires
+    once per key, but every occurrence increments an always-on
+    :mod:`repro.obs` counter, so production runs and tests can assert
+    ``ops.fallback_counts() == {}`` instead of scraping warnings.
+    Counts are per *trace* (these wrappers run at jit-trace time), i.e.
+    the number of compiled programs that baked in a fallback.
+    """
+    pre = _FALLBACK_PREFIX
+    return {k[len(pre):]: v for k, v in _obs.counters(pre).items()}
+
+
+def _warn_fallback_once(key: str, reason: str) -> None:
     """The Pallas path is the product; a silent jnp fallback is a perf
     cliff (serving batches are exactly the ragged shapes that used to
-    take it).  Any fallback still taken is announced once per reason."""
-    if reason not in _FALLBACK_WARNED:
-        _FALLBACK_WARNED.add(reason)
+    take it).  Any fallback still taken is announced once per key and
+    counted every time (``fallback_counts``)."""
+    _obs.counter_inc(_FALLBACK_PREFIX + key)
+    if key not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(key)
         warnings.warn(f"ops.attention: falling back to the jnp reference "
                       f"({reason}); the zero-stall Pallas path is NOT used",
                       RuntimeWarning, stacklevel=3)
@@ -347,19 +398,26 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
     config = _legacy_config("attention", config, {
         "impl": impl, "bq": bq, "bkv": bkv, "tiling": tiling})
     backend = resolve_impl(_plan.config_backend(config, "attention"))
-    if backend == "jnp":
-        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
-                                        q_lens=q_lens, kv_lens=kv_lens)
     B, H, Sq, D = q.shape
     Skv = k.shape[2]
+    if backend == "jnp":
+        _record("attention", M=Sq, N=D, K=Skv, dtype=q.dtype,
+                backend=backend, batch_heads=B * H)
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
+                                        q_lens=q_lens, kv_lens=kv_lens)
     if causal and Sq != Skv and q_lens is None and kv_lens is None:
         # kernel causal is start-aligned (row i == position i); the
         # historical ref is end-aligned for Sq != Skv — don't guess.
-        _warn_fallback_once("causal attention with Sq != Skv and no "
+        _warn_fallback_once("attention_causal_unaligned",
+                            "causal attention with Sq != Skv and no "
                             "length operands has ambiguous alignment")
+        _record("attention", M=Sq, N=D, K=Skv, dtype=q.dtype,
+                backend="jnp", batch_heads=B * H)
         return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
     cfg = _plan.resolve(config, op="attention", M=Sq, N=D, K=Skv,
                         dtype=q.dtype, backend=backend, batch_heads=B * H)
+    _record("attention", M=Sq, N=D, K=Skv, dtype=q.dtype, backend=backend,
+            config=cfg, batch_heads=B * H)
     bq_ = min(cfg.bq, Sq)
     bkv_ = min(cfg.bkv, Skv)
     if Sq % bq_ or Skv % bkv_:

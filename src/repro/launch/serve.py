@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import Ctx, build_model
 from repro.serve import Request, ServeEngine
@@ -117,7 +118,9 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
         # back-compat blended name == decode throughput (prefill is
         # reported separately; the old metric ignored it entirely)
         "tokens_per_s": tp["decode_tok_s"],
-        "stats": dict(engine.stats),
+        # full EngineStats snapshot: the legacy aggregate keys plus
+        # derived throughput, occupancy, and latency summaries
+        "stats": engine.stats.snapshot(),
     }
 
 
@@ -152,23 +155,59 @@ def main():
                     help="save the engine's active execution plan here")
     ap.add_argument("--step-timeout", type=float, default=None,
                     help="fail if any engine step exceeds this many seconds")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print per-request latency percentiles (TTFT, "
+                         "queue wait, per-token p50/p99) and the per-op "
+                         "utilization table after the run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a JSONL span/event trace of the run here "
+                         "(implies tracing on; one JSON object per line)")
     args = ap.parse_args()
-    out = serve_batch(args.arch, reduced=args.reduced, batch=args.batch,
-                      prompt_len=args.prompt_len, gen_len=args.gen_len,
-                      num_slots=args.num_slots, mixed=args.mixed,
-                      impl=args.impl, seed=args.seed,
-                      steps_per_dispatch=args.steps_per_dispatch,
-                      temperature=args.temperature, top_k=args.top_k,
-                      top_p=args.top_p,
-                      plan=args.plan, plan_out=args.plan_out,
-                      step_timeout_s=args.step_timeout)
-    s = out["stats"]
-    print(f"generated shape: {out['generated'].shape}")
-    print(f"prefill: {out['prefill_s']:.2f}s ({out['prefill_tok_s']:.1f} tok/s)  "
-          f"decode: {out['decode_s']:.2f}s ({out['decode_tok_s']:.1f} tok/s)")
-    print(f"steps: {s['decode_steps']}  dispatches: {s['dispatches']}  "
-          f"admitted: {s['admitted']}  retired: {s['retired']}  "
-          f"max concurrent: {s['max_concurrent']}")
+
+    # --trace-out / --metrics turn observability on for the run:
+    # spans/events stream to the JSONL sink (if any), kernel dispatches
+    # feed the utilization table
+    if args.trace_out:
+        obs.enable(trace_path=args.trace_out)
+    elif args.metrics:
+        obs.enable()
+    try:
+        out = serve_batch(args.arch, reduced=args.reduced, batch=args.batch,
+                          prompt_len=args.prompt_len, gen_len=args.gen_len,
+                          num_slots=args.num_slots, mixed=args.mixed,
+                          impl=args.impl, seed=args.seed,
+                          steps_per_dispatch=args.steps_per_dispatch,
+                          temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p,
+                          plan=args.plan, plan_out=args.plan_out,
+                          step_timeout_s=args.step_timeout)
+        s = out["stats"]
+        print(f"generated shape: {out['generated'].shape}")
+        print(f"prefill: {out['prefill_s']:.2f}s "
+              f"({out['prefill_tok_s']:.1f} tok/s)  "
+              f"decode: {out['decode_s']:.2f}s "
+              f"({out['decode_tok_s']:.1f} tok/s)")
+        print(f"steps: {s['decode_steps']}  dispatches: {s['dispatches']}  "
+              f"admitted: {s['admitted']}  retired: {s['retired']}  "
+              f"max concurrent: {s['max_concurrent']}")
+        if args.metrics:
+            for name in ("ttft", "queue_wait", "token_latency"):
+                m = s[name]
+                print(f"{name}: p50={m['p50']:.4f}s p99={m['p99']:.4f}s "
+                      f"max={m['max']:.4f}s (n={m['n']})")
+            print(f"mean dispatch occupancy: "
+                  f"{s['mean_dispatch_occupancy']:.2f}")
+            print("op,M,N,K,dtype,backend,config,count,predicted_util")
+            for r in obs.utilization_table():
+                print(f"{r['op']},{r['M']},{r['N']},{r['K']},{r['dtype']},"
+                      f"{r['backend']},{r['config']},{r['count']},"
+                      f"{r['predicted_util']:.4f}")
+        if args.trace_out:
+            print(f"trace written to {args.trace_out}")
+    finally:
+        if args.trace_out or args.metrics:
+            obs.reset_records()
+            obs.disable()
 
 
 if __name__ == "__main__":

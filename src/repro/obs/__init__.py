@@ -1,0 +1,40 @@
+"""repro.obs — low-overhead observability: spans, counters, kernel
+utilization accounting, and latency statistics.
+
+Three layers, cheapest first:
+
+* **counters** — always-on monotonic integers
+  (:func:`counter_inc` / :func:`counters`); back assertions like
+  ``ops.fallback_counts() == {}``.
+* **spans / events** — structured JSONL tracing
+  (:func:`span` / :func:`event`), a shared no-op when disabled;
+  switch with :func:`enable` / :func:`disable` or scoped
+  :func:`capture`.
+* **kernel watch** — per-dispatch :class:`OpRecord` accounting of the
+  resolved :class:`~repro.plan.KernelConfig`, joined with cycle-model
+  predictions and optional wall-clock replay into
+  :func:`utilization_table` (the repo's Fig.-5 analogue).
+
+See ARCHITECTURE.md "Observability" for the dataflow and the
+``BENCH_*.json`` snapshot schema built on top of this module.
+"""
+
+from repro.obs.kernel_watch import (OpRecord, measure_recorded,
+                                    record_dispatch, recorded_ops,
+                                    reset_records, utilization_table)
+from repro.obs.metrics import percentile, summarize
+from repro.obs.trace import (JsonlSink, ListSink, Span, capture,
+                             counter_inc, counters, disable, enable,
+                             enabled, event, reset_counters, span)
+
+__all__ = [
+    # trace
+    "Span", "JsonlSink", "ListSink", "span", "event", "enable",
+    "disable", "enabled", "capture", "counter_inc", "counters",
+    "reset_counters",
+    # metrics
+    "percentile", "summarize",
+    # kernel watch
+    "OpRecord", "record_dispatch", "recorded_ops", "reset_records",
+    "utilization_table", "measure_recorded",
+]

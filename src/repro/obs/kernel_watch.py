@@ -1,0 +1,245 @@
+"""Kernel-level utilization accounting: which configs actually ran,
+what the cycle model predicted for them, and what the wall clock says.
+
+Every ``repro.kernels.ops`` entry point reports its resolved execution
+configuration here (when observability is on): op, mathematical shape,
+dtype, backend and the concrete :class:`~repro.plan.KernelConfig`.
+Recording happens at **trace time** — under ``jax.jit`` the Python
+wrapper runs once per compilation, so ``count`` is the number of
+traced call sites per config, i.e. the set of kernels baked into the
+compiled program (exactly the input to a Fig.-5-style stall/utilization
+breakdown), not a per-execution tally.
+
+:func:`utilization_table` then joins three columns per record:
+
+* ``predicted_s`` / ``predicted_util`` — the
+  :class:`~repro.core.cyclemodel.TpuPipelineModel` estimate for the
+  recorded configuration (the analytic side of the calibration loop;
+  "Know your rooflines!", PAPERS.md);
+* ``measured_s`` / ``measured_util`` — optional standalone wall-clock
+  replay of the same op/config on the current host
+  (:func:`measure_recorded`), best-of-N with ``block_until_ready``.
+  On the TPU this closes the predicted-vs-measured loop; on CPU (jnp /
+  interpret backends) the measured column is directional only.
+
+``measured_util`` is ideal-MXU-time / measured-time — the paper's
+utilization-of-ideal metric, not raw throughput.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+from repro.obs import trace as _trace
+from repro.plan.config import KernelConfig, dtype_name as _dtype_name
+from repro.plan.config import _dtype_bytes
+
+__all__ = ["OpRecord", "record_dispatch", "recorded_ops", "reset_records",
+           "utilization_table", "measure_recorded"]
+
+
+@dataclasses.dataclass
+class OpRecord:
+    """One (op, shape, dtype, backend, config) dispatch signature."""
+
+    op: str
+    M: int
+    N: int
+    K: int
+    groups: int
+    batch_heads: int
+    dtype: str
+    backend: str
+    config: KernelConfig | None
+    count: int = 0
+
+    @property
+    def key(self) -> tuple:
+        return (self.op, self.M, self.N, self.K, self.groups,
+                self.batch_heads, self.dtype, self.backend, self.config)
+
+    @property
+    def config_str(self) -> str:
+        c = self.config
+        if c is None:
+            return "default"
+        if self.op == "attention":
+            return f"{c.bq}x{c.bkv}"
+        return f"{c.bm}x{c.bn}x{c.bk}/s{c.resolved_slots}/{c.grid_order}"
+
+
+_RECORDS: dict[tuple, OpRecord] = {}
+_SUSPENDED = 0
+
+
+@contextlib.contextmanager
+def _suspended():
+    """Mask recording (the measurement replay calls ops.* itself)."""
+    global _SUSPENDED
+    _SUSPENDED += 1
+    try:
+        yield
+    finally:
+        _SUSPENDED -= 1
+
+
+def record_dispatch(op: str, *, M: int, N: int, K: int, dtype,
+                    backend: str, config: KernelConfig | None = None,
+                    groups: int = 1, batch_heads: int = 1) -> None:
+    """Record one ``ops.*`` dispatch (callers gate on ``obs.enabled()``)."""
+    if _SUSPENDED:
+        return
+    rec = OpRecord(op=op, M=int(M), N=int(N), K=int(K), groups=int(groups),
+                   batch_heads=int(batch_heads), dtype=_dtype_name(dtype),
+                   backend=backend, config=config)
+    hit = _RECORDS.setdefault(rec.key, rec)
+    hit.count += 1
+
+
+def recorded_ops() -> list[OpRecord]:
+    """All dispatch records, in first-seen order."""
+    return list(_RECORDS.values())
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
+# ----------------------------------------------------------------------
+# predicted column
+# ----------------------------------------------------------------------
+def _predicted(rec: OpRecord, model=None, dma_cv: float = 0.15
+               ) -> tuple[float, float, float]:
+    """(total_s, ideal_compute_s, utilization) from the cycle model.
+
+    A record without a resolved config (the jnp backend short-circuits
+    before schedule resolution) is priced at the default KernelConfig —
+    the question the table answers is "what would the zero-stall
+    schedule do with this shape", and that needs *a* configuration.
+    """
+    from repro.core.cyclemodel import TpuPipelineModel
+    from repro.tune.oracle import AnalyticOracle
+    from repro.tune.space import Candidate, Problem
+
+    model = model or TpuPipelineModel()
+    oracle = AnalyticOracle(model, dma_cv=dma_cv)
+    cfg = rec.config or KernelConfig()
+    bytes_ = _dtype_bytes(rec.dtype)
+    if rec.op == "attention":
+        total = oracle.estimate_attention(
+            cfg.bq, cfg.bkv, s_q=rec.M, s_kv=rec.K, head_dim=rec.N,
+            dtype_bytes=bytes_, batch_heads=rec.batch_heads)
+        compute = 4.0 * rec.M * rec.K * rec.N * rec.batch_heads \
+            / model.p.peak_flops
+    else:
+        prob = Problem(rec.op, rec.M, rec.N, rec.K, dtype_bytes=bytes_,
+                       groups=rec.groups)
+        cand = Candidate(bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
+                         slots=cfg.resolved_slots,
+                         grid_order=cfg.grid_order)
+        total = oracle.estimate(cand, prob)
+        est = model.matmul(rec.M, rec.N, rec.K, cfg.bm, cfg.bn, cfg.bk,
+                           dtype_bytes=bytes_, slots=cfg.resolved_slots,
+                           dma_cv=dma_cv)
+        compute = est.compute_s * rec.groups
+    return total, compute, compute / total
+
+
+# ----------------------------------------------------------------------
+# measured column
+# ----------------------------------------------------------------------
+def _replay_fn(rec: OpRecord):
+    """A zero-arg callable running this record's op standalone."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.quant import quantize
+
+    cfg = rec.config
+    if cfg is not None:
+        cfg = dataclasses.replace(cfg, backend=rec.backend)
+    else:
+        cfg = KernelConfig(backend=rec.backend)
+    key = jax.random.PRNGKey(0)
+    in_dtype = {"bfloat16": jnp.bfloat16}.get(rec.dtype, jnp.float32)
+
+    if rec.op == "attention":
+        B = max(1, rec.batch_heads)
+        q = jax.random.normal(key, (B, 1, rec.M, rec.N), jnp.float32)
+        k = jax.random.normal(key, (B, 1, rec.K, rec.N), jnp.float32)
+        v = jax.random.normal(key, (B, 1, rec.K, rec.N), jnp.float32)
+        # causal=False: start- vs end-aligned causal semantics differ
+        # for Sq != Skv and the cost is the same either way
+        return lambda: ops.attention(q, k, v, causal=False, config=cfg)
+    if rec.op == "grouped_matmul":
+        a = jax.random.normal(key, (rec.groups, rec.M, rec.K), jnp.float32)
+        w = jax.random.normal(key, (rec.groups, rec.K, rec.N), jnp.float32)
+        if rec.dtype == "int8":
+            qw = quantize(w)
+            return lambda: ops.quantized_grouped_matmul(a, qw, config=cfg)
+        a, w = a.astype(in_dtype), w.astype(in_dtype)
+        return lambda: ops.grouped_matmul(a, w, config=cfg)
+    a = jax.random.normal(key, (rec.M, rec.K), jnp.float32)
+    w = jax.random.normal(key, (rec.K, rec.N), jnp.float32)
+    if rec.dtype == "int8":
+        qw = quantize(w)
+        return lambda: ops.quantized_matmul(a, qw, config=cfg)
+    a, w = a.astype(in_dtype), w.astype(in_dtype)
+    return lambda: ops.matmul(a, w, config=cfg)
+
+
+def measure_recorded(records=None, *, repeats: int = 2
+                     ) -> dict[tuple, float]:
+    """Wall-clock each record's op standalone (best of ``repeats``
+    after one warmup, ``block_until_ready`` fenced).  Recording is
+    suspended during the replay so measurement does not observe
+    itself.  Returns {record.key: seconds}."""
+    out: dict[tuple, float] = {}
+    with _suspended():
+        for rec in (recorded_ops() if records is None else records):
+            fn = _replay_fn(rec)
+            fn().block_until_ready()
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                fn().block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            out[rec.key] = best
+            _trace.event("obs.measure_op", op=rec.op, M=rec.M, N=rec.N,
+                         K=rec.K, config=rec.config_str, seconds=best)
+    return out
+
+
+# ----------------------------------------------------------------------
+# the table
+# ----------------------------------------------------------------------
+def utilization_table(*, measure: bool = False, repeats: int = 2,
+                      model=None, dma_cv: float = 0.15) -> list[dict]:
+    """Per-op predicted-vs-measured utilization rows (dicts).
+
+    Columns: op, M, N, K, groups, batch_heads, dtype, backend, config,
+    count, predicted_s, predicted_util, and — with ``measure=True`` —
+    measured_s / measured_util (ideal-compute-time over measured
+    wall-clock; meaningful against the TPU roofline only when the
+    replay actually runs on a TPU).
+    """
+    measured = measure_recorded(repeats=repeats) if measure else {}
+    rows = []
+    for rec in recorded_ops():
+        total, compute, util = _predicted(rec, model=model, dma_cv=dma_cv)
+        row = {
+            "op": rec.op, "M": rec.M, "N": rec.N, "K": rec.K,
+            "groups": rec.groups, "batch_heads": rec.batch_heads,
+            "dtype": rec.dtype, "backend": rec.backend,
+            "config": rec.config_str, "count": rec.count,
+            "predicted_s": total, "predicted_util": util,
+            "measured_s": None, "measured_util": None,
+        }
+        m = measured.get(rec.key)
+        if m is not None:
+            row["measured_s"] = m
+            row["measured_util"] = compute / m
+        rows.append(row)
+    return rows

@@ -22,11 +22,19 @@ zero-overhead loop nests).
 Pieces:
 
 * :mod:`repro.serve.engine`   — `ServeEngine` (slots, admission, block
-  decode dispatch, streaming, throughput accounting) and the
-  `lockstep_generate` correctness oracle.
+  decode dispatch, streaming) and the `lockstep_generate` correctness
+  oracle.
+* :mod:`repro.serve.stats`    — typed `EngineStats` (aggregates,
+  per-request TTFT/queue-wait and per-token latency samples, derived
+  throughput, `snapshot()`); `engine.stats` is one of these.
 * :mod:`repro.serve.sampling` — on-device batched greedy/temperature/
   top-k/top-p sampling over per-slot PRNG key rows.
 * :mod:`repro.serve.request`  — `Request` / `GenerationResult` types.
+
+Observability: the engine emits `serve.admit` / `serve.dispatch` spans
+and `serve.retire` events through :mod:`repro.obs` when tracing is
+enabled (near-zero cost otherwise), and `engine.run` accepts separate
+`prefill_timeout_s` / `decode_timeout_s` budgets.
 
 Variable-length correctness rides the masked flash-attention path
 (:func:`repro.kernels.ops.attention` with per-sequence lengths), so
@@ -36,6 +44,7 @@ ragged continuous batches stay on the Pallas kernel.
 from repro.serve import sampling
 from repro.serve.engine import ServeEngine, lockstep_generate
 from repro.serve.request import GenerationResult, Request
+from repro.serve.stats import EngineStats
 
-__all__ = ["ServeEngine", "Request", "GenerationResult",
+__all__ = ["ServeEngine", "EngineStats", "Request", "GenerationResult",
            "lockstep_generate", "sampling"]

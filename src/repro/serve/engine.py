@@ -55,8 +55,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serve import sampling
 from repro.serve.request import GenerationResult, Request, SlotState
+from repro.serve.stats import EngineStats
 
 __all__ = ["ServeEngine", "lockstep_generate"]
 
@@ -66,6 +68,13 @@ def _host(x) -> np.ndarray:
     funnels through here, so tests can monkeypatch it and count the
     syncs per dispatch (the quantity block dispatch exists to cut)."""
     return np.asarray(x)
+
+
+# THE engine clock.  Every latency the engine records (TTFT, queue
+# wait, per-token latency, prefill/decode budgets) reads this one
+# module-level callable, so tests can monkeypatch ``engine._now`` with
+# a fake clock and get bit-deterministic latency metrics.
+_now = time.perf_counter
 
 
 def _vector_pos(cache: dict, batch: int) -> dict:
@@ -205,13 +214,10 @@ class ServeEngine:
         self._slots: list[SlotState | None] = [None] * self.num_slots
         self._results: dict[int, GenerationResult] = {}
         self._step = 0
-        self.stats = {
-            "prefill_s": 0.0, "decode_s": 0.0,
-            "prefill_tokens": 0, "decode_tokens": 0,
-            "decode_steps": 0, "dispatches": 0,
-            "admitted": 0, "retired": 0,
-            "max_concurrent": 0,
-        }
+        self.stats = EngineStats(num_slots=self.num_slots)
+        self._submit_t: dict[int, float] = {}     # rid -> submit clock
+        self._last_prefill_s = 0.0   # slowest single admission, last step
+        self._last_dispatch_s = 0.0  # decode block wall-clock, last step
 
     # ------------------------------------------------------------------
     def _build_block(self, model, ctx, K: int, *, greedy_only: bool):
@@ -313,6 +319,7 @@ class ServeEngine:
                 for s in self._slots) or any(
                 r.rid == request.rid for r in self._pending):
             raise ValueError(f"duplicate request id {request.rid}")
+        self._submit_t[request.rid] = _now()
         self._pending.append(request)
 
     @property
@@ -380,9 +387,12 @@ class ServeEngine:
         self._results[st.request.rid] = GenerationResult(
             rid=st.request.rid, prompt_len=len(st.request.prompt),
             tokens=st.tokens, admitted_step=st.admitted_step,
-            finished_step=self._step)
+            finished_step=self._step, queue_wait_s=st.queue_wait_s,
+            ttft_s=st.ttft_s)
         self._slots[slot] = None
-        self.stats["retired"] += 1
+        self.stats.retired += 1
+        obs.event("serve.retire", rid=st.request.rid, slot=slot,
+                  tokens=len(st.tokens), steps=self._step - st.admitted_step)
 
     def _done(self, st: SlotState, tok: int) -> bool:
         return (len(st.tokens) >= st.request.max_new_tokens
@@ -395,26 +405,40 @@ class ServeEngine:
         (rid, token) events in emission order."""
         events: list[tuple[int, int]] = []
         self._step += 1
+        self._last_prefill_s = 0.0
+        self._last_dispatch_s = 0.0
 
         for slot in range(self.num_slots):
             if self._slots[slot] is not None or not self._pending:
                 continue
             req = self._pending.popleft()
-            t0 = time.perf_counter()
-            tok = self._admit(req, slot)
-            self.stats["prefill_s"] += time.perf_counter() - t0
-            self.stats["prefill_tokens"] += len(req.prompt)
-            self.stats["admitted"] += 1
+            t0 = _now()
+            queue_wait = t0 - self._submit_t.pop(req.rid, t0)
+            with obs.span("serve.admit", rid=req.rid, slot=slot,
+                          step=self._step, prompt_len=len(req.prompt)):
+                tok = self._admit(req, slot)
+            t1 = _now()
+            dt = t1 - t0
+            self.stats.prefill_s += dt
+            self.stats.prefill_tokens += len(req.prompt)
+            self.stats.admitted += 1
+            self._last_prefill_s = max(self._last_prefill_s, dt)
+            # TTFT: submit -> first token on the host (the prefill
+            # logits' sample); queue wait is the pre-admission share
+            ttft = queue_wait + dt
+            self.stats.queue_wait_s.append(queue_wait)
+            self.stats.ttft_s.append(ttft)
             st = SlotState(request=req, tokens=[tok], next_token=tok,
-                           admitted_step=self._step)
+                           admitted_step=self._step,
+                           queue_wait_s=queue_wait, ttft_s=ttft)
             self._slots[slot] = st
             events.append((req.rid, tok))
             if self._done(st, tok):
                 self._retire(slot)
 
         active = [i for i, s in enumerate(self._slots) if s is not None]
-        self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
-                                           len(active))
+        self.stats.max_concurrent = max(self.stats.max_concurrent,
+                                        len(active))
         if not active:
             return events
 
@@ -433,16 +457,25 @@ class ServeEngine:
         fn = (self._decode_block_greedy
               if all(self._temp[i] == 0.0 for i in active)
               else self._decode_block)
-        t0 = time.perf_counter()
-        self.cache, block, self._keys = fn(
-            self.params, self.cache, jnp.asarray(toks), self._keys,
-            jnp.asarray(self._temp), jnp.asarray(self._topk),
-            jnp.asarray(self._topp), jnp.asarray(done),
-            jnp.asarray(budget))
-        block = _host(block)         # THE one sync of this dispatch
-        self.stats["decode_s"] += time.perf_counter() - t0
-        self.stats["decode_steps"] += K
-        self.stats["dispatches"] += 1
+        t0 = _now()
+        with obs.span("serve.dispatch", step=self._step, k=K,
+                      active=len(active)):
+            self.cache, block, self._keys = fn(
+                self.params, self.cache, jnp.asarray(toks), self._keys,
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp), jnp.asarray(done),
+                jnp.asarray(budget))
+            block = _host(block)     # THE one sync of this dispatch
+        dt = _now() - t0
+        self._last_dispatch_s = dt
+        self.stats.decode_s += dt
+        self.stats.decode_steps += K
+        self.stats.dispatches += 1
+        self.stats.dispatch_occupancy.append(len(active) / self.num_slots)
+        # a block's K iterations share one sync, so each token in it
+        # landed after dt/K of amortized decode latency — by design
+        # identical across K for a fixed per-iteration cost
+        per_token_s = dt / K
 
         # drain the (num_slots, K) tile in step-major order so the
         # event stream is ordered exactly like K single-step dispatches
@@ -454,7 +487,8 @@ class ServeEngine:
                 tok = int(block[i, k])
                 st.tokens.append(tok)
                 st.next_token = tok
-                self.stats["decode_tokens"] += 1
+                self.stats.decode_tokens += 1
+                self.stats.token_latency_s.append(per_token_s)
                 events.append((st.request.rid, tok))
                 if self._done(st, tok):
                     self._retire(i)
@@ -463,27 +497,44 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request] = (), *,
             step_timeout_s: float | None = None,
+            prefill_timeout_s: float | None = None,
+            decode_timeout_s: float | None = None,
             on_token: Callable[[int, int], None] | None = None
             ) -> dict[int, GenerationResult]:
         """Drive until every submitted request has finished.
 
-        ``step_timeout_s``: hard per-step wall-clock budget (CI uses it
-        to turn a hung backend into a failure instead of a stall).
+        Timeouts turn a hung backend into a failure instead of a stall
+        (CI's use).  Prefill and decode are timed against **separate**
+        budgets: ``prefill_timeout_s`` bounds the slowest single
+        admission prefill of a step and ``decode_timeout_s`` bounds the
+        fused decode dispatch — a step that admits long prompts into
+        several slots no longer trips the decode budget with prefill
+        time.  ``step_timeout_s`` is shorthand for setting both.
         ``on_token``: streaming callback, called as tokens are emitted
         (drained once per block dispatch).
         """
+        if prefill_timeout_s is None:
+            prefill_timeout_s = step_timeout_s
+        if decode_timeout_s is None:
+            decode_timeout_s = step_timeout_s
         for r in requests:
             self.submit(r)
         while not self.idle:
-            t0 = time.perf_counter()
             for rid, tok in self.step():
                 if on_token is not None:
                     on_token(rid, tok)
-            dt = time.perf_counter() - t0
-            if step_timeout_s is not None and dt > step_timeout_s:
+            if prefill_timeout_s is not None \
+                    and self._last_prefill_s > prefill_timeout_s:
                 raise RuntimeError(
-                    f"engine step {self._step} took {dt:.1f}s "
-                    f"(> step_timeout_s={step_timeout_s})")
+                    f"engine step {self._step}: an admission prefill took "
+                    f"{self._last_prefill_s:.1f}s "
+                    f"(> prefill_timeout_s={prefill_timeout_s})")
+            if decode_timeout_s is not None \
+                    and self._last_dispatch_s > decode_timeout_s:
+                raise RuntimeError(
+                    f"engine step {self._step}: decode dispatch took "
+                    f"{self._last_dispatch_s:.1f}s "
+                    f"(> decode_timeout_s={decode_timeout_s})")
         return dict(self._results)
 
     # ------------------------------------------------------------------
@@ -493,10 +544,10 @@ class ServeEngine:
         framing), so a single blended tokens/s hides both."""
         s = self.stats
         return {
-            "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
-            "decode_tok_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
-            "prefill_s": s["prefill_s"],
-            "decode_s": s["decode_s"],
+            "prefill_tok_s": s.prefill_tok_s,
+            "decode_tok_s": s.decode_tok_s,
+            "prefill_s": s.prefill_s,
+            "decode_s": s.decode_s,
         }
 
 

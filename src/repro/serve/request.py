@@ -50,12 +50,20 @@ class Request:
 
 @dataclasses.dataclass
 class GenerationResult:
-    """Completed request: generated ids plus per-request accounting."""
+    """Completed request: generated ids plus per-request accounting.
+
+    ``queue_wait_s``: submit -> admission start (time spent pending).
+    ``ttft_s``: submit -> first token on the host (queue wait plus the
+    admission prefill+sample).  Both read the engine clock
+    (``repro.serve.engine._now``), so fake-clock tests see exact values.
+    """
     rid: int
     prompt_len: int
     tokens: list[int]
     admitted_step: int
     finished_step: int
+    queue_wait_s: float = 0.0
+    ttft_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -65,3 +73,5 @@ class SlotState:
     tokens: list[int]
     next_token: int
     admitted_step: int
+    queue_wait_s: float = 0.0
+    ttft_s: float = 0.0

@@ -1,0 +1,127 @@
+"""Typed engine statistics: aggregate counters, per-request latency
+samples, and derived throughput — replacing the raw mutable ``stats``
+dict the engine used to expose.
+
+Two kinds of state live here:
+
+* **aggregates** — the original dict's nine counters (``prefill_s``,
+  ``decode_tokens``, ...), now attributes with types;
+* **samples** — per-request TTFT and queue wait, per-token latency,
+  and per-dispatch occupancy, appended by the engine as it runs and
+  summarized on demand (:meth:`EngineStats.latency_summary`).
+
+``snapshot()`` flattens everything into one JSON-safe dict — the shape
+``launch.serve`` reports and ``BENCH_serve.json`` commits.
+
+Dict-style access (``stats["decode_tokens"]``, ``dict(stats)``) still
+works for the original nine keys but emits a :class:`DeprecationWarning`;
+use the attributes or :meth:`snapshot`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import field
+
+from repro.obs.metrics import summarize
+
+__all__ = ["EngineStats"]
+
+# the raw dict's original key set; the deprecation shim serves exactly
+# these, so `dict(engine.stats)` round-trips legacy consumers
+_LEGACY_KEYS = ("prefill_s", "decode_s", "prefill_tokens", "decode_tokens",
+                "decode_steps", "dispatches", "admitted", "retired",
+                "max_concurrent")
+
+
+def _warn_dict_access() -> None:
+    warnings.warn(
+        "dict-style access to ServeEngine.stats is deprecated; read the "
+        "EngineStats attributes or use stats.snapshot()",
+        DeprecationWarning, stacklevel=3)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Serving-engine statistics (see module docstring)."""
+
+    num_slots: int = 0
+
+    # aggregates (the legacy dict keys)
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    decode_steps: int = 0
+    dispatches: int = 0
+    admitted: int = 0
+    retired: int = 0
+    max_concurrent: int = 0
+
+    # per-request / per-dispatch samples
+    ttft_s: list[float] = field(default_factory=list)
+    queue_wait_s: list[float] = field(default_factory=list)
+    token_latency_s: list[float] = field(default_factory=list)
+    dispatch_occupancy: list[float] = field(default_factory=list)
+
+    # -- derived throughput ------------------------------------------------
+    @property
+    def prefill_tok_s(self) -> float:
+        return self.prefill_tokens / max(self.prefill_s, 1e-9)
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.decode_tokens / max(self.decode_s, 1e-9)
+
+    @property
+    def mean_dispatch_occupancy(self) -> float:
+        """Mean fraction of slots active per decode dispatch — the
+        engine-level utilization number (a half-empty slot pool decodes
+        at half the batch efficiency no matter how good the kernel)."""
+        occ = self.dispatch_occupancy
+        return sum(occ) / len(occ) if occ else 0.0
+
+    # -- summaries ---------------------------------------------------------
+    def latency_summary(self) -> dict[str, dict[str, float]]:
+        """{ttft, queue_wait, token_latency} -> {n, mean, p50, p99, max}."""
+        return {
+            "ttft": summarize(self.ttft_s),
+            "queue_wait": summarize(self.queue_wait_s),
+            "token_latency": summarize(self.token_latency_s),
+        }
+
+    def snapshot(self) -> dict:
+        """One JSON-safe dict of everything: aggregates, derived
+        throughput, occupancy, and latency summaries."""
+        out = {k: getattr(self, k) for k in _LEGACY_KEYS}
+        out.update({
+            "num_slots": self.num_slots,
+            "prefill_tok_s": self.prefill_tok_s,
+            "decode_tok_s": self.decode_tok_s,
+            "mean_dispatch_occupancy": self.mean_dispatch_occupancy,
+        })
+        out.update(self.latency_summary())
+        return out
+
+    # -- deprecated dict-style shim ---------------------------------------
+    def __getitem__(self, key: str):
+        _warn_dict_access()
+        if key not in _LEGACY_KEYS:
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def __setitem__(self, key: str, value) -> None:
+        _warn_dict_access()
+        if key not in _LEGACY_KEYS:
+            raise KeyError(key)
+        setattr(self, key, value)
+
+    def __contains__(self, key) -> bool:
+        return key in _LEGACY_KEYS
+
+    def keys(self):
+        """Legacy key view; with :meth:`__getitem__` this makes
+        ``dict(stats)`` reproduce the original dict exactly."""
+        _warn_dict_access()
+        return iter(_LEGACY_KEYS)

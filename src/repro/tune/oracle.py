@@ -26,6 +26,7 @@ import math
 import time
 from typing import Protocol
 
+from repro import obs
 from repro.core.cyclemodel import TpuPipelineModel
 from repro.tune.space import Candidate, Problem
 
@@ -139,4 +140,11 @@ class MeasuredOracle:
             t0 = time.perf_counter()
             self._run(c, p).block_until_ready()
             best = min(best, time.perf_counter() - t0)
+        # structured record of every hardware measurement the tuner
+        # takes — with tracing on, the JSONL sink becomes the raw data
+        # behind a measured-vs-analytic calibration pass
+        obs.event("tune.measure", op=p.op, M=p.M, N=p.N, K=p.K,
+                  groups=p.groups, dtype_bytes=p.dtype_bytes,
+                  config=f"{c.bm}x{c.bn}x{c.bk}/s{c.slots}/{c.grid_order}",
+                  impl=self.impl, seconds=best)
         return best

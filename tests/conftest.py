@@ -19,10 +19,22 @@ def rng():
 
 @pytest.fixture(autouse=True)
 def _reset_fallback_warnings():
-    """ops._warn_fallback_once is process-global warn-once state; reset
-    it around every test so warn-once assertions (and their absence)
-    are independent of test execution order."""
+    """ops._warn_fallback_once is process-global warn-once state (and,
+    since PR 6, always-on obs counters); reset it around every test so
+    warn-once/counter assertions (and their absence) are independent of
+    test execution order."""
     from repro.kernels import ops
     ops.reset_fallback_warnings()
     yield
     ops.reset_fallback_warnings()
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    """repro.obs holds process-global tracer state and kernel dispatch
+    records; leave both clean after every test (tests that enable
+    tracing use obs.capture() or enable/disable themselves)."""
+    yield
+    from repro import obs
+    obs.reset_records()
+    obs.disable()

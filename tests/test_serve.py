@@ -222,13 +222,13 @@ def test_engine_matches_lockstep_oracle(arch, steps_per_dispatch):
         assert results[i].tokens == oracle[i], (
             f"request {i}: {results[i].tokens} != {oracle[i]}")
     # slot-pool accounting: 4 admissions through <= 2 concurrent slots
-    assert engine.stats["admitted"] == 4
-    assert engine.stats["retired"] == 4
-    assert engine.stats["max_concurrent"] <= 2
-    assert engine.stats["prefill_tokens"] == sum(len(p) for p in prompts)
+    assert engine.stats.admitted == 4
+    assert engine.stats.retired == 4
+    assert engine.stats.max_concurrent <= 2
+    assert engine.stats.prefill_tokens == sum(len(p) for p in prompts)
     # block dispatch amortization: K decode steps per host dispatch
-    assert engine.stats["decode_steps"] == (
-        engine.stats["dispatches"] * steps_per_dispatch)
+    assert engine.stats.decode_steps == (
+        engine.stats.dispatches * steps_per_dispatch)
 
 
 @pytest.mark.parametrize("steps_per_dispatch", [1, 4])
@@ -333,9 +333,9 @@ def test_engine_one_host_sync_per_dispatch(monkeypatch):
                 for i, p in enumerate(prompts)])
     monkeypatch.undo()
     s = engine.stats
-    assert counter["n"] == s["admitted"] + s["dispatches"]
+    assert counter["n"] == s.admitted + s.dispatches
     # 4 requests x 6 tokens decoded through far fewer syncs than tokens
-    assert s["dispatches"] < s["decode_tokens"]
+    assert s.dispatches < s.decode_tokens
 
 
 def test_engine_seeded_sampling_reproducible_and_block_invariant():
