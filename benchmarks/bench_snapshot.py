@@ -1,8 +1,8 @@
 """Schema-versioned benchmark snapshots: the repo's perf trajectory.
 
-Writes three JSON files — ``BENCH_serve.json``, ``BENCH_tune.json``,
-``BENCH_quant.json`` — capturing, on the CPU-reproducible paths, the
-numbers every future PR must not regress:
+Writes four JSON files — ``BENCH_serve.json``, ``BENCH_tune.json``,
+``BENCH_quant.json``, ``BENCH_analysis.json`` — capturing, on the
+CPU-reproducible paths, the numbers every future PR must not regress:
 
 * **serve** (interpret backend, reduced gemma-7b): engine scheduling
   metrics per ``steps_per_dispatch`` — decode steps, dispatches,
@@ -17,6 +17,9 @@ numbers every future PR must not regress:
   (``benchmarks.quant_report.collect_analytic``) and the measured
   W8A8 max relative logit error per serve arch (informational —
   last-ulp float behavior varies across BLAS builds).
+* **analysis** (static): ``repro.analyze`` coverage over the five
+  family representatives — plan entries checked, programs linted,
+  hazards found (gated at 0) and per-rule counts.
 
 ``scripts/check_bench.py`` diffs a fresh run against the committed
 snapshots (exact on ints/strings, rtol on analytic floats, ignore on
@@ -106,6 +109,29 @@ def _serve_payload() -> dict:
             "runs": runs, "op_utilization": util}
 
 
+def _analysis_payload() -> dict:
+    """Static-analysis coverage: every family representative freshly
+    plan-traced and run through all three `repro.analyze` layers.
+    The gated contract: zero hazards, zero errors, full coverage —
+    a future PR that introduces a hazardous config or a silent
+    fallback matmul shifts these exact ints."""
+    from repro.analyze import analyze_families
+    reports = analyze_families()
+    per_arch = []
+    for arch, rep in sorted(reports.items()):
+        per_arch.append({
+            "arch": arch, "family": rep.meta.get("family"),
+            "plan_entries": rep.meta.get("plan_entries"),
+            "jaxprs_linted": rep.meta.get("jaxprs_linted"),
+            "errors": len(rep.errors), "warnings": len(rep.warnings),
+            "rule_counts": rep.rule_counts(),
+        })
+    return {"configs_checked": len(per_arch),
+            "hazards_found": sum(r["errors"] for r in per_arch),
+            "warnings_found": sum(r["warnings"] for r in per_arch),
+            "per_arch": per_arch}
+
+
 def _tune_payload() -> dict:
     from benchmarks.autotune_report import collect
     return {"rows": collect()}
@@ -127,7 +153,8 @@ def write_snapshots(out_dir: str) -> list[str]:
     for kind, backend, payload in (
             ("serve", "interpret", _serve_payload),
             ("tune", "analytic", _tune_payload),
-            ("quant", "analytic", _quant_payload)):
+            ("quant", "analytic", _quant_payload),
+            ("analysis", "static", _analysis_payload)):
         doc = {"schema": SCHEMA, "kind": kind, "command": COMMAND,
                "backend": backend, "data": payload()}
         path = os.path.join(out_dir, f"BENCH_{kind}.json")

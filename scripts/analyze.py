@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Static zero-stall verification over the model-family configs.
+
+Runs all three ``repro.analyze`` layers — plan lint + revolving-buffer
+hazard simulation, and jaxpr program lint over the prefill / decode /
+fused K-step dispatch programs — for one architecture per model family
+(dense, moe, ssm, hybrid, encdec), each freshly plan-traced on the
+interpret backend (real tiled configs, no TPU needed, no FLOPs).
+
+CI runs ``--all-families --fail-on warning``: the repo must prove its
+own schedules hazard-free and its programs fallback-free on every
+merge, the static complement of the ``repro.obs`` runtime counters.
+
+Usage:
+  PYTHONPATH=src python scripts/analyze.py --all-families
+  PYTHONPATH=src python scripts/analyze.py --arch gemma-7b --json
+  PYTHONPATH=src python scripts/analyze.py --all-families --quant int8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture or family name (repeatable); "
+                         "families: dense moe ssm hybrid encdec")
+    ap.add_argument("--all-families", action="store_true",
+                    help="analyze one representative arch per family")
+    ap.add_argument("--backend", default="interpret",
+                    choices=["interpret", "pallas", "jnp", "auto"],
+                    help="backend the traced plan resolves for "
+                         "(default: interpret — runs anywhere)")
+    ap.add_argument("--quant", default=None, choices=["int8"],
+                    help="also exercise the quantized path")
+    ap.add_argument("--fused-steps", type=int, default=4,
+                    help="K of the fused decode+sample block to lint "
+                         "(<=1 skips the fused-block lint)")
+    ap.add_argument("--fail-on", default="error",
+                    choices=["error", "warning"],
+                    help="exit nonzero when any diagnostic at or above "
+                         "this severity is found")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON object (reports keyed by arch)")
+    args = ap.parse_args()
+
+    from repro.analyze import FAMILY_ARCHS, analyze_families
+
+    if args.all_families or not args.arch:
+        families = list(FAMILY_ARCHS)
+    else:
+        families = args.arch
+    reports = analyze_families(families, backend=args.backend,
+                               quant=args.quant,
+                               fused_steps=args.fused_steps)
+
+    ok = True
+    if args.json:
+        print(json.dumps({arch: rep.to_json()
+                          for arch, rep in reports.items()}, indent=2))
+        ok = all(rep.ok(args.fail_on) for rep in reports.values())
+    else:
+        for arch, rep in reports.items():
+            meta = rep.meta
+            line = (f"{arch} [{meta.get('family', '?')}]: "
+                    f"{meta.get('plan_entries', 0)} plan entries, "
+                    f"{meta.get('jaxprs_linted', 0)} programs -> {rep!r}")
+            print(line)
+            if len(rep):
+                print(rep.format())
+            if not rep.ok(args.fail_on):
+                ok = False
+        verdict = "PASS" if ok else f"FAIL (fail-on={args.fail_on})"
+        print(f"analyze: {len(reports)} config(s) checked -> {verdict}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

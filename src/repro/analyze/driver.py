@@ -1,0 +1,142 @@
+"""Repo-wide static-analysis driver: family → traced plan → Report.
+
+``analyze_arch`` is the one-stop entry the CLI (``scripts/analyze.py``)
+and the benchmark snapshot use: build a reduced model for one
+architecture, resolve its full execution plan by abstract tracing
+(:func:`repro.plan.trace_model` — shapes only, no FLOPs), then run all
+three analyzer layers over the result:
+
+  1. :func:`repro.analyze.lint_plan` — plan artifact legality plus the
+     per-entry revolving-buffer hazard simulation (ZS-S*/ZS-L* rules);
+  2. :func:`repro.analyze.lint_program` over the ``prefill`` and
+     ``decode`` jaxprs — non-kernel fallback matmuls, host callbacks
+     (ZS-P* rules);
+  3. the same program lint over a fused K-step decode+sample block
+     (scan of decode + greedy argmax), the dispatch shape
+     ``ServeEngine(steps_per_dispatch=K)`` executes — any host sync
+     inside it would serialize the zero-stall decode loop.
+
+All model/JAX imports are deferred so ``import repro.analyze`` stays
+cheap for users who only want the checkers.
+"""
+
+from __future__ import annotations
+
+__all__ = ["FAMILY_ARCHS", "analyze_arch", "analyze_families"]
+
+# one representative (reduced) architecture per model family
+FAMILY_ARCHS = {
+    "dense": "gemma-7b",
+    "moe": "olmoe-1b-7b",
+    "ssm": "mamba2-130m",
+    "hybrid": "zamba2-2.7b",
+    "encdec": "seamless-m4t-large-v2",
+}
+
+
+def analyze_arch(arch: str, *, backend: str = "interpret",
+                 quant: str | None = None, prompt_len: int = 16,
+                 max_len: int = 32, fused_steps: int = 4, policy=None):
+    """Statically verify one architecture end to end.
+
+    Traces a fresh plan for the reduced config under ``backend``
+    (``"interpret"`` resolves real tiled configs without TPU hardware),
+    lints the plan (+ optional fault ``policy``), then lints the
+    prefill / decode / fused-block jaxprs.  Returns a
+    :class:`repro.analyze.Report`; ``report.meta`` carries counters
+    (entries checked, jaxprs linted).
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analyze.diagnostics import Report
+    from repro.analyze.plan_lint import lint_plan
+    from repro.analyze.program_lint import lint_program
+    from repro.configs import get_config
+    from repro.models import Ctx, build_model
+    from repro.plan import Plan, trace_model
+
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    plan = Plan(backend=backend, quant=quant)
+    ctx = Ctx(plan=plan, dtype=jnp.float32)
+
+    batch = {"tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32),
+             "lengths": jax.ShapeDtypeStruct((1,), jnp.int32)}
+    if cfg.family == "encdec" or cfg.frontend:
+        n = prompt_len if cfg.family == "encdec" else cfg.frontend_tokens
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (1, n, cfg.d_model), jnp.float32)
+    cache_kwargs = {"enc_len": prompt_len} if cfg.family == "encdec" else None
+
+    plan = trace_model(model, [batch], ctx, max_len=max_len,
+                       cache_kwargs=cache_kwargs)
+    report = lint_plan(plan, policy=policy)
+
+    # program lint under the *resolved* plan: abstract tracing never
+    # consults the tuner again, and kernel dispatch shows up as
+    # pallas_call (skipped) rather than raw dot_general
+    ctx = dataclasses.replace(ctx, plan=plan)
+    params = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+    if quant is not None:
+        params = jax.eval_shape(
+            lambda p: model.quantize_weights(p, fmt=quant), params)
+    is_quant = quant is not None
+
+    jaxprs = 0
+    pre = jax.make_jaxpr(
+        lambda p, b: model.prefill(p, b, ctx, max_len))(params, batch)
+    report.extend(lint_program(pre, quant=is_quant))
+    jaxprs += 1
+
+    cache = jax.eval_shape(lambda: model.init_cache(
+        1, max_len, jnp.float32, **dict(cache_kwargs or {})))
+    tok = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+    dec = jax.make_jaxpr(
+        lambda p, c, t: model.decode(p, c, t, ctx))(params, cache, tok)
+    report.extend(lint_program(dec, quant=is_quant))
+    jaxprs += 1
+
+    if fused_steps > 1:
+        # the fused K-step dispatch ServeEngine builds: scan of
+        # decode + on-device greedy sampling, one host sync per block
+        def block(p, c, t):
+            def one(carry, _):
+                c, t = carry
+                logits, c = model.decode(p, c, t, ctx)
+                nxt = jnp.argmax(logits[:, -1], axis=-1)
+                nxt = nxt.astype(jnp.int32)[:, None]
+                return (c, nxt), nxt[:, 0]
+            (_, _), toks = jax.lax.scan(one, (c, t), None,
+                                        length=fused_steps)
+            return toks
+
+        fused = jax.make_jaxpr(block)(params, cache, tok)
+        report.extend(lint_program(fused, quant=is_quant))
+        jaxprs += 1
+
+    out = Report()
+    out.extend(report)
+    out.meta = {"arch": arch, "family": cfg.family, "backend": backend,
+                "quant": quant, "plan_entries": len(plan.entries),
+                "jaxprs_linted": jaxprs}
+    return out
+
+
+def analyze_families(families=None, *, backend: str = "interpret",
+                     quant: str | None = None, fused_steps: int = 4,
+                     policy=None) -> dict:
+    """Run :func:`analyze_arch` over the family representatives.
+
+    Returns ``{arch: Report}`` for ``families`` (all five by default —
+    names may be family keys or explicit arch names).
+    """
+    picks = []
+    for name in (families or list(FAMILY_ARCHS)):
+        picks.append(FAMILY_ARCHS.get(name, name))
+    return {arch: analyze_arch(arch, backend=backend, quant=quant,
+                               fused_steps=fused_steps, policy=policy)
+            for arch in picks}

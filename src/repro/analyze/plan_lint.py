@@ -1,0 +1,184 @@
+"""Plan linter: validate a `repro.plan.Plan` artifact before it runs.
+
+A Plan is a shippable execution schedule (``--plan`` on the serve
+CLI); a replica loading one must be able to trust it without running
+it.  :func:`lint_plan` checks every entry against the rules below and
+— via :func:`repro.analyze.hazards.check_config` — against the full
+schedule-hazard battery, so ``ServeEngine(plan=..., validate=True)``
+rejects a hazardous or int8-unsafe plan at load time.
+
+Optionally pass the replica's :class:`repro.runtime.fault_tolerance
+.RetryPolicy` to lint the (plan, fault policy) *pair*: a restarting
+replica re-resolves its plan, so an empty auto plan plus an aggressive
+restart policy silently re-tunes on every recovery.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.analyze.diagnostics import Diagnostic, Report
+from repro.analyze.hazards import check_config
+from repro.core.cyclemodel import TpuParams
+from repro.plan.config import KernelConfig, OpKey, _dtype_bytes
+
+__all__ = ["lint_plan"]
+
+#: MXU lane alignment by backend (mirror of the tuner spaces).
+_ALIGN = {"pallas": 128, "interpret": 8, "auto": 128, "jnp": 1}
+
+#: A decode-hot matmul: the bucketed M of a few-token decode step.
+_DECODE_HOT_M = 16
+
+#: Accepted accumulator-safe out_dtypes for int8 entries.
+_INT8_SAFE_OUT = ("int32", "float32", "bfloat16", "float16")
+
+
+def _pad(dim: int, align: int) -> int:
+    return max(align, int(math.ceil(dim / align)) * align)
+
+
+def _lint_entry(key: OpKey, cfg: KernelConfig, plan,
+                params: TpuParams) -> list[Diagnostic]:
+    where = key.to_str()
+    diags: list[Diagnostic] = []
+
+    # ZS-L001: the OpKey itself must be resolvable (op vocabulary is
+    # enforced by OpKey; dims are not)
+    if min(key.M, key.N, key.K, key.groups) < 1:
+        diags.append(Diagnostic(
+            rule="ZS-L001", severity="error", where=where,
+            message=f"OpKey has non-positive dims "
+                    f"(M={key.M}, N={key.N}, K={key.K}, g={key.groups})",
+            hint="plan entries must name real call-site shapes"))
+        return diags            # dims below would divide by garbage
+
+    # ZS-L002: entry backend must not contradict the plan backend
+    if (cfg.backend != "auto" and plan.backend != "auto"
+            and cfg.backend != plan.backend):
+        diags.append(Diagnostic(
+            rule="ZS-L002", severity="error", where=where,
+            message=f"entry backend {cfg.backend!r} contradicts plan "
+                    f"backend {plan.backend!r}",
+            hint="stamp entries with backend='auto' and let the plan "
+                 "decide"))
+
+    align = _ALIGN.get(cfg.backend if cfg.backend != "auto"
+                       else plan.backend, 128)
+    if key.op in ("matmul", "grouped_matmul"):
+        # ZS-L003: a tile larger than the padded bucket dim is pure
+        # zero-padding work (the tuner's feasibility rule)
+        for tile, dim, name in ((cfg.bm, key.M, "bm"), (cfg.bn, key.N, "bn"),
+                                (cfg.bk, key.K, "bk")):
+            if tile > _pad(dim, align):
+                diags.append(Diagnostic(
+                    rule="ZS-L003", severity="warning", where=where,
+                    message=f"{name}={tile} exceeds the padded bucket dim "
+                            f"{_pad(dim, align)} — the tile is pure "
+                            f"zero-padding",
+                    hint=f"shrink {name} to <= {_pad(dim, align)}"))
+        # ZS-L006: hot decode GEMMs must run the revolving buffer
+        if key.M <= _DECODE_HOT_M and cfg.resolved_slots < 2:
+            diags.append(Diagnostic(
+                rule="ZS-L006", severity="warning", where=where,
+                message=f"decode-hot matmul (bucketed M={key.M}) runs the "
+                        f"serialized single-buffer schedule "
+                        f"(slots={cfg.resolved_slots})",
+                hint="use slots >= 2 on the decode path — it is "
+                     "bandwidth-bound and pays the full DMA latency "
+                     "per step otherwise"))
+
+    # ZS-L004/ZS-L005: out_dtype safety
+    if cfg.out_dtype is not None:
+        if key.dtype == "int8" or cfg.quant == "int8":
+            if cfg.out_dtype == "int8":
+                diags.append(Diagnostic(
+                    rule="ZS-L004", severity="error", where=where,
+                    message="int8 entry accumulates into an int8 output "
+                            "— the int32 accumulator contract is violated",
+                    hint=f"use out_dtype in {_INT8_SAFE_OUT} (the kernel "
+                         f"accumulates in exact int32 and dequantizes in "
+                         f"its epilogue)"))
+        else:
+            try:
+                out_bytes = _dtype_bytes(cfg.out_dtype)
+            except Exception:
+                out_bytes = None
+            if out_bytes is None or ("int" in cfg.out_dtype
+                                     and key.dtype not in ("int8",)):
+                diags.append(Diagnostic(
+                    rule="ZS-L005", severity="error", where=where,
+                    message=f"out_dtype {cfg.out_dtype!r} is not a safe "
+                            f"output type for {key.dtype} operands",
+                    hint="use a float out_dtype (or None for the operand "
+                         "dtype)"))
+            elif out_bytes < _dtype_bytes(key.dtype):
+                diags.append(Diagnostic(
+                    rule="ZS-L005", severity="warning", where=where,
+                    message=f"out_dtype {cfg.out_dtype!r} narrows the "
+                            f"{key.dtype} operand dtype — precision is "
+                            f"dropped at the kernel boundary",
+                    hint="narrow after the residual add, not in the "
+                         "kernel epilogue, unless this is intentional"))
+
+    # ZS-L007: entry quant mode must agree with the plan's
+    if cfg.quant is not None and cfg.quant != plan.quant:
+        diags.append(Diagnostic(
+            rule="ZS-L007", severity="warning", where=where,
+            message=f"entry quant={cfg.quant!r} disagrees with plan "
+                    f"quant={plan.quant!r}",
+            hint="stamp quant on the plan, not on individual entries"))
+
+    # layer-1 battery: schedule hazards, VMEM budget, ZONL bound
+    diags.extend(check_config(cfg, key, params=params))
+    return diags
+
+
+def _lint_policy(plan, policy) -> list[Diagnostic]:
+    """The (plan, fault policy) pair rules (``ZS-Fxxx``)."""
+    diags: list[Diagnostic] = []
+    where = f"RetryPolicy(max_retries={policy.max_retries})"
+    if policy.max_retries < 1:
+        diags.append(Diagnostic(
+            rule="ZS-F001", severity="warning", where=where,
+            message="max_retries < 1: every transient failure escalates "
+                    "straight to checkpoint-restart",
+            hint="allow at least one in-place retry"))
+    if (policy.backoff_factor < 1.0 or policy.backoff_base_s < 0.0
+            or policy.max_backoff_s < policy.backoff_base_s):
+        diags.append(Diagnostic(
+            rule="ZS-F002", severity="error",
+            where=f"RetryPolicy(backoff_base_s={policy.backoff_base_s}, "
+                  f"backoff_factor={policy.backoff_factor}, "
+                  f"max_backoff_s={policy.max_backoff_s})",
+            message="backoff schedule is ill-formed (factor < 1, "
+                    "negative base, or cap below base)",
+            hint="factor >= 1, base >= 0, max_backoff_s >= base"))
+    if (policy.restart_on_exhaustion and plan.default == "auto"
+            and len(plan.entries) == 0):
+        diags.append(Diagnostic(
+            rule="ZS-F003", severity="warning",
+            where="Plan(default='auto', entries=0)",
+            message="restart-on-exhaustion with an empty auto plan: every "
+                    "replica restart re-runs the tuner before serving",
+            hint="ship a traced plan (trace_model / --plan trace) so "
+                 "restarts resolve configs by lookup"))
+    return diags
+
+
+def lint_plan(plan, *, policy=None, params: TpuParams | None = None
+              ) -> Report:
+    """Validate a complete :class:`repro.plan.Plan` artifact.
+
+    Rules ``ZS-L001..L007`` per entry (see module source), the full
+    per-config hazard battery (``ZS-Sxxx``), and — when ``policy`` (a
+    :class:`repro.runtime.fault_tolerance.RetryPolicy`) is given — the
+    replica plan + fault policy pair rules (``ZS-Fxxx``).
+    """
+    params = params or TpuParams()
+    report = Report()
+    for key, cfg in sorted(plan.entries.items()):
+        report.extend(_lint_entry(key, cfg, plan, params))
+    if policy is not None:
+        report.extend(_lint_policy(plan, policy))
+    return report

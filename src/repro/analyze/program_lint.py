@@ -1,0 +1,193 @@
+"""Jaxpr program lint: prove a traced program stays on the fast path.
+
+The serving/training programs are jitted closures; whether every
+matmul actually routes through the zero-stall kernels — and whether
+the fused K-step decode block really syncs with the host only at its
+boundary — is visible in the jaxpr.  :func:`lint_program` walks the
+jaxpr of a ``trace_model``-style abstract eval and flags:
+
+* ``ZS-P001`` — a ``dot_general`` issued outside both a ``pallas_call``
+  and the sanctioned ``repro.kernels`` dispatch layer (the silent-jnp
+  class of bug PR 2 fixed by hand for attention).
+* ``ZS-P002`` — host callbacks / infeed / outfeed baked into the
+  program: a sync point inside the fused dispatch the block-decode
+  design exists to eliminate.
+* ``ZS-P003`` — on the quantized path, int8 weights dequantized into a
+  full-precision ``dot_general`` (W8A8 defeated by an upcast).
+
+Known-intentional sites (the SSD recurrence einsums, the O(1) decode
+attention against the cache, the tiny MoE router, the loss) are
+allowlisted by source location; the allowlist is an explicit,
+reviewable constant.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+
+from repro.analyze.diagnostics import Diagnostic, Report
+
+__all__ = ["lint_program", "DEFAULT_ALLOW"]
+
+#: Source-location substrings whose dot_generals are sanctioned.
+#: `repro/kernels/` is the dispatch layer itself (its jnp reference
+#: paths are deliberate, counted fallbacks, not silent ones); the
+#: model-side entries are the paper-intentional non-GEMM contractions.
+DEFAULT_ALLOW = (
+    "repro/kernels/",            # ops.* dispatch + its jnp references
+    "repro/models/ssm.py",       # SSD chunked recurrence (bandwidth-bound)
+    "in attention_decode",       # O(1) per-token attention vs the cache
+    "in _gqa_full",              # backend-dispatched attention: routes to
+                                 # ops.attention on pallas/interpret; its
+                                 # einsums ARE the explicit jnp backend
+    "repro/models/moe.py",       # router logits (tokens x n_experts, tiny)
+    "in cross_entropy",          # loss: one-hot contraction, not a GEMM
+)
+
+_CALLBACK_PRIMS = ("infeed", "outfeed")
+_INT_DTYPES = ("int8", "uint8", "int4", "uint4")
+
+
+def _jaxpr_of(target) -> Any:
+    """Accept a Jaxpr / ClosedJaxpr, or anything with a ``.jaxpr``."""
+    while hasattr(target, "jaxpr"):
+        target = target.jaxpr
+    return target
+
+
+def _source_of(eqn) -> str:
+    """Best-effort ``file:line in function`` for one equation."""
+    try:
+        from jax._src import source_info_util
+        frame = source_info_util.user_frame(eqn.source_info)
+        if frame is None:
+            return "<unknown>"
+        line = getattr(frame, "start_line", None) or getattr(
+            frame, "line_num", "?")
+        fn = getattr(frame, "function_name", "")
+        src = f"{frame.file_name}:{line}"
+        return f"{src} in {fn}" if fn else src
+    except Exception:
+        return "<unknown>"
+
+
+def _dot_flops(eqn) -> float:
+    """FLOPs of one dot_general from its operand avals."""
+    try:
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        lhs = eqn.invars[0].aval.shape
+        rhs = eqn.invars[1].aval.shape
+        batch = math.prod(lhs[d] for d in lb) if lb else 1
+        contract = math.prod(lhs[d] for d in lc) if lc else 1
+        lfree = math.prod(s for d, s in enumerate(lhs)
+                          if d not in set(lc) | set(lb))
+        rfree = math.prod(s for d, s in enumerate(rhs)
+                          if d not in set(rc) | set(rb))
+        return 2.0 * batch * contract * lfree * rfree
+    except Exception:
+        return float("inf")     # un-analyzable: never silently below cut
+
+
+def _sub_jaxprs(eqn):
+    """Child jaxprs of one equation (cond branches, scan body, pjit...)
+    — excluding pallas_call, whose param jaxpr is the kernel *body*
+    (running on the MXU is the point, not a fallback)."""
+    if eqn.primitive.name == "pallas_call":
+        return
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            if hasattr(v, "jaxpr") or hasattr(v, "eqns"):
+                yield _jaxpr_of(v)
+
+
+def _is_float(aval) -> bool:
+    try:
+        return jax.numpy.issubdtype(aval.dtype, jax.numpy.floating)
+    except Exception:
+        return False
+
+
+def _walk(jaxpr, diags: list[Diagnostic], *, allow: tuple[str, ...],
+          min_flops: float, quant: bool) -> None:
+    # taint: vars holding values dequantized from int8-class storage
+    # (convert_element_type int->float), propagated through the
+    # elementwise/layout glue a dequant typically runs through
+    tainted: set[Any] = set()
+    glue = {"mul", "add", "sub", "broadcast_in_dim", "transpose",
+            "reshape", "convert_element_type", "squeeze", "slice"}
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        src = _source_of(eqn)
+        allowed = any(a in src for a in allow)
+
+        if "callback" in name or name in _CALLBACK_PRIMS:
+            diags.append(Diagnostic(
+                rule="ZS-P002", severity="error", where=src,
+                message=f"host sync point baked into the program: "
+                        f"primitive {name!r}",
+                hint="hoist host interaction out of the jitted block — "
+                     "the fused K-step dispatch must sync only at its "
+                     "boundary"))
+
+        if name == "convert_element_type":
+            in_aval = eqn.invars[0].aval
+            if (str(getattr(in_aval, "dtype", "")) in _INT_DTYPES
+                    and _is_float(eqn.outvars[0].aval)):
+                tainted.add(eqn.outvars[0])
+        elif name in glue:
+            if any(v in tainted for v in eqn.invars
+                   if not isinstance(v, jax.extend.core.Literal)):
+                tainted.update(eqn.outvars)
+
+        if name == "dot_general":
+            flops = _dot_flops(eqn)
+            if not allowed and flops >= min_flops:
+                diags.append(Diagnostic(
+                    rule="ZS-P001", severity="error", where=src,
+                    message=f"matmul ({flops:.0f} flops) issued outside "
+                            f"the zero-stall kernels (top-level "
+                            f"dot_general)",
+                    hint="route it through repro.kernels.ops (matmul / "
+                         "grouped_matmul / attention), or allowlist the "
+                         "site in repro.analyze.program_lint"))
+            if quant and flops >= min_flops and any(
+                    v in tainted for v in eqn.invars
+                    if not isinstance(v, jax.extend.core.Literal)):
+                diags.append(Diagnostic(
+                    rule="ZS-P003", severity="warning", where=src,
+                    message="int8 weights are dequantized into a "
+                            "full-precision matmul on the quantized path",
+                    hint="route through ops.quantized_matmul (W8A8, "
+                         "int32 accumulate) instead of dequantizing "
+                         "ahead of the kernel"))
+
+        for sub in _sub_jaxprs(eqn):
+            _walk(sub, diags, allow=allow, min_flops=min_flops, quant=quant)
+
+
+def lint_program(target: Callable | Any, *args,
+                 allow: tuple[str, ...] = DEFAULT_ALLOW,
+                 min_flops: float = 0.0, quant: bool = False,
+                 **kwargs) -> Report:
+    """Lint a program for fallback matmuls, host syncs, fp32 upcasts.
+
+    ``target`` is either an already-traced ``Jaxpr``/``ClosedJaxpr``
+    or a callable, which is traced with ``jax.make_jaxpr`` over
+    ``*args``/``**kwargs`` (abstract values — ``ShapeDtypeStruct``
+    pytrees — work; no FLOPs run).  ``allow`` is the sanctioned-site
+    list (substring match against ``file:line in function``);
+    ``min_flops`` ignores glue contractions below the cut; ``quant``
+    additionally arms the dequant-upcast rule (``ZS-P003``).
+    """
+    if callable(target) and not hasattr(target, "eqns") \
+            and not hasattr(target, "jaxpr"):
+        target = jax.make_jaxpr(target)(*args, **kwargs)
+    jaxpr = _jaxpr_of(target)
+    diags: list[Diagnostic] = []
+    _walk(jaxpr, diags, allow=tuple(allow), min_flops=float(min_flops),
+          quant=quant)
+    return Report(diags)

@@ -106,7 +106,8 @@ class ModelConfig:
         elif self.family == "encdec":
             enc = self.encoder_layers * (qkv + mlp + norms)
             dec = self.decoder_layers * (2 * qkv + mlp + 3 * d)
-            return enc + dec + self.vocab_size * d * (1 if self.tie_embeddings else 2) + 2 * d
+            embeds = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+            return enc + dec + embeds + 2 * d
         else:
             per_layer = qkv + mlp + norms
             n_layers = self.n_layers

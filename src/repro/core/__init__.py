@@ -7,8 +7,6 @@
 - roofline:   3-term roofline from compiled XLA artifacts
 """
 
-from repro.core.loopnest import Loop, LoopNest, matmul_nest
-from repro.core.pipeline import DobuSchedule, Phase
 from repro.core.cyclemodel import (
     SNITCH_CONFIGS,
     MatmulResult,
@@ -17,6 +15,8 @@ from repro.core.cyclemodel import (
     TpuParams,
     TpuPipelineModel,
 )
+from repro.core.loopnest import Loop, LoopNest, matmul_nest
+from repro.core.pipeline import DobuSchedule, Phase
 from repro.core.roofline import (
     HW,
     CollectiveStats,

@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable
 
 import numpy as np
 
@@ -217,7 +216,8 @@ class SnitchClusterModel:
     # ------------------------------------------------------------------
     # Whole-problem execution (double-buffered over 32^3 L1 blocks)
     # ------------------------------------------------------------------
-    def matmul(self, M: int, N: int, K: int, *, include_dma: bool = True) -> MatmulResult:
+    def matmul(self, M: int, N: int, K: int, *,
+               include_dma: bool = True) -> MatmulResult:
         B = self.BLOCK
         mb, nb, kb = (math.ceil(M / B), math.ceil(N / B), math.ceil(K / B))
 
@@ -237,7 +237,8 @@ class SnitchClusterModel:
                 n_blk = min(B, N - bn * B)
                 for bk in range(kb):
                     k_blk = min(B, K - bk * B)
-                    rows = [m_blk // self.N_CORES + (1 if c < m_blk % self.N_CORES else 0)
+                    rows = [m_blk // self.N_CORES
+                            + (1 if c < m_blk % self.N_CORES else 0)
                             for c in range(self.N_CORES)]
                     per_core = [self._core_cycles(r, n_blk, k_blk) for r in rows]
                     blk_issue = max(c for c, _, _ in per_core)
@@ -258,7 +259,8 @@ class SnitchClusterModel:
                             # Shared banks: while the DMA is active the losing
                             # core requests stall (superbank mux).
                             overlap = min(blk_issue, dma_cyc)
-                            conflict = math.ceil(overlap * p_conf / max(1e-9, 1 - p_conf))
+                            conflict = math.ceil(
+                                overlap * p_conf / max(1e-9, 1 - p_conf))
                             blk_time = max(blk_issue + conflict, dma_cyc)
                     else:
                         blk_time = blk_issue
@@ -302,7 +304,8 @@ class SnitchClusterModel:
         return LoopNest(
             num_insts=self.UNROLL,
             loops=(
-                Loop(trips=max(1, m_rows * groups), start=0, end=self.UNROLL - 1, name="mn"),
+                Loop(trips=max(1, m_rows * groups), start=0,
+                     end=self.UNROLL - 1, name="mn"),
                 Loop(trips=max(1, k), start=0, end=self.UNROLL - 1, name="k"),
             ),
         )

@@ -27,7 +27,7 @@ costs zero issue slots.  This module provides:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Sequence
+from typing import Iterator
 
 __all__ = ["Loop", "LoopNest", "matmul_nest"]
 

@@ -13,11 +13,13 @@ wrappers.
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.zero_stall_matmul import zero_stall_matmul
+from repro.kernels.flash_attention import flash_attention
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
 from repro.kernels.quantized_matmul import (
-    quantized_grouped_zero_stall_matmul, quantized_zero_stall_matmul)
-from repro.kernels.flash_attention import flash_attention
+    quantized_grouped_zero_stall_matmul,
+    quantized_zero_stall_matmul,
+)
+from repro.kernels.zero_stall_matmul import zero_stall_matmul
 
 __all__ = ["ops", "ref", "zero_stall_matmul", "grouped_zero_stall_matmul",
            "quantized_zero_stall_matmul",

@@ -30,7 +30,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
@@ -89,8 +89,8 @@ def _kernel(ql_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(ikv == nkv - 1)
     def _():
         # rows with no valid kv position (fully masked) produce l == 0
-        l = l_scr[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
+        den = l_scr[...]
+        safe = jnp.where(den == 0.0, 1.0, den)
         o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
 
 

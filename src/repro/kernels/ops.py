@@ -41,6 +41,7 @@ equivalent.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import warnings
 
@@ -51,17 +52,20 @@ import numpy as np
 from repro import obs as _obs
 from repro import plan as _plan
 from repro.kernels import ref as _ref
-from repro.kernels.zero_stall_matmul import zero_stall_matmul
+from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
 from repro.kernels.quantized_matmul import (
-    quantized_grouped_zero_stall_matmul, quantized_zero_stall_matmul)
-from repro.kernels.flash_attention import flash_attention as _flash
-from repro.plan import KernelConfig, Plan, UNSET as _UNSET
+    quantized_grouped_zero_stall_matmul,
+    quantized_zero_stall_matmul,
+)
+from repro.kernels.zero_stall_matmul import zero_stall_matmul
+from repro.plan import UNSET as _UNSET, KernelConfig, Plan
 from repro.quant.tensor import QTensor, quantize_rows
 
 __all__ = ["matmul", "grouped_matmul", "attention", "host_tiled_matmul",
            "quantized_matmul", "quantized_grouped_matmul", "resolve_impl",
-           "reset_fallback_warnings", "fallback_counts"]
+           "reset_fallback_warnings", "fallback_counts", "FallbackError",
+           "strict_fallbacks"]
 
 
 def _record(op: str, *, M, N, K, dtype, backend, config=None, groups=1,
@@ -336,6 +340,35 @@ def quantized_grouped_matmul(x: jax.Array, qw: QTensor, *, config=None,
 
 _FALLBACK_WARNED: set[str] = set()
 _FALLBACK_PREFIX = "ops.fallback."
+_STRICT_FALLBACKS = False
+_STRICT_ALLOW: tuple[str, ...] = ()
+
+
+class FallbackError(RuntimeError):
+    """An ops.* entry point would leave the zero-stall Pallas path.
+
+    Raised instead of the warn-once RuntimeWarning when strict mode is
+    on (``strict_fallbacks()`` / ``attention(..., strict=True)``), so
+    parity tests and production plans can *prove* no call site routes
+    to the jnp reference silently."""
+
+
+@contextlib.contextmanager
+def strict_fallbacks(enable: bool = True, *,
+                     allow: tuple[str, ...] = ()):
+    """Treat any kernel fallback as an error inside this context.
+
+    ``allow`` lists fallback keys (see ``fallback_counts``) that stay
+    on warn-once behavior — the explicit allowlist for fallbacks that
+    are understood and accepted (they are still counted).
+    """
+    global _STRICT_FALLBACKS, _STRICT_ALLOW
+    prev = (_STRICT_FALLBACKS, _STRICT_ALLOW)
+    _STRICT_FALLBACKS, _STRICT_ALLOW = bool(enable), tuple(allow)
+    try:
+        yield
+    finally:
+        _STRICT_FALLBACKS, _STRICT_ALLOW = prev
 
 
 def reset_fallback_warnings() -> None:
@@ -365,12 +398,22 @@ def fallback_counts() -> dict[str, int]:
     return {k[len(pre):]: v for k, v in _obs.counters(pre).items()}
 
 
-def _warn_fallback_once(key: str, reason: str) -> None:
+def _warn_fallback_once(key: str, reason: str,
+                        strict: bool | None = None) -> None:
     """The Pallas path is the product; a silent jnp fallback is a perf
     cliff (serving batches are exactly the ragged shapes that used to
     take it).  Any fallback still taken is announced once per key and
-    counted every time (``fallback_counts``)."""
+    counted every time (``fallback_counts``); under strict mode
+    (per-call ``strict=True`` or a ``strict_fallbacks()`` context) it
+    raises :class:`FallbackError` unless the key is allowlisted."""
     _obs.counter_inc(_FALLBACK_PREFIX + key)
+    if strict is None:
+        strict = _STRICT_FALLBACKS
+    if strict and key not in _STRICT_ALLOW:
+        raise FallbackError(
+            f"ops fallback {key!r}: {reason}; the zero-stall Pallas path "
+            f"is NOT used (strict mode — allowlist the key via "
+            f"strict_fallbacks(allow=...) if this is intentional)")
     if key not in _FALLBACK_WARNED:
         _FALLBACK_WARNED.add(key)
         warnings.warn(f"ops.attention: falling back to the jnp reference "
@@ -382,6 +425,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
               causal: bool = True, scale: float | None = None,
               q_lens: jax.Array | None = None,
               kv_lens: jax.Array | None = None,
+              strict: bool | None = None,
               impl=_UNSET, bq=_UNSET, bkv=_UNSET,
               tiling=_UNSET) -> jax.Array:
     """(B,H,S,D) flash attention; ref oracle for jnp path.
@@ -393,7 +437,9 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
     Non-tile-multiple sequence lengths are zero-padded up to the tile
     and masked via the length operands — padding contributes exact
     zeros, so ragged serving shapes stay on the Pallas kernel instead
-    of silently routing to the reference path.
+    of silently routing to the reference path.  ``strict=True`` turns
+    any remaining fallback into a :class:`FallbackError` (default: the
+    ambient ``strict_fallbacks()`` mode).
     """
     config = _legacy_config("attention", config, {
         "impl": impl, "bq": bq, "bkv": bkv, "tiling": tiling})
@@ -410,7 +456,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
         # historical ref is end-aligned for Sq != Skv — don't guess.
         _warn_fallback_once("attention_causal_unaligned",
                             "causal attention with Sq != Skv and no "
-                            "length operands has ambiguous alignment")
+                            "length operands has ambiguous alignment",
+                            strict=strict)
         _record("attention", M=Sq, N=D, K=Skv, dtype=q.dtype,
                 backend="jnp", batch_heads=B * H)
         return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)

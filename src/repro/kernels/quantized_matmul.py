@@ -33,7 +33,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 from repro.kernels.zero_stall_matmul import resolve_slots
@@ -155,13 +155,23 @@ def quantized_zero_stall_matmul(
     gm, gn, gk = M // bm, N // bn, K // bk
     grid = (gm, gn, gk) if grid_order == "ijk" else (gn, gm, gk)
     if grid_order == "ijk":
-        sa_map = lambda i, j, k: (i, 0)
-        sb_map = lambda i, j, k: (0, j)
-        out_map = lambda i, j, k: (i, j)
+        def sa_map(i, j, k):
+            return (i, 0)
+
+        def sb_map(i, j, k):
+            return (0, j)
+
+        def out_map(i, j, k):
+            return (i, j)
     else:
-        sa_map = lambda j, i, k: (i, 0)
-        sb_map = lambda j, i, k: (0, j)
-        out_map = lambda j, i, k: (i, j)
+        def sa_map(j, i, k):
+            return (i, 0)
+
+        def sb_map(j, i, k):
+            return (0, j)
+
+        def out_map(j, i, k):
+            return (i, j)
 
     kernel = functools.partial(
         _kernel, bm=bm, bn=bn, bk=bk, slots=slots, out_dtype=out_dtype,

@@ -51,7 +51,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 # canonical (variant, slots) rules — shared with KernelConfig validation

@@ -21,7 +21,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -29,8 +28,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config, input_specs, list_configs, RunConfig
-from repro.configs.base import ShapeSpec, token_count
+from repro.configs import SHAPES, RunConfig, get_config, input_specs, list_configs
+from repro.configs.base import token_count
 from repro.core.roofline import HW, analyze_compiled, model_flops
 from repro.launch.mesh import make_production_mesh
 from repro.models import Ctx, build_model
@@ -98,10 +97,10 @@ def make_train_step(model, ctx, run: RunConfig):
                 batch)
 
             def mb_step(acc, mb):
-                l, g = jax.value_and_grad(
+                loss_mb, g = jax.value_and_grad(
                     lambda p: model.loss(p, mb, ctx))(params)
                 acc_l, acc_g = acc
-                return (acc_l + l / mbs,
+                return (acc_l + loss_mb / mbs,
                         jax.tree.map(lambda a, b: a + b / mbs, acc_g, g)), None
 
             zero = (jnp.zeros((), jnp.float32),
@@ -116,7 +115,8 @@ def make_train_step(model, ctx, run: RunConfig):
 def build_cell(arch: str, shape_name: str, mesh, *, run: RunConfig | None = None):
     """Returns (jitted_fn, arg_shape_structs, model_flops_useful)."""
     cfg = get_config(arch)
-    import os as _os2, dataclasses as _dc
+    import dataclasses as _dc
+    import os as _os2
     if _os2.environ.get("REPRO_REMAT"):
         cfg = _dc.replace(cfg, remat=_os2.environ["REPRO_REMAT"])
     shape = SHAPES[shape_name]

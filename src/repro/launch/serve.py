@@ -64,6 +64,7 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
                 steps_per_dispatch: int = 1, temperature: float = 0.0,
                 top_k: int = 0, top_p: float = 1.0,
                 plan=None, plan_out: str | None = None,
+                validate_plan: bool = False,
                 step_timeout_s: float | None = None) -> dict:
     """Run a synthetic request batch through the serving engine.
 
@@ -71,7 +72,10 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
     :class:`~repro.serve.ServeEngine` (a :class:`repro.plan.Plan`, a
     path to a saved plan JSON, or ``"trace"`` to resolve every kernel
     config ahead of time); ``plan_out`` saves the engine's active plan
-    afterwards — the execution schedule as a shippable artifact.
+    afterwards — the execution schedule as a shippable artifact;
+    ``validate_plan`` runs the static analyzer over the active plan at
+    engine construction (``ServeEngine(validate=True)``), rejecting a
+    hazardous shipped plan before it serves.
     ``steps_per_dispatch`` fuses K decode+sample iterations into one
     jitted dispatch (one host sync per block); ``temperature`` /
     ``top_k`` / ``top_p`` select on-device sampling (0/0/1.0 = exact
@@ -98,7 +102,8 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
     engine = ServeEngine(model, params, ctx, num_slots=slots,
                          max_len=max_len, cache_dtype=dtype,
                          steps_per_dispatch=steps_per_dispatch, seed=seed,
-                         cache_kwargs=cache_kwargs, plan=plan)
+                         cache_kwargs=cache_kwargs, plan=plan,
+                         validate=validate_plan)
     reqs = _make_requests(cfg, key, batch, prompt_len, gen_len, mixed,
                           temperature=temperature, top_k=top_k, top_p=top_p)
     results = engine.run(reqs, step_timeout_s=step_timeout_s)
@@ -153,6 +158,10 @@ def main():
                          "time, or a path to a saved plan JSON")
     ap.add_argument("--plan-out", default=None,
                     help="save the engine's active execution plan here")
+    ap.add_argument("--validate-plan", action="store_true",
+                    help="statically verify the active plan at load time "
+                         "(repro.analyze.lint_plan); error diagnostics "
+                         "abort before serving")
     ap.add_argument("--step-timeout", type=float, default=None,
                     help="fail if any engine step exceeds this many seconds")
     ap.add_argument("--metrics", action="store_true",
@@ -180,6 +189,7 @@ def main():
                           temperature=args.temperature, top_k=args.top_k,
                           top_p=args.top_p,
                           plan=args.plan, plan_out=args.plan_out,
+                          validate_plan=args.validate_plan,
                           step_timeout_s=args.step_timeout)
         s = out["stats"]
         print(f"generated shape: {out['generated'].shape}")

@@ -23,13 +23,15 @@ import jax.numpy as jnp
 from repro.checkpoint import Checkpointer
 from repro.configs import RunConfig, get_config
 from repro.data import make_pipeline
+from repro.launch.mesh import make_host_mesh
 from repro.models import Ctx, build_model
 from repro.optim import adamw_update, init_opt_state
 from repro.optim.compression import apply_error_feedback, init_residuals
-from repro.launch.mesh import make_host_mesh
-from repro.runtime import sharding as shr
-from repro.runtime.fault_tolerance import (Heartbeat, ResilientExecutor,
-                                           StragglerDetector)
+from repro.runtime.fault_tolerance import (
+    Heartbeat,
+    ResilientExecutor,
+    StragglerDetector,
+)
 
 __all__ = ["train_loop", "make_train_step"]
 
@@ -43,10 +45,10 @@ def make_train_step(model, ctx: Ctx, run: RunConfig):
                 batch)
 
             def mb_step(acc, one):
-                l, g = jax.value_and_grad(
+                loss_mb, g = jax.value_and_grad(
                     lambda p: model.loss(p, one, ctx))(params)
                 al, ag = acc
-                return (al + l / mb,
+                return (al + loss_mb / mb,
                         jax.tree.map(lambda a, b: a + b / mb, ag, g)), None
 
             zero = (jnp.zeros((), jnp.float32),

@@ -9,7 +9,6 @@ dicts (pytrees); init fns return params, apply fns are pure.
 from __future__ import annotations
 
 import dataclasses
-import math
 import warnings
 from typing import Any
 
@@ -256,9 +255,12 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
     d, hd = cfg.d_model, cfg.resolved_head_dim
     ks = jax.random.split(key, 4)
     return {
-        "wq": init_linear(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
-        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
-        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias,
+                          dtype=dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd,
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd,
+                          bias=cfg.qkv_bias, dtype=dtype),
         "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype=dtype),
     }
 
@@ -445,7 +447,7 @@ def _mha_chunked(q, k, v, *, causal: bool,
         a0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
 
         def kv_step(carry, kj):
-            m, l, acc = carry
+            m, den, acc = carry
             k_blk = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk,
                                                  kv_chunk, 1)
             v_blk = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk,
@@ -459,15 +461,15 @@ def _mha_chunked(q, k, v, *, causal: bool,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
             p = jnp.exp(s - m_new)
             alpha = jnp.exp(m - m_new)
-            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            den_new = alpha * den + jnp.sum(p, axis=-1, keepdims=True)
             acc_new = acc * alpha + jnp.einsum(
                 "bhqt,bthd->bhqd", p.astype(v.dtype), v_blk,
                 preferred_element_type=jnp.float32)
-            return (m_new, l_new, acc_new), None
+            return (m_new, den_new, acc_new), None
 
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
-                                      jnp.arange(nkv))
-        out = acc / jnp.where(l == 0.0, 1.0, l)
+        (m, den, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                        jnp.arange(nkv))
+        out = acc / jnp.where(den == 0.0, 1.0, den)
         return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,qc,H,D)
 
     def outer(_, qi):
@@ -505,7 +507,7 @@ def _gqa_chunked(q, k, v, *, causal: bool,
         a0 = jnp.zeros((B, KV, rep, q_chunk, D), jnp.float32)
 
         def kv_step(carry, kj):
-            m, l, acc = carry
+            m, den, acc = carry
             k_blk = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk,
                                                  kv_chunk, 1)
             v_blk = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk,
@@ -519,15 +521,15 @@ def _gqa_chunked(q, k, v, *, causal: bool,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
             p = jnp.exp(s - m_new)
             alpha = jnp.exp(m - m_new)
-            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            den_new = alpha * den + jnp.sum(p, axis=-1, keepdims=True)
             acc_new = acc * alpha + jnp.einsum(
                 "bkrqt,btkd->bkrqd", p.astype(v.dtype), v_blk,
                 preferred_element_type=jnp.float32)
-            return (m_new, l_new, acc_new), None
+            return (m_new, den_new, acc_new), None
 
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
-                                      jnp.arange(nkv))
-        out = acc / jnp.where(l == 0.0, 1.0, l)
+        (m, den, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                        jnp.arange(nkv))
+        out = acc / jnp.where(den == 0.0, 1.0, den)
         # cast before stacking: the outer scan materializes these blocks
         return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
 
@@ -556,7 +558,8 @@ def _merged_head_plan(n_heads: int, kv_heads: int, ctx: Ctx) -> int | None:
     Multi-pod meshes always keep the grouped form (repeat-backward
     resharding pathology, §Perf It-2c).
     """
-    if ctx.mesh is None or "model" not in ctx.mesh.axis_names             or "pod" in ctx.mesh.axis_names:
+    if (ctx.mesh is None or "model" not in ctx.mesh.axis_names
+            or "pod" in ctx.mesh.axis_names):
         return None
     tp = ctx.mesh.devices.shape[ctx.mesh.axis_names.index("model")]
     if n_heads % tp == 0 or kv_heads % tp == 0:
@@ -759,11 +762,20 @@ def embed(p: Params, tokens: jax.Array, ctx: Ctx) -> jax.Array:
 
 
 def unembed(p: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
+    """(B, S, d) -> (B, S, V) fp32 logits through the zero-stall engine.
+
+    The LM head is the largest single GEMM of every family (d_model x
+    vocab); it routes through ``ops.matmul`` like every other linear —
+    the historical ``jnp.einsum`` here was exactly the silent-fallback
+    class ``repro.analyze.lint_program`` exists to flag."""
     if "lm_head" in p:
         w = p["lm_head"].astype(ctx.dtype)
     else:
         w = p["tokens"].astype(ctx.dtype).T
-    return jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    B, S, d = x.shape
+    logits = ops.matmul(x.reshape(B * S, d), w, config=ctx.plan,
+                        out_dtype=jnp.float32)
+    return logits.reshape(B, S, w.shape[-1])
 
 
 def gather_last(x: jax.Array, lengths: jax.Array) -> jax.Array:

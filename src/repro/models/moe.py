@@ -19,7 +19,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
-from repro.models import layers as L
 from repro.models.layers import Ctx, Params
 from repro.quant.tensor import QTensor
 

@@ -11,8 +11,6 @@ Validated against the sequential oracle `kernels.ref.ssd_scan_ref`.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -160,7 +158,8 @@ def _head_constraint(t: jax.Array, ctx: Ctx) -> jax.Array:
     collective-permutes on every scan step (measured 40k permutes /
     21 s collective term; §Perf-1).  Handles 3D (a_log) and 4D (x,b,c).
     """
-    if ctx.mesh is None or t.ndim not in (3, 4)             or "model" not in ctx.mesh.axis_names:
+    if (ctx.mesh is None or t.ndim not in (3, 4)
+            or "model" not in ctx.mesh.axis_names):
         return t
     from jax.sharding import NamedSharding, PartitionSpec as P
     sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))

@@ -9,7 +9,7 @@ HLO size and compile time are O(1) in depth — required to lower the
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -249,8 +249,10 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
 
     pad = max_len - S
     cache = {
-        "k": jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(ctx.dtype),
-        "v": jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(ctx.dtype),
+        "k": jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0),
+                               (0, 0))).astype(ctx.dtype),
+        "v": jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0),
+                               (0, 0))).astype(ctx.dtype),
         "pos": pos,
     }
     return logits, cache

@@ -19,13 +19,29 @@ See ARCHITECTURE.md "Observability" for the dataflow and the
 ``BENCH_*.json`` snapshot schema built on top of this module.
 """
 
-from repro.obs.kernel_watch import (OpRecord, measure_recorded,
-                                    record_dispatch, recorded_ops,
-                                    reset_records, utilization_table)
+from repro.obs.kernel_watch import (
+    OpRecord,
+    measure_recorded,
+    record_dispatch,
+    recorded_ops,
+    reset_records,
+    utilization_table,
+)
 from repro.obs.metrics import percentile, summarize
-from repro.obs.trace import (JsonlSink, ListSink, Span, capture,
-                             counter_inc, counters, disable, enable,
-                             enabled, event, reset_counters, span)
+from repro.obs.trace import (
+    JsonlSink,
+    ListSink,
+    Span,
+    capture,
+    counter_inc,
+    counters,
+    disable,
+    enable,
+    enabled,
+    event,
+    reset_counters,
+    span,
+)
 
 __all__ = [
     # trace

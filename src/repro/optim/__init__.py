@@ -7,7 +7,15 @@ gradient codecs for bandwidth-bound multi-pod all-reduces (the
 communication analogue of :mod:`repro.quant`'s compute-side int8).
 """
 
-from repro.optim.adamw import OptState, adamw_update, init_opt_state, make_schedule, global_norm, clip_by_global_norm
 from repro.optim import compression
+from repro.optim.adamw import (
+    OptState,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    make_schedule,
+)
 
-__all__ = ["OptState", "adamw_update", "init_opt_state", "make_schedule", "global_norm", "clip_by_global_norm", "compression"]
+__all__ = ["OptState", "adamw_update", "init_opt_state", "make_schedule",
+           "global_norm", "clip_by_global_norm", "compression"]

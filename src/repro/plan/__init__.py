@@ -37,8 +37,7 @@ serving decode loop never touches the tuner:
 
 from __future__ import annotations
 
-from repro.plan.config import (BACKENDS, KernelConfig, OpKey, UNSET,
-                               dtype_name)
+from repro.plan.config import BACKENDS, UNSET, KernelConfig, OpKey, dtype_name
 from repro.plan.plan import Plan, as_plan, config_backend, resolve
 from repro.plan.trace import trace_model
 

@@ -45,8 +45,14 @@ See ``docs/ARCHITECTURE.md`` (Quantization) for the dataflow and
 numbers.
 """
 
-from repro.quant.tensor import (FP8_MAX, INT8_MAX, QTensor, quantize,
-                                quantize_rows, quantize_tree)
+from repro.quant.tensor import (
+    FP8_MAX,
+    INT8_MAX,
+    QTensor,
+    quantize,
+    quantize_rows,
+    quantize_tree,
+)
 
 __all__ = ["QTensor", "quantize", "quantize_rows", "quantize_tree",
            "INT8_MAX", "FP8_MAX"]

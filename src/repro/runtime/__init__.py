@@ -10,7 +10,15 @@ checkpoints of :mod:`repro.checkpoint`).
 """
 
 from repro.runtime import sharding
-from repro.runtime.fault_tolerance import ResilientExecutor, StragglerDetector, Heartbeat, elastic_restore, TransientError
+from repro.runtime.fault_tolerance import (
+    Heartbeat,
+    ResilientExecutor,
+    StragglerDetector,
+    TransientError,
+    elastic_restore,
+)
 from repro.runtime.pipeline_parallel import pp_loss_fn, split_layers_for_stages
 
-__all__ = ["sharding", "ResilientExecutor", "StragglerDetector", "Heartbeat", "elastic_restore", "TransientError", "pp_loss_fn", "split_layers_for_stages"]
+__all__ = ["sharding", "ResilientExecutor", "StragglerDetector", "Heartbeat",
+           "elastic_restore", "TransientError", "pp_loss_fn",
+           "split_layers_for_stages"]

@@ -32,11 +32,69 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.runtime import sharding as shard_rules
 
 __all__ = ["ResilientExecutor", "StragglerDetector", "Heartbeat",
-           "elastic_restore", "TransientError"]
+           "RetryPolicy", "elastic_restore", "TransientError"]
 
 
 class TransientError(RuntimeError):
     """Failure class that is retried in place (preemption, link flap)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Typed retry/backoff policy of a :class:`ResilientExecutor`.
+
+    Exists as a first-class artifact so a serving replica's (plan,
+    fault policy) pair can be checked statically —
+    ``repro.analyze.lint_plan(plan, policy=...)`` — before the replica
+    takes traffic: an ill-formed backoff schedule or a restart policy
+    over an empty auto plan (every restart re-tunes) is caught at
+    deploy time, not mid-incident.
+
+    ``max_retries`` in-place retries per step; between attempt ``i``
+    and ``i+1`` the executor sleeps ``backoff_base_s *
+    backoff_factor**(i-1)`` seconds, capped at ``max_backoff_s`` (the
+    default base of 0 keeps historical immediate-retry behavior).
+    When retries are exhausted, ``restart_on_exhaustion`` selects
+    checkpoint-restart via the executor's ``restore_fn`` (else the
+    failure propagates).
+    """
+
+    max_retries: int = 3
+    backoff_base_s: float = 0.0
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 30.0
+    restart_on_exhaustion: bool = True
+
+    def validate(self) -> None:
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if self.backoff_base_s < 0.0:
+            raise ValueError(f"backoff_base_s must be >= 0, "
+                             f"got {self.backoff_base_s}")
+        if self.backoff_factor < 1.0:
+            raise ValueError(f"backoff_factor must be >= 1, "
+                             f"got {self.backoff_factor}")
+        if self.max_backoff_s < self.backoff_base_s:
+            raise ValueError(
+                f"max_backoff_s ({self.max_backoff_s}) must be >= "
+                f"backoff_base_s ({self.backoff_base_s})")
+
+    def delay_s(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (1-based)."""
+        if self.backoff_base_s <= 0.0:
+            return 0.0
+        return min(self.backoff_base_s
+                   * self.backoff_factor ** max(attempt - 1, 0),
+                   self.max_backoff_s)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "RetryPolicy":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
 
 class Heartbeat:
@@ -100,13 +158,18 @@ class ResilientExecutor:
     """Run steps with retry + checkpoint-restart semantics."""
 
     def __init__(self, step_fn: Callable, *, max_retries: int = 3,
+                 policy: RetryPolicy | None = None,
                  restore_fn: Callable[[], Any] | None = None,
                  heartbeat: Heartbeat | None = None,
                  detector: StragglerDetector | None = None,
                  host_id: int = 0,
                  failure_hook: Callable[[int], None] | None = None):
+        if policy is None:
+            policy = RetryPolicy(max_retries=max_retries)
+        policy.validate()
+        self.policy = policy
         self.step_fn = step_fn
-        self.max_retries = max_retries
+        self.max_retries = policy.max_retries
         self.restore_fn = restore_fn
         self.heartbeat = heartbeat
         self.detector = detector
@@ -134,8 +197,12 @@ class ResilientExecutor:
                 attempt += 1
                 self.retries_total += 1
                 if attempt <= self.max_retries:
+                    delay = self.policy.delay_s(attempt)
+                    if delay > 0.0:
+                        time.sleep(delay)
                     continue
-                if self.restore_fn is None:
+                if self.restore_fn is None or \
+                        not self.policy.restart_on_exhaustion:
                     raise
                 state = self.restore_fn()   # checkpoint restart
                 self.restarts_total += 1
@@ -161,7 +228,6 @@ def elastic_restore(ckpt: Checkpointer, template_state: Any, new_mesh,
         shardings[params_path] = shardings_for(template_state[params_path])
         flat_sh = []
         flat, treedef = jax.tree_util.tree_flatten_with_path(template_state)
-        sh_map = {shard_rules.path_str(p): None for p, _ in flat}
         for p, leaf in flat:
             ps = shard_rules.path_str(p)
             if ps.startswith(params_path):

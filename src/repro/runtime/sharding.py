@@ -198,4 +198,4 @@ def cache_shardings(mesh: Mesh, cache: Any, *, seq_axis_threshold: int = 65536
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     return jax.tree_util.tree_unflatten(
-        treedef, [one(p, l) for p, l in flat])
+        treedef, [one(p, leaf) for p, leaf in flat])

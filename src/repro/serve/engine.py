@@ -134,6 +134,11 @@ class ServeEngine:
         traced (or otherwise complete) plan, admission and the decode
         loop never touch the tuner.  The active plan is ``self.plan``
         (``Plan.save`` makes it a shippable artifact).
+    validate : run :func:`repro.analyze.lint_plan` over the active
+        plan at load time — error-level diagnostics (slot-reuse
+        hazards, int8-in-int8 accumulation, over-budget tiles) raise
+        ``ValueError`` before any request is admitted; warnings are
+        reported as a ``RuntimeWarning``.
     """
 
     def __init__(self, model, params, ctx, *, num_slots: int = 4,
@@ -142,7 +147,7 @@ class ServeEngine:
                  bucket_sizes: Sequence[int] | None = None,
                  eos_id: int | None = None, seed: int = 0,
                  cache_kwargs: dict | None = None,
-                 plan=None):
+                 plan=None, validate: bool = False):
         self.model = model
         self.params = params
         self.num_slots = int(num_slots)
@@ -169,6 +174,8 @@ class ServeEngine:
             ctx = ctx.with_plan(plan)
         self.ctx = ctx
         self.plan = ctx.plan
+        if validate:
+            self._validate_plan()
 
         # probe each cache leaf's batch axis once (family-agnostic
         # slots); eval_shape gets the shapes without allocating two
@@ -301,6 +308,30 @@ class ServeEngine:
                            cache_dtype=cache_dtype,
                            cache_kwargs=cache_kwargs,
                            params=self.params)
+
+    # ------------------------------------------------------------------
+    def _validate_plan(self) -> None:
+        """Load-time plan verification (``validate=True``): run the
+        static analyzer (:func:`repro.analyze.lint_plan`) over the
+        active plan — a shipped plan with a slot-reuse hazard, an
+        int8-in-int8 entry or an over-budget tile is rejected before
+        the first request is admitted; warnings are surfaced but do
+        not block."""
+        from repro.analyze import lint_plan
+        from repro.plan import Plan
+        if not isinstance(self.plan, Plan):
+            return
+        report = lint_plan(self.plan)
+        if report.errors:
+            raise ValueError(
+                "ServeEngine(validate=True): the plan failed static "
+                "analysis:\n" + "\n".join(d.format() for d in report.errors))
+        if report.warnings:
+            import warnings as _warnings
+            _warnings.warn(
+                "ServeEngine: plan analysis warnings:\n"
+                + "\n".join(d.format() for d in report.warnings),
+                RuntimeWarning, stacklevel=3)
 
     # ------------------------------------------------------------------
     def submit(self, request: Request) -> None:

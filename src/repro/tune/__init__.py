@@ -40,8 +40,13 @@ from __future__ import annotations
 from repro.tune.cache import TuneCache, default_cache_path, shape_bucket
 from repro.tune.oracle import AnalyticOracle, CostOracle, MeasuredOracle
 from repro.tune.search import SearchResult, exhaustive_search, hill_climb, search
-from repro.tune.space import (Candidate, DEFAULT_SPACE, INTERPRET_SPACE,
-                              KernelSpace, Problem)
+from repro.tune.space import (
+    DEFAULT_SPACE,
+    INTERPRET_SPACE,
+    Candidate,
+    KernelSpace,
+    Problem,
+)
 
 __all__ = [
     "Candidate", "Problem", "KernelSpace", "DEFAULT_SPACE", "INTERPRET_SPACE",

@@ -111,12 +111,13 @@ class MeasuredOracle:
     def _run(self, c: Candidate, p: Problem):
         import jax
         import jax.numpy as jnp
-        from repro.kernels.zero_stall_matmul import zero_stall_matmul
         from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
+        from repro.kernels.zero_stall_matmul import zero_stall_matmul
 
         dtype = {1: jnp.int8, 2: jnp.bfloat16, 4: jnp.float32}.get(
             p.dtype_bytes, jnp.bfloat16)
-        pad = lambda d, t: -(-d // t) * t
+        def pad(d, t):
+            return -(-d // t) * t
         key = jax.random.PRNGKey(0)
         if p.op == "grouped_matmul":
             a = jnp.zeros((p.groups, pad(p.M, c.bm), pad(p.K, c.bk)), dtype)

@@ -152,7 +152,8 @@ class KernelSpace:
             return False
         if any(t % self.align for t in (c.bm, c.bn, c.bk)):
             return False
-        pad = lambda d: max(self.align, math.ceil(d / self.align) * self.align)
+        def pad(d):
+            return max(self.align, math.ceil(d / self.align) * self.align)
         if c.bm > pad(problem.M) or c.bn > pad(problem.N) or c.bk > pad(problem.K):
             return False               # tile would be pure zero-padding
         return self.fits_vmem(c, problem.dtype_bytes)

@@ -1,0 +1,370 @@
+"""repro.analyze: the static zero-stall verifier.
+
+Each analyzer layer must (a) pass the repo's own artifacts clean and
+(b) reject a purpose-built violating input with a *stable* rule id:
+
+  * schedule layer  — a mutated slots=1 overlapping config (the
+    slot-reuse hazard `KernelConfig` validation refuses to construct)
+    -> ZS-S001;
+  * plan layer      — an int8 entry accumulating into int8 -> ZS-L004;
+  * program layer   — a model monkeypatched back onto a raw jnp
+    matmul -> ZS-P001.
+
+Property-based sweeps live in test_analyze_properties.py (hypothesis).
+"""
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analyze import (RULES, SEVERITIES, Diagnostic, Report,
+                           bank_access_pattern, check_config, lint_plan,
+                           lint_program, simulate_schedule)
+from repro.configs import get_config
+from repro.core.pipeline import RevolvingSchedule
+from repro.models import Ctx, build_model
+from repro.models import layers as L
+from repro.plan import KernelConfig, OpKey, Plan
+from repro.runtime.fault_tolerance import RetryPolicy
+from repro.tune.space import INTERPRET_SPACE, Problem
+
+
+# ----------------------------------------------------------------------
+# diagnostics plumbing
+# ----------------------------------------------------------------------
+def test_diagnostic_severity_validated():
+    with pytest.raises(ValueError, match="severity"):
+        Diagnostic(rule="ZS-S001", severity="fatal", where="x", message="m")
+
+
+def test_report_accounting_and_gates():
+    r = Report([
+        Diagnostic("ZS-S001", "error", "a", "m1"),
+        Diagnostic("ZS-L003", "warning", "b", "m2"),
+        Diagnostic("ZS-S002", "info", "c", "m3"),
+        Diagnostic("ZS-S001", "error", "d", "m4"),
+    ])
+    assert len(r) == 4
+    assert r.rule_counts() == {"ZS-L003": 1, "ZS-S001": 2, "ZS-S002": 1}
+    assert r.worst() == "error"
+    assert not r.ok("error") and not r.ok("warning")
+    warn_only = Report(r.warnings)
+    assert warn_only.ok("error") and not warn_only.ok("warning")
+    assert Report().ok("warning") and Report().worst() is None
+    js = r.to_json()
+    assert js["worst"] == "error" and len(js["diagnostics"]) == 4
+    assert "ZS-S001" in r.format()
+
+
+def test_rule_catalog_covers_emitted_rules():
+    """Every rule id any layer can emit is in the stable catalog."""
+    for rule, (sev, layer, prop) in RULES.items():
+        assert sev in SEVERITIES and layer and prop
+
+
+# ----------------------------------------------------------------------
+# layer 1: schedule hazard checker
+# ----------------------------------------------------------------------
+def test_simulate_revolving_schedule_clean():
+    for slots in (2, 3, 4):
+        for steps in (1, 2, slots, 2 * slots + 3, 64):
+            diags = simulate_schedule(steps, slots, overlap=True)
+            assert diags == [], (slots, steps, [d.format() for d in diags])
+
+
+def test_simulate_serialized_schedule_safe_but_flagged():
+    diags = simulate_schedule(8, 1, overlap=False)
+    assert [d.rule for d in diags] == ["ZS-S002"]
+    assert diags[0].severity == "info"
+
+
+def test_simulate_single_slot_overlap_is_the_hazard():
+    """slots=1 with DMA/compute overlap IS the slot-reuse stall."""
+    diags = simulate_schedule(8, 1, overlap=True)
+    assert any(d.rule == "ZS-S001" and d.severity == "error" for d in diags)
+
+
+def test_bank_pattern_disjoint_matches_schedule_model():
+    for slots in (2, 3):
+        pattern = bank_access_pattern(slots, steps=12)
+        assert all(not (comp & dma) for comp, dma in pattern)
+        assert RevolvingSchedule(steps=12, slots=slots).conflict_free()
+
+
+def test_check_config_accepts_legal_interpret_config():
+    cfg = KernelConfig(backend="interpret", bm=16, bn=16, bk=16, slots=2)
+    key = OpKey("matmul", 64, 64, 64, dtype="float32")
+    assert check_config(cfg, key) == []
+
+
+def test_check_config_rejects_mutated_single_slot_dobu():
+    """The purpose-built hazard: a config claiming the overlapped
+    (dobu) schedule with one slot.  KernelConfig validation refuses to
+    construct it, so the checker must catch the duck-typed stand-in
+    (a tampered/hand-written plan artifact)."""
+    bad = SimpleNamespace(bm=16, bn=16, bk=16, slots=1, variant="dobu")
+    rules = {d.rule for d in check_config(bad)}
+    assert "ZS-S001" in rules
+    key = OpKey("matmul", 128, 128, 128, dtype="float32")
+    rules = {(d.rule, d.severity) for d in check_config(bad, key)}
+    assert ("ZS-S001", "error") in rules
+
+
+def test_check_config_single_variant_is_info_not_error():
+    cfg = KernelConfig(backend="interpret", bm=8, bn=8, bk=8,
+                       variant="single", slots=1)
+    key = OpKey("matmul", 32, 32, 32, dtype="float32")
+    diags = check_config(cfg, key)
+    assert {d.rule for d in diags} == {"ZS-S002"}
+    assert all(d.severity == "info" for d in diags)
+
+
+def test_check_config_flags_vmem_blowout():
+    huge = SimpleNamespace(bm=8192, bn=8192, bk=8192, slots=2,
+                           variant="dobu")
+    diags = check_config(huge)
+    assert any(d.rule == "ZS-S004" and d.severity == "error"
+               for d in diags)
+
+
+def test_check_config_attention_working_set():
+    ok = KernelConfig(backend="interpret", bq=16, bkv=16)
+    key = OpKey("attention", 64, 16, 64, dtype="float32")
+    assert check_config(ok, key) == []
+    blown = SimpleNamespace(bq=1 << 20, bkv=1 << 20, bm=1, bn=1, bk=1)
+    diags = check_config(blown, key)
+    assert any(d.rule == "ZS-S004" and d.severity == "error"
+               for d in diags)
+
+
+def test_check_config_exhaustive_interpret_space():
+    """Every candidate the tuner may legally pick is hazard-free (at
+    worst informational): the space and the checker agree on what
+    'legal' means.  Deterministic version of the hypothesis sweep."""
+    problems = [Problem("matmul", 8, 8, 8),
+                Problem("matmul", 64, 64, 64),
+                Problem("matmul", 1, 256, 64),
+                Problem("matmul", 256, 32, 256, dtype_bytes=1)]
+    checked = 0
+    for pb in problems:
+        dt = "int8" if pb.dtype_bytes == 1 else "bfloat16"
+        key = OpKey("matmul", pb.M, pb.N, pb.K, dtype=dt)
+        for cand in INTERPRET_SPACE.candidates(pb):
+            diags = check_config(cand, key)
+            bad = [d for d in diags if d.severity != "info"]
+            assert bad == [], (cand, [d.format() for d in bad])
+            checked += 1
+    assert checked > 50     # the sweep actually covered the space
+
+
+# ----------------------------------------------------------------------
+# layer 2: plan lint
+# ----------------------------------------------------------------------
+def _plan_with(key, cfg, **plan_kwargs):
+    plan = Plan(**plan_kwargs)
+    plan.add(key, cfg)
+    return plan
+
+
+def test_lint_plan_clean_on_good_entry():
+    key = OpKey("matmul", 64, 64, 64, dtype="float32")
+    plan = _plan_with(key, KernelConfig(backend="interpret", bm=16,
+                                        bn=16, bk=16, slots=2),
+                      backend="interpret")
+    assert lint_plan(plan).ok("warning")
+
+
+def test_lint_plan_rejects_int8_accumulating_in_int8():
+    """The purpose-built plan violation: int8 operands, int8 output —
+    the int32-accumulator contract of the quantized kernels broken by
+    a hand-edited artifact."""
+    key = OpKey("matmul", 64, 64, 64, dtype="int8")
+    plan = _plan_with(key, KernelConfig(backend="interpret", bm=16,
+                                        bn=16, bk=16, slots=2,
+                                        out_dtype="int8"),
+                      backend="interpret", quant="int8")
+    report = lint_plan(plan)
+    assert any(d.rule == "ZS-L004" and d.severity == "error"
+               for d in report)
+    assert not report.ok("error")
+
+
+def test_lint_plan_tile_exceeding_bucket_is_flagged():
+    key = OpKey("matmul", 8, 8, 8, dtype="float32")
+    plan = _plan_with(key, KernelConfig(backend="interpret", bm=512,
+                                        bn=8, bk=8, slots=2),
+                      backend="interpret")
+    assert any(d.rule == "ZS-L003" for d in lint_plan(plan))
+
+
+def test_lint_plan_decode_hot_single_buffer_warns():
+    key = OpKey("matmul", 1, 256, 256, dtype="float32")
+    plan = _plan_with(key, KernelConfig(backend="interpret", bm=8,
+                                        bn=16, bk=16, variant="single",
+                                        slots=1),
+                      backend="interpret")
+    assert any(d.rule == "ZS-L006" for d in lint_plan(plan))
+
+
+def test_lint_plan_backend_contradiction():
+    key = OpKey("matmul", 64, 64, 64, dtype="float32")
+    plan = _plan_with(key, KernelConfig(backend="pallas", bm=128,
+                                        bn=128, bk=128, slots=2),
+                      backend="interpret")
+    assert any(d.rule == "ZS-L002" and d.severity == "error"
+               for d in lint_plan(plan))
+
+
+def test_lint_plan_policy_pair_rules():
+    plan = Plan(backend="interpret")     # empty auto plan
+    # well-formed policy but restart over an empty auto plan: ZS-F003
+    report = lint_plan(plan, policy=RetryPolicy())
+    assert any(d.rule == "ZS-F003" for d in report)
+    # ill-formed backoff (constructible: validate() is a method, so a
+    # hand-built artifact can carry it) -> ZS-F002 error + ZS-F001
+    bad = RetryPolicy(max_retries=0, backoff_factor=0.5)
+    with pytest.raises(ValueError):
+        bad.validate()
+    report = lint_plan(plan, policy=bad)
+    rules = {d.rule for d in report}
+    assert "ZS-F001" in rules and "ZS-F002" in rules
+    assert not report.ok("error")
+
+
+def test_retry_policy_delay_schedule_and_json():
+    p = RetryPolicy(max_retries=2, backoff_base_s=0.5, backoff_factor=2.0,
+                    max_backoff_s=1.5)
+    p.validate()
+    assert [p.delay_s(i) for i in (1, 2, 3)] == [0.5, 1.0, 1.5]
+    assert RetryPolicy.from_json(p.to_json()) == p
+    assert RetryPolicy().delay_s(5) == 0.0   # base 0: immediate retry
+
+
+# ----------------------------------------------------------------------
+# layer 3: program lint
+# ----------------------------------------------------------------------
+_SDS = jax.ShapeDtypeStruct
+
+
+def test_lint_program_flags_raw_dot_general():
+    rep = lint_program(lambda a, b: a @ b,
+                       _SDS((64, 64), jnp.float32),
+                       _SDS((64, 64), jnp.float32))
+    assert [d.rule for d in rep] == ["ZS-P001"]
+    assert rep.errors and "dot_general" in rep.errors[0].message
+
+
+def test_lint_program_min_flops_cut():
+    rep = lint_program(lambda a, b: a @ b,
+                       _SDS((2, 2), jnp.float32),
+                       _SDS((2, 2), jnp.float32), min_flops=1e6)
+    assert len(rep) == 0
+
+
+def test_lint_program_flags_host_callback_in_fused_block():
+    def block(x):
+        jax.debug.print("mid-block sync {}", x.sum())
+        return x * 2.0
+    rep = lint_program(block, _SDS((8,), jnp.float32))
+    assert any(d.rule == "ZS-P002" and d.severity == "error" for d in rep)
+
+
+def test_lint_program_flags_dequant_upcast_matmul():
+    def dequant_matmul(x, w8, scale):
+        w = w8.astype(jnp.float32) * scale     # dequantized weights...
+        return x @ w                           # ...into an fp32 GEMM
+    rep = lint_program(dequant_matmul,
+                       _SDS((16, 32), jnp.float32),
+                       _SDS((32, 16), jnp.int8),
+                       _SDS((1, 16), jnp.float32), quant=True)
+    rules = {d.rule for d in rep}
+    assert "ZS-P003" in rules and "ZS-P001" in rules
+
+
+def test_lint_program_recurses_into_scan():
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, ()
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+    rep = lint_program(scanned, _SDS((16, 16), jnp.float32),
+                       _SDS((16, 16), jnp.float32))
+    assert any(d.rule == "ZS-P001" for d in rep)
+
+
+def test_lint_program_allowlists_by_source():
+    rep = lint_program(lambda a, b: a @ b,
+                       _SDS((8, 8), jnp.float32),
+                       _SDS((8, 8), jnp.float32),
+                       allow=("test_analyze.py",))
+    assert len(rep) == 0
+
+
+# ----------------------------------------------------------------------
+# regression: a jnp-fallback model is caught; the repo's own is clean
+# ----------------------------------------------------------------------
+def _prefill_jaxpr(model, cfg, ctx, prompt_len=8, max_len=16):
+    params = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+    batch = {"tokens": _SDS((1, prompt_len), jnp.int32),
+             "lengths": _SDS((1,), jnp.int32)}
+    return jax.make_jaxpr(
+        lambda p, b: model.prefill(p, b, ctx, max_len))(params, batch)
+
+
+def test_lint_program_flags_monkeypatched_jnp_fallback_model(monkeypatch):
+    """A model whose unembed regresses to a raw jnp einsum (the exact
+    silent-fallback class `unembed` used to be) is flagged ZS-P001;
+    unpatched, the same trace is clean."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
+
+    clean = lint_program(_prefill_jaxpr(model, cfg, ctx))
+    assert clean.ok("warning"), clean.format()
+
+    def jnp_unembed(p, x, mctx):
+        w = p["lm_head"] if "lm_head" in p else p["tokens"].T
+        return jnp.einsum("bsd,dv->bsv", x, w)   # the silent fallback
+
+    monkeypatch.setattr(L, "unembed", jnp_unembed)
+    flagged = lint_program(_prefill_jaxpr(model, cfg, ctx))
+    assert any(d.rule == "ZS-P001" and "test_analyze" in d.where
+               for d in flagged), flagged.format()
+
+
+# ----------------------------------------------------------------------
+# load-time gate: ServeEngine(validate=True)
+# ----------------------------------------------------------------------
+def test_serve_engine_validate_rejects_bad_plan():
+    from repro.serve import ServeEngine
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
+    bad = Plan(backend="jnp", quant="int8")
+    bad.add(OpKey("matmul", 64, 64, 64, dtype="int8").bucketed(),
+            KernelConfig(bm=16, bn=16, bk=16, slots=2, out_dtype="int8"))
+    with pytest.raises(ValueError, match="ZS-L004"):
+        ServeEngine(model, params, ctx, num_slots=2, max_len=16,
+                    plan=bad, validate=True)
+    # the same plan loads untouched without the gate (back-compat)
+    eng = ServeEngine(model, params, ctx, num_slots=2, max_len=16,
+                      plan=bad)
+    assert eng.plan is bad
+
+
+def test_serve_engine_validate_accepts_good_plan():
+    from repro.serve import ServeEngine
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    ctx = Ctx(plan="jnp", dtype=jnp.float32)
+    good = Plan(backend="jnp")
+    good.add(OpKey("matmul", 64, 64, 64, dtype="float32").bucketed(),
+             KernelConfig(bm=16, bn=16, bk=16, slots=2))
+    eng = ServeEngine(model, params, ctx, num_slots=2, max_len=16,
+                      plan=good, validate=True)
+    assert eng.plan is good

@@ -1,0 +1,65 @@
+"""Property-based sweeps for the schedule hazard checker.
+
+The two directions of the acceptance contract, explored randomly:
+
+  * soundness of the space — every candidate :class:`KernelSpace`
+    calls legal is hazard-free under symbolic execution (at worst
+    informational), so the tuner can never pick a stalling config;
+  * completeness against mutation — every *mutated* config that
+    claims the overlapped (dobu) schedule with a single slot is
+    rejected with the stable slot-reuse rule id ZS-S001.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+from types import SimpleNamespace
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.analyze import check_config, simulate_schedule
+from repro.core.pipeline import RevolvingSchedule
+from repro.plan import OpKey
+from repro.tune.space import INTERPRET_SPACE, Candidate, Problem
+
+_TILES = st.sampled_from(INTERPRET_SPACE.tile_options)
+_SLOTS = st.sampled_from(INTERPRET_SPACE.slot_options)
+_DIMS = st.integers(1, 512)
+
+
+@settings(max_examples=200, deadline=None)
+@given(_TILES, _TILES, _TILES, _SLOTS, _DIMS, _DIMS, _DIMS)
+def test_every_space_legal_config_is_accepted(bm, bn, bk, slots,
+                                              M, N, K):
+    cand = Candidate(bm, bn, bk, slots)
+    problem = Problem("matmul", M, N, K)
+    if not INTERPRET_SPACE.feasible(cand, problem):
+        return                       # out of space: nothing to assert
+    key = OpKey("matmul", M, N, K, dtype="bfloat16")
+    diags = check_config(cand, key)
+    assert all(d.severity == "info" for d in diags), \
+        (cand, problem, [d.format() for d in diags])
+
+
+@settings(max_examples=200, deadline=None)
+@given(_TILES, _TILES, _TILES, st.integers(2, 128))
+def test_mutated_single_slot_overlap_rejected(bm, bn, bk, steps):
+    """slots=1 + overlapped DMA is the hazard KernelConfig refuses to
+    construct; the checker must reject the duck-typed stand-in."""
+    bad = SimpleNamespace(bm=bm, bn=bn, bk=bk, slots=1, variant="dobu")
+    diags = check_config(bad, steps=steps)
+    assert any(d.rule == "ZS-S001" and d.severity == "error"
+               for d in diags), [d.format() for d in diags]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 128), st.integers(2, 6))
+def test_simulation_agrees_with_closed_form_schedule(steps, slots):
+    """Symbolic execution and RevolvingSchedule.conflict_free() are
+    two independent models of the same protocol — they must agree."""
+    diags = simulate_schedule(steps, slots, overlap=True)
+    sim_clean = not any(d.rule == "ZS-S001" for d in diags)
+    assert sim_clean == RevolvingSchedule(steps=steps,
+                                          slots=slots).conflict_free()
+    assert sim_clean                 # slots >= 2 is always hazard-free

@@ -269,7 +269,10 @@ def test_quantized_logits_within_tolerance_interpret(arch, monkeypatch):
     ctx_q = Ctx(plan=KernelConfig(backend="interpret", quant="int8"),
                 dtype=jnp.float32)
     _boom_refs(monkeypatch)
-    got = np.asarray(model.prefill_logits(qparams, batch, ctx_q))
+    # strict mode: ANY ops-level fallback raises FallbackError even
+    # where the monkeypatched references would not be reached
+    with ops.strict_fallbacks():
+        got = np.asarray(model.prefill_logits(qparams, batch, ctx_q))
     monkeypatch.undo()
 
     np.testing.assert_allclose(got, want, rtol=0.05,

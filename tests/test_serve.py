@@ -100,13 +100,16 @@ def test_masked_blocks_after_valid_prefix():
 
 
 def test_ops_attention_pads_instead_of_fallback(monkeypatch):
-    """Non-tile-multiple lengths must stay on the Pallas kernel now."""
+    """Non-tile-multiple lengths must stay on the Pallas kernel now —
+    run under strict mode so ANY fallback is a hard FallbackError, not
+    just the monkeypatched reference exploding."""
     def boom(*a, **kw):
         raise AssertionError("jnp reference fallback taken")
     monkeypatch.setattr(ops._ref, "flash_attention_ref", boom)
     q, k, v = _qkv(B=2, H=2, S=40, D=16)
-    got = ops.attention(q, k, v, causal=True, config=KernelConfig(
-        backend="interpret", bq=16, bkv=16))
+    with ops.strict_fallbacks():
+        got = ops.attention(q, k, v, causal=True, config=KernelConfig(
+            backend="interpret", bq=16, bkv=16))
     monkeypatch.undo()
     want = _ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -120,6 +123,29 @@ def test_ops_attention_warns_on_remaining_fallback():
     with pytest.warns(RuntimeWarning, match="falling back"):
         ops.attention(q, k, v, causal=True, config=KernelConfig(
             backend="interpret", bq=8, bkv=8))
+
+
+def test_ops_attention_strict_raises_on_remaining_fallback():
+    """Strict mode closes the one intentionally-kept fallback: the
+    causal Sq != Skv path raises FallbackError unless explicitly
+    allowlisted (the paper's contract — no silent reference matmuls)."""
+    q, k, v = _qkv(B=1, H=1, S=16, D=8, T=32)
+    cfg = KernelConfig(backend="interpret", bq=8, bkv=8)
+    with ops.strict_fallbacks():
+        with pytest.raises(ops.FallbackError, match="causal"):
+            ops.attention(q, k, v, causal=True, config=cfg)
+    # per-call strict overrides the ambient mode the same way
+    with pytest.raises(ops.FallbackError):
+        ops.attention(q, k, v, causal=True, config=cfg, strict=True)
+    # the explicit allowlist re-opens exactly this key (warn + ref path)
+    with ops.strict_fallbacks(allow=("attention_causal_unaligned",)):
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            out = ops.attention(q, k, v, causal=True, config=cfg)
+    want = _ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # the context restores warn-once mode on exit
+    assert not ops._STRICT_FALLBACKS
 
 
 def test_scatter_at_per_row_positions():
