@@ -7,8 +7,12 @@ CPU-reproducible paths, the numbers every future PR must not regress:
 * **serve** (interpret backend, reduced gemma-7b): engine scheduling
   metrics per ``steps_per_dispatch`` — decode steps, dispatches,
   admissions, occupancy — plus the per-op predicted-utilization table
-  of every kernel the run dispatched.  Scheduling counts are exact by
-  the engine's determinism contract; wall-clock fields ride along as
+  of every kernel the run dispatched.  A paged+chunked run
+  (``k4_paged``: page_size=4, prefill_chunk=8 on the same trace) gates
+  the page-pool gauges — peak ``pages_in_use``, peak ``pages_shared``
+  (prefix sharing), ``prefill_chunks`` — as exact ints.  Scheduling
+  counts are exact by the engine's determinism contract; wall-clock
+  fields (incl. the TTFT p50/p99 summaries) ride along as
   informational context only.
 * **tune** (analytic): tuned-vs-default predicted utilization for the
   dominant GEMMs of every registered arch
@@ -96,6 +100,41 @@ def _serve_payload() -> dict:
             "tokens_checksum": int(sum(sum(r.tokens)
                                        for r in results.values())),
         }
+    # paged + chunked run: same trace behind a shared 8-token system
+    # prefix, on the page pool (page_size=4) with chunk-at-8 prefill.
+    # The allocator gauges — peak pages_in_use, peak pages_shared
+    # (the prefix pages mapped into both slots at once), and the chunk
+    # count — are exact ints under the engine's determinism contract,
+    # so check_bench gates them; the TTFT summary stays informational.
+    eng = ServeEngine(model, params, ctx, num_slots=NUM_SLOTS,
+                      max_len=MAX_LEN, steps_per_dispatch=4,
+                      page_size=4, prefill_chunk=8)
+    sys_prefix = toks[0, :8].tolist()
+    reqs = [Request(rid=i, prompt=sys_prefix + toks[i, :n].tolist(),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(zip(PROMPT_LENS, MAX_NEW))]
+    results = eng.run(reqs)
+    s = eng.stats
+    lat = s.latency_summary()
+    runs["k4_paged"] = {
+        # deterministic scheduling + page-pool metrics (gated exact)
+        "steps_per_dispatch": 4, "page_size": 4, "prefill_chunk": 8,
+        "admitted": s.admitted, "retired": s.retired,
+        "max_concurrent": s.max_concurrent,
+        "pages_in_use": s.pages_in_use,
+        "pages_shared": s.pages_shared,
+        "prefill_chunks": s.prefill_chunks,
+        "prefill_tokens": s.prefill_tokens,
+        "decode_tokens": s.decode_tokens,
+        "decode_steps": s.decode_steps,
+        "dispatches": s.dispatches,
+        "mean_dispatch_occupancy": s.mean_dispatch_occupancy,
+        # informational (wall-clock; not gated)
+        "ttft": lat["ttft"], "queue_wait": lat["queue_wait"],
+        "token_latency": lat["token_latency"],
+        "tokens_checksum": int(sum(sum(r.tokens)
+                                   for r in results.values())),
+    }
     # predicted-only utilization rows: config strings and counts are
     # exact (the dispatch signature set of the compiled programs),
     # predicted floats approx

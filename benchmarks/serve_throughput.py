@@ -30,7 +30,11 @@ Run: ``PYTHONPATH=src python -m benchmarks.serve_throughput``
 tok/s are not.)  ``--smoke`` runs one small arch (CI);
 ``--steps-per-dispatch K`` restricts the sweep to one K;
 ``--step-timeout S`` fails hard if any engine step stalls;
-``--measure-util`` adds the measured column to the utilization table.
+``--measure-util`` adds the measured column to the utilization table;
+``--page-size N`` runs the continuous engine on the paged KV pool
+(``repro.serve.paging``) and fills the ``page_size`` /
+``pages_in_use`` / ``pages_shared`` CSV columns (``--prefill-chunk``
+likewise fills ``prefill_chunks`` on families that support it).
 """
 
 from __future__ import annotations
@@ -71,10 +75,13 @@ def _occupancy(eng):
 
 
 def _run_continuous(model, params, ctx, reqs, *, num_slots, max_len,
-                    steps_per_dispatch, step_timeout_s=None):
+                    steps_per_dispatch, step_timeout_s=None,
+                    page_size=None, num_pages=None, prefill_chunk=None):
     eng = ServeEngine(model, params, ctx, num_slots=num_slots,
                       max_len=max_len,
-                      steps_per_dispatch=steps_per_dispatch)
+                      steps_per_dispatch=steps_per_dispatch,
+                      page_size=page_size, num_pages=num_pages,
+                      prefill_chunk=prefill_chunk)
     eng.run(reqs, step_timeout_s=step_timeout_s)
     return eng.throughput(), _occupancy(eng), eng.stats
 
@@ -112,6 +119,15 @@ def main():
     ap.add_argument("--measure-util", action="store_true",
                     help="add measured wall-clock to the utilization table "
                          "(standalone per-op replay)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="run the continuous engine on the paged KV pool "
+                         "with this many tokens per page (mode column "
+                         "reads 'paged'; adds page-gauge CSV columns)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical page-pool size (default: sized so no "
+                         "request ever waits on pages)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill width for the continuous runs")
     args = ap.parse_args()
 
     if args.smoke:
@@ -129,36 +145,47 @@ def main():
     obs.reset_records()
 
     ctx = Ctx(plan="jnp", dtype=jnp.float32)
-    print("arch,mode,steps_per_dispatch,prefill_tok_s,decode_tok_s,"
-          "decode_steps,dispatches,occupancy,ttft_p50_s,ttft_p99_s,"
-          "tok_p50_s,tok_p99_s")
+    print("arch,mode,steps_per_dispatch,page_size,prefill_tok_s,"
+          "decode_tok_s,decode_steps,dispatches,occupancy,"
+          "pages_in_use,pages_shared,prefill_chunks,"
+          "ttft_p50_s,ttft_p99_s,tok_p50_s,tok_p99_s")
+
+    def _row(arch, mode, k, page_size, tp, occ, st):
+        lat = st.latency_summary()
+        ps = "" if page_size is None else page_size
+        print(f"{arch},{mode},{k},{ps},{tp['prefill_tok_s']:.1f},"
+              f"{tp['decode_tok_s']:.1f},{st.decode_steps},"
+              f"{st.dispatches},{occ:.2f},"
+              f"{st.pages_in_use},{st.pages_shared},{st.prefill_chunks},"
+              f"{lat['ttft']['p50']:.4f},{lat['ttft']['p99']:.4f},"
+              f"{lat['token_latency']['p50']:.4f},"
+              f"{lat['token_latency']['p99']:.4f}")
+
     for arch in archs:
         cfg = get_config(arch, reduced=True)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
         reqs = _requests(cfg, n_req, prompt_lens, gen_lens)
+        # chunked ingestion needs a chunk-invariant prompt state
+        # (Model.prefill_chunk); SSM/hybrid prompts take one shot.
+        # page_size is safe everywhere — families with unpageable
+        # state (pure SSM) keep the contiguous path and report 0 pages.
+        chunk = (args.prefill_chunk if model.prefill_chunk is not None
+                 else None)
         for k in sweep:
             tp, occ, st = _run_continuous(
                 model, params, ctx, reqs, num_slots=NUM_SLOTS,
                 max_len=max_len, steps_per_dispatch=k,
-                step_timeout_s=args.step_timeout)
-            lat = st.latency_summary()
-            print(f"{arch},continuous,{k},{tp['prefill_tok_s']:.1f},"
-                  f"{tp['decode_tok_s']:.1f},{st.decode_steps},"
-                  f"{st.dispatches},{occ:.2f},"
-                  f"{lat['ttft']['p50']:.4f},{lat['ttft']['p99']:.4f},"
-                  f"{lat['token_latency']['p50']:.4f},"
-                  f"{lat['token_latency']['p99']:.4f}")
+                step_timeout_s=args.step_timeout,
+                page_size=args.page_size, num_pages=args.num_pages,
+                prefill_chunk=chunk)
+            paged = st.pages_in_use > 0
+            _row(arch, "paged" if paged else "continuous", k,
+                 args.page_size if paged else None, tp, occ, st)
         tp, occ, st = _run_lockstep(model, params, ctx, reqs,
                                     num_slots=NUM_SLOTS, max_len=max_len,
                                     step_timeout_s=args.step_timeout)
-        lat = st.latency_summary()
-        print(f"{arch},lockstep,1,{tp['prefill_tok_s']:.1f},"
-              f"{tp['decode_tok_s']:.1f},{st.decode_steps},"
-              f"{st.dispatches},{occ:.2f},"
-              f"{lat['ttft']['p50']:.4f},{lat['ttft']['p99']:.4f},"
-              f"{lat['token_latency']['p50']:.4f},"
-              f"{lat['token_latency']['p99']:.4f}")
+        _row(arch, "lockstep", 1, None, tp, occ, st)
 
     # per-op predicted-vs-measured utilization (the Fig.-5 analogue):
     # every distinct (op, shape, dtype, backend, config) the runs traced

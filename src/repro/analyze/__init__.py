@@ -27,13 +27,13 @@ from __future__ import annotations
 from repro.analyze.diagnostics import SEVERITIES, Diagnostic, Report
 from repro.analyze.driver import FAMILY_ARCHS, analyze_arch, analyze_families
 from repro.analyze.hazards import bank_access_pattern, check_config, simulate_schedule
-from repro.analyze.plan_lint import lint_plan
+from repro.analyze.plan_lint import lint_page_geometry, lint_plan
 from repro.analyze.program_lint import DEFAULT_ALLOW, lint_program
 
 __all__ = [
     "Diagnostic", "Report", "SEVERITIES", "RULES",
     "check_config", "simulate_schedule", "bank_access_pattern",
-    "lint_plan", "lint_program", "DEFAULT_ALLOW",
+    "lint_plan", "lint_page_geometry", "lint_program", "DEFAULT_ALLOW",
     "FAMILY_ARCHS", "analyze_arch", "analyze_families",
 ]
 
@@ -59,6 +59,9 @@ RULES = {
     "ZS-S007": ("error", "schedule",
                 "ZONL: the sequencer issues the tile nest in exactly "
                 "total_issued cycles (zero control overhead)"),
+    "ZS-S008": ("error", "schedule",
+                "paged KV: the per-slot page table covers max_len "
+                "(capacity = table_len * page_size tokens)"),
     "ZS-L001": ("error", "plan", "every plan OpKey is resolvable"),
     "ZS-L002": ("error", "plan",
                 "entry backend does not contradict the plan backend"),
@@ -72,6 +75,9 @@ RULES = {
                 "decode-hot GEMMs run the revolving buffer (slots >= 2)"),
     "ZS-L007": ("warning", "plan",
                 "entry quant mode agrees with the plan quant mode"),
+    "ZS-L008": ("error", "plan",
+                "paged KV: page_size tiles every attention entry's KV "
+                "block (bkv % page_size == 0)"),
     "ZS-F001": ("warning", "plan+policy",
                 "transient failures get at least one in-place retry"),
     "ZS-F002": ("error", "plan+policy", "retry backoff is well-formed"),

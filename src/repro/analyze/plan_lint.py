@@ -22,7 +22,7 @@ from repro.analyze.hazards import check_config
 from repro.core.cyclemodel import TpuParams
 from repro.plan.config import KernelConfig, OpKey, _dtype_bytes
 
-__all__ = ["lint_plan"]
+__all__ = ["lint_plan", "lint_page_geometry"]
 
 #: MXU lane alignment by backend (mirror of the tuner spaces).
 _ALIGN = {"pallas": 128, "interpret": 8, "auto": 128, "jnp": 1}
@@ -164,6 +164,55 @@ def _lint_policy(plan, policy) -> list[Diagnostic]:
             hint="ship a traced plan (trace_model / --plan trace) so "
                  "restarts resolve configs by lookup"))
     return diags
+
+
+def lint_page_geometry(page_size: int, table_len: int, *,
+                       max_len: int | None = None, plan=None) -> Report:
+    """Validate a paged-KV geometry against a plan's attention tiling.
+
+    Rules:
+
+    * ``ZS-L008`` (error) — ``page_size`` must tile every attention
+      entry's KV block (``bkv % page_size == 0``; the plan default and
+      the ``KernelConfig`` default when no plan is given).  A page that
+      straddles a KV tile would make the paged kernel's one-page-per-
+      grid-step BlockSpec walk impossible without copies.
+    * ``ZS-S008`` (error) — the per-slot table capacity
+      (``table_len * page_size`` tokens) must cover ``max_len``;
+      a shorter table silently truncates long requests' KV.
+
+    ``ServeEngine(page_size=..., validate=True)`` runs this at load
+    time and raises on errors.
+    """
+    report = Report()
+    where = f"PageGeometry(page_size={page_size}, table_len={table_len})"
+    bkvs: dict[str, int] = {}
+    if plan is not None:
+        default = getattr(plan, "default", None)
+        if isinstance(default, KernelConfig):
+            bkvs["Plan.default"] = default.bkv
+        for key, cfg in sorted(plan.entries.items()):
+            if key.op == "attention":
+                bkvs[key.to_str()] = cfg.bkv
+    if not bkvs:
+        bkvs["KernelConfig() default"] = KernelConfig().bkv
+    for src, bkv in bkvs.items():
+        if page_size < 1 or bkv % page_size:
+            report.add(Diagnostic(
+                rule="ZS-L008", severity="error",
+                where=f"{where} vs {src}",
+                message=f"page_size {page_size} does not tile the "
+                        f"attention KV block (bkv={bkv})",
+                hint="pick page_size with bkv % page_size == 0 so a KV "
+                     "tile is always a whole number of pages"))
+    if max_len is not None and table_len * page_size < max_len:
+        report.add(Diagnostic(
+            rule="ZS-S008", severity="error", where=where,
+            message=f"page-table capacity {table_len * page_size} tokens "
+                    f"({table_len} pages x {page_size}) is below "
+                    f"max_len {max_len}",
+            hint="size table_len to ceil(max_len / page_size)"))
+    return report
 
 
 def lint_plan(plan, *, policy=None, params: TpuParams | None = None

@@ -17,10 +17,14 @@ Variable-length batches (the serving workload): ``q_lens`` / ``kv_lens``
 are per-sequence valid lengths, scalar-prefetched into SMEM so every
 grid step can mask its score tile.  Rows/cols at ``>= len`` are invalid;
 fully-masked query rows produce exact zeros.  Positions are absolute
-row/col indices (query row i is sequence position i), so zero-padding
-q/k/v up to tile multiples never changes the math — that is what lets
+row/col indices (query row i is sequence position ``q_offsets[b] + i``,
+with offsets defaulting to zero), so zero-padding q/k/v up to tile
+multiples never changes the math — that is what lets
 :func:`repro.kernels.ops.attention` keep ragged continuous batches on
-this kernel instead of falling back to the jnp reference.
+this kernel instead of falling back to the jnp reference.  Nonzero
+``q_offsets`` serve chunked prefill: a chunk of query rows attends to
+the slot's full kv stripe with its causal frontier shifted to the
+chunk's absolute start.
 """
 
 from __future__ import annotations
@@ -39,7 +43,7 @@ __all__ = ["flash_attention"]
 NEG_INF = -1e30
 
 
-def _kernel(ql_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
+def _kernel(ql_ref, kl_ref, qo_ref, q_ref, k_ref, v_ref, o_ref,
             m_scr, l_scr, acc_scr, *,
             scale: float, causal: bool, bq: int, bkv: int, n_heads: int):
     b = pl.program_id(0)
@@ -47,6 +51,7 @@ def _kernel(ql_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
     nkv = pl.num_programs(2)
     q_len = ql_ref[b // n_heads]
     kv_len = kl_ref[b // n_heads]
+    q_off = qo_ref[b // n_heads]
 
     @pl.when(ikv == 0)
     def _():
@@ -62,7 +67,10 @@ def _kernel(ql_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale   # (bq, bkv)
 
-    rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    # query row i sits at absolute sequence position q_off + i (q_off is
+    # nonzero only for chunked prefill, where the chunk's rows attend to
+    # a kv stripe that starts before them)
+    rows = q_off + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
     cols = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
     valid = (rows < q_len) & (cols < kv_len)
     if causal:
@@ -104,6 +112,7 @@ def flash_attention(
     *,
     q_lens: jax.Array | None = None,    # (B,) valid query rows
     kv_lens: jax.Array | None = None,   # (B,) valid kv positions
+    q_offsets: jax.Array | None = None, # (B,) absolute offset of query row 0
     bq: int = 128,
     bkv: int = 128,
     causal: bool = True,
@@ -115,8 +124,12 @@ def flash_attention(
     if Sq % bq or Skv % bkv:
         raise ValueError(f"seq lens {(Sq, Skv)} not multiples of {(bq, bkv)}")
     scale = scale if scale is not None else D ** -0.5
+    if q_offsets is None:
+        q_offsets = jnp.zeros((B,), jnp.int32)
     if q_lens is None:
-        q_lens = jnp.full((B,), Sq, jnp.int32)
+        # default: all Sq rows valid — in absolute positions when the
+        # rows are offset
+        q_lens = q_offsets.astype(jnp.int32) + Sq
     if kv_lens is None:
         kv_lens = jnp.full((B,), Skv, jnp.int32)
     bh = B * H
@@ -127,7 +140,7 @@ def flash_attention(
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
                                bq=bq, bkv=bkv, n_heads=H)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,      # q_lens, kv_lens -> SMEM
+        num_scalar_prefetch=3,      # q_lens, kv_lens, q_offsets -> SMEM
         grid=(bh, Sq // bq, Skv // bkv),
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j, *_: (b, i, 0)),
@@ -149,5 +162,6 @@ def flash_attention(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
         name="flash_attention",
-    )(q_lens.astype(jnp.int32), kv_lens.astype(jnp.int32), qf, kf, vf)
+    )(q_lens.astype(jnp.int32), kv_lens.astype(jnp.int32),
+      q_offsets.astype(jnp.int32), qf, kf, vf)
     return of.reshape(B, H, Sq, D)

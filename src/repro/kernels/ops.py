@@ -54,6 +54,7 @@ from repro import plan as _plan
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.grouped_matmul import grouped_zero_stall_matmul
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.quantized_matmul import (
     quantized_grouped_zero_stall_matmul,
     quantized_zero_stall_matmul,
@@ -62,8 +63,9 @@ from repro.kernels.zero_stall_matmul import zero_stall_matmul
 from repro.plan import UNSET as _UNSET, KernelConfig, Plan
 from repro.quant.tensor import QTensor, quantize_rows
 
-__all__ = ["matmul", "grouped_matmul", "attention", "host_tiled_matmul",
-           "quantized_matmul", "quantized_grouped_matmul", "resolve_impl",
+__all__ = ["matmul", "grouped_matmul", "attention", "paged_attention",
+           "host_tiled_matmul", "quantized_matmul",
+           "quantized_grouped_matmul", "resolve_impl",
            "reset_fallback_warnings", "fallback_counts", "FallbackError",
            "strict_fallbacks"]
 
@@ -425,6 +427,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
               causal: bool = True, scale: float | None = None,
               q_lens: jax.Array | None = None,
               kv_lens: jax.Array | None = None,
+              q_offsets: jax.Array | None = None,
               strict: bool | None = None,
               impl=_UNSET, bq=_UNSET, bkv=_UNSET,
               tiling=_UNSET) -> jax.Array:
@@ -434,12 +437,15 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
     ``(bq, bkv)`` pairs here; a KernelConfig contributes its
     ``bq``/``bkv`` fields).  ``q_lens``/``kv_lens``: optional (B,)
     per-sequence valid lengths (variable-length/continuous batches).
-    Non-tile-multiple sequence lengths are zero-padded up to the tile
-    and masked via the length operands — padding contributes exact
-    zeros, so ragged serving shapes stay on the Pallas kernel instead
-    of silently routing to the reference path.  ``strict=True`` turns
-    any remaining fallback into a :class:`FallbackError` (default: the
-    ambient ``strict_fallbacks()`` mode).
+    ``q_offsets``: optional (B,) absolute position of query row 0 —
+    chunked prefill, where a chunk of rows attends to the full kv
+    stripe with a shifted causal frontier.  Non-tile-multiple sequence
+    lengths are zero-padded up to the tile and masked via the length
+    operands — padding contributes exact zeros, so ragged serving
+    shapes stay on the Pallas kernel instead of silently routing to the
+    reference path.  ``strict=True`` turns any remaining fallback into
+    a :class:`FallbackError` (default: the ambient
+    ``strict_fallbacks()`` mode).
     """
     config = _legacy_config("attention", config, {
         "impl": impl, "bq": bq, "bkv": bkv, "tiling": tiling})
@@ -450,8 +456,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
         _record("attention", M=Sq, N=D, K=Skv, dtype=q.dtype,
                 backend=backend, batch_heads=B * H)
         return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
-                                        q_lens=q_lens, kv_lens=kv_lens)
-    if causal and Sq != Skv and q_lens is None and kv_lens is None:
+                                        q_lens=q_lens, kv_lens=kv_lens,
+                                        q_offsets=q_offsets)
+    if (causal and Sq != Skv and q_lens is None and kv_lens is None
+            and q_offsets is None):
         # kernel causal is start-aligned (row i == position i); the
         # historical ref is end-aligned for Sq != Skv — don't guess.
         _warn_fallback_once("attention_causal_unaligned",
@@ -469,18 +477,50 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, config=None,
     bkv_ = min(cfg.bkv, Skv)
     if Sq % bq_ or Skv % bkv_:
         # pad to tile multiples and mask — the lengths default to the
-        # unpadded extents, so padding contributes exact zeros.
+        # unpadded extents (absolute, so offsets shift them), so
+        # padding contributes exact zeros.
         if q_lens is None:
             q_lens = jnp.full((B,), Sq, jnp.int32)
+            if q_offsets is not None:
+                q_lens = q_lens + q_offsets
         if kv_lens is None:
             kv_lens = jnp.full((B,), Skv, jnp.int32)
         q = _pad_to(q, (1, 1, bq_, 1))
         k = _pad_to(k, (1, 1, bkv_, 1))
         v = _pad_to(v, (1, 1, bkv_, 1))
     out = _flash(q, k, v, q_lens=q_lens, kv_lens=kv_lens,
-                 bq=bq_, bkv=bkv_, causal=causal, scale=scale,
-                 interpret=(backend == "interpret"))
+                 q_offsets=q_offsets, bq=bq_, bkv=bkv_, causal=causal,
+                 scale=scale, interpret=(backend == "interpret"))
     return out[:, :, :Sq]
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    page_table: jax.Array, *, kv_lens: jax.Array,
+                    config=None, scale: float | None = None) -> jax.Array:
+    """Decode attention over a paged KV pool (see
+    :mod:`repro.kernels.paged_attention`).
+
+    ``q`` (B, H, D) is the batch's last-position queries; ``k_pool`` /
+    ``v_pool`` (P, ps, KV, D) the shared page pool; ``page_table``
+    (B, T) maps each slot's logical pages to physical ones;
+    ``kv_lens`` (B,) the valid kv extents.  ``config`` only selects
+    the backend — the page geometry *is* the schedule (block = one
+    page), so there is no tile resolution step and, by construction,
+    no fallback: every backend runs the same table-gather math, which
+    is what keeps this entry trivially clean under
+    :func:`strict_fallbacks`.
+    """
+    backend = resolve_impl(_plan.config_backend(config, "attention"))
+    B, H, D = q.shape
+    ps, KV = k_pool.shape[1], k_pool.shape[2]
+    T = page_table.shape[1]
+    _record("attention", M=H // KV, N=D, K=T * ps, dtype=q.dtype,
+            backend=backend, batch_heads=B * KV)
+    if backend == "jnp":
+        return _ref.paged_attention_ref(q, k_pool, v_pool, page_table,
+                                        kv_lens=kv_lens, scale=scale)
+    return _paged(q, k_pool, v_pool, page_table, kv_lens=kv_lens,
+                  scale=scale, interpret=(backend == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))

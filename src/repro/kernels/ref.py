@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["matmul_ref", "grouped_matmul_ref", "flash_attention_ref",
-           "ssd_scan_ref", "quantized_matmul_ref",
+           "paged_attention_ref", "ssd_scan_ref", "quantized_matmul_ref",
            "quantized_grouped_matmul_ref"]
 
 
@@ -33,34 +33,40 @@ def grouped_matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, scale: float | None = None,
                         q_lens: jax.Array | None = None,
-                        kv_lens: jax.Array | None = None) -> jax.Array:
+                        kv_lens: jax.Array | None = None,
+                        q_offsets: jax.Array | None = None) -> jax.Array:
     """q,k,v: (B, H, S, D) -> (B, H, S, D). Numerically-stable softmax.
 
     With ``q_lens``/``kv_lens`` ((B,) valid lengths), positions are
     absolute indices (query row i == sequence position i — matching the
     Pallas kernel's convention) and fully-masked query rows return
-    exact zeros.  Without lengths the historical path is unchanged
-    (causal mask end-aligned via the ``k=T-S`` tril offset).
+    exact zeros.  ``q_offsets`` ((B,) per-sequence row offsets) shifts
+    query rows to absolute position ``q_offsets[b] + i`` — the chunked
+    prefill case, where a (S,)-row chunk attends to a longer kv stripe.
+    Without lengths the historical path is unchanged (causal mask
+    end-aligned via the ``k=T-S`` tril offset).
     """
     S = q.shape[-2]
     T = k.shape[-2]
     scale = scale if scale is not None else q.shape[-1] ** -0.5
     logits = jnp.einsum("bhsd,bhtd->bhst", q, k,
                         preferred_element_type=jnp.float32) * scale
-    if q_lens is None and kv_lens is None:
+    if q_lens is None and kv_lens is None and q_offsets is None:
         if causal:
             mask = jnp.tril(jnp.ones((S, T), dtype=bool), k=T - S)
             logits = jnp.where(mask, logits, -jnp.inf)
         probs = jax.nn.softmax(logits, axis=-1)
         return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
-    rows = jnp.arange(S)[:, None]
-    cols = jnp.arange(T)[None, :]
-    mask = jnp.broadcast_to(
-        (rows >= cols) if causal else jnp.ones((S, T), bool), (1, 1, S, T))
+    rows = jnp.arange(S)[None, :, None]        # (1, S, 1)
+    if q_offsets is not None:
+        rows = rows + q_offsets[:, None, None]  # absolute query positions
+    cols = jnp.arange(T)[None, None, :]        # (1, 1, T)
+    mask = (rows >= cols) if causal else jnp.ones((1, S, T), bool)
     if q_lens is not None:
-        mask = mask & (rows < q_lens[:, None, None, None])
+        mask = mask & (rows < q_lens[:, None, None])
     if kv_lens is not None:
-        mask = mask & (cols < kv_lens[:, None, None, None])
+        mask = mask & (cols < kv_lens[:, None, None])
+    mask = mask[:, None]                       # (B|1, 1, S, T)
     # -1e30 (not -inf): fully-masked rows must stay NaN-free; they are
     # zeroed below via row_valid rather than through the softmax.
     logits = jnp.where(mask, logits, -1e30)
@@ -68,6 +74,41 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
     row_valid = mask.any(axis=-1)
     return jnp.where(row_valid[..., None], out, 0.0)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_table: jax.Array, *, kv_lens: jax.Array,
+                        scale: float | None = None) -> jax.Array:
+    """Decode attention over a paged KV pool (the parity ground truth).
+
+    Shapes:
+      q: (B, H, D)                  one query per sequence (decode step)
+      k_pool/v_pool: (P, ps, KV, D) page pool (P pages x ps tokens)
+      page_table: (B, T) int32      logical page -> physical page id
+      kv_lens: (B,)                 valid kv positions (cache pos + 1)
+
+    Grouped-query attention: ``H = KV * rep`` query heads share each
+    of the KV heads.  The query is the *last* position of the sequence,
+    so no causal-within-tile mask is needed — only ``cols < kv_len``.
+    Positions past ``kv_len`` (including trash-page gathers) mask to
+    exact zero weight.
+    """
+    B, H, D = q.shape
+    ps, KV = k_pool.shape[1], k_pool.shape[2]
+    T = page_table.shape[1]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    k = k_pool[page_table].reshape(B, T * ps, KV, D)
+    v = v_pool[page_table].reshape(B, T * ps, KV, D)
+    qr = q.reshape(B, KV, rep, D)
+    s = jnp.einsum("bkrd,btkd->bkrt", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    cols = jnp.arange(T * ps)
+    s = jnp.where((cols[None, :] < kv_lens[:, None])[:, None, None, :],
+                  s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrt,btkd->bkrd", p.astype(v.dtype), v)
+    return out.reshape(B, H, D)
 
 
 def quantized_matmul_ref(a_q: jax.Array, b_q: jax.Array,

@@ -65,7 +65,10 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
                 top_k: int = 0, top_p: float = 1.0,
                 plan=None, plan_out: str | None = None,
                 validate_plan: bool = False,
-                step_timeout_s: float | None = None) -> dict:
+                step_timeout_s: float | None = None,
+                page_size: int | None = None,
+                num_pages: int | None = None,
+                prefill_chunk: int | None = None) -> dict:
     """Run a synthetic request batch through the serving engine.
 
     ``impl`` is the backend; ``plan`` is forwarded to
@@ -80,6 +83,11 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
     jitted dispatch (one host sync per block); ``temperature`` /
     ``top_k`` / ``top_p`` select on-device sampling (0/0/1.0 = exact
     greedy), seeded per request from ``seed``.
+    ``page_size`` switches the KV cache to the paged pool
+    (:mod:`repro.serve.paging`; must divide ``prompt_len + gen_len``),
+    ``num_pages`` sizes the pool (default: no oversubscription), and
+    ``prefill_chunk`` ingests long prompts chunk-by-chunk between
+    decode dispatches.
     """
     from repro.plan import Plan
     cfg = get_config(arch, reduced=reduced)
@@ -103,7 +111,8 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
                          max_len=max_len, cache_dtype=dtype,
                          steps_per_dispatch=steps_per_dispatch, seed=seed,
                          cache_kwargs=cache_kwargs, plan=plan,
-                         validate=validate_plan)
+                         validate=validate_plan, page_size=page_size,
+                         num_pages=num_pages, prefill_chunk=prefill_chunk)
     reqs = _make_requests(cfg, key, batch, prompt_len, gen_len, mixed,
                           temperature=temperature, top_k=top_k, top_p=top_p)
     results = engine.run(reqs, step_timeout_s=step_timeout_s)
@@ -162,6 +171,17 @@ def main():
                     help="statically verify the active plan at load time "
                          "(repro.analyze.lint_plan); error diagnostics "
                          "abort before serving")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page; switches the cache to the "
+                         "paged pool with refcounted prefix sharing "
+                         "(default: contiguous per-slot cache)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical page-pool size incl. the trash page "
+                         "(default: num_slots tables, no oversubscription)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="ingest prompts longer than this in fixed-size "
+                         "chunks between decode dispatches (bounds the "
+                         "head-of-line TTFT of long prompts)")
     ap.add_argument("--step-timeout", type=float, default=None,
                     help="fail if any engine step exceeds this many seconds")
     ap.add_argument("--metrics", action="store_true",
@@ -190,7 +210,10 @@ def main():
                           top_p=args.top_p,
                           plan=args.plan, plan_out=args.plan_out,
                           validate_plan=args.validate_plan,
-                          step_timeout_s=args.step_timeout)
+                          step_timeout_s=args.step_timeout,
+                          page_size=args.page_size,
+                          num_pages=args.num_pages,
+                          prefill_chunk=args.prefill_chunk)
         s = out["stats"]
         print(f"generated shape: {out['generated'].shape}")
         print(f"prefill: {out['prefill_s']:.2f}s "
@@ -200,6 +223,10 @@ def main():
         print(f"steps: {s['decode_steps']}  dispatches: {s['dispatches']}  "
               f"admitted: {s['admitted']}  retired: {s['retired']}  "
               f"max concurrent: {s['max_concurrent']}")
+        if args.page_size is not None or args.prefill_chunk is not None:
+            print(f"pages in use (peak): {s['pages_in_use']}  "
+                  f"shared: {s['pages_shared']}  "
+                  f"prefill chunks: {s['prefill_chunks']}")
         if args.metrics:
             for name in ("ttft", "queue_wait", "token_latency"):
                 m = s[name]

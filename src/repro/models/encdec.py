@@ -208,15 +208,25 @@ def prefill(params: Params, tokens: jax.Array, frames: jax.Array,
 
 def decode_step(params: Params, cache: Params, tokens: jax.Array,
                 cfg: ModelConfig, ctx: Ctx) -> tuple[jax.Array, Params]:
+    """A ``"page_table"`` leaf pages the decoder *self*-attention K/V
+    only; the cross-attention K/V stay per-slot (their length is the
+    fixed encoder extent, not the growing decode position)."""
     pos = cache["pos"]
+    page_table = cache.get("page_table")
     x = L.embed(params["embed"], tokens, ctx)
 
     def body(x, layer):
         lp, lc = layer
         h = L.rms_norm(lp["self_norm"], x, cfg.norm_eps)
-        a, new_kv = L.attention_decode(lp["self_attn"], h, cfg, ctx,
-                                       cache={"k": lc["k"], "v": lc["v"]},
-                                       pos=pos)
+        if page_table is not None:
+            a, new_kv = L.attention_decode_paged(
+                lp["self_attn"], h, cfg, ctx,
+                cache={"k": lc["k"], "v": lc["v"]},
+                page_table=page_table, pos=pos)
+        else:
+            a, new_kv = L.attention_decode(
+                lp["self_attn"], h, cfg, ctx,
+                cache={"k": lc["k"], "v": lc["v"]}, pos=pos)
         x = x + a
         h = L.rms_norm(lp["cross_norm"], x, cfg.norm_eps)
         x = x + _cross_attention(lp["cross_attn"], h, lc["cross_k"],
@@ -230,6 +240,9 @@ def decode_step(params: Params, cache: Params, tokens: jax.Array,
     x, new_kv = jax.lax.scan(body, x, (params["decoder"], lc))
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = L.unembed(params["embed"], x, ctx)
-    return logits, {"k": new_kv["k"], "v": new_kv["v"],
-                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
-                    "pos": pos + 1}
+    out = {"k": new_kv["k"], "v": new_kv["v"],
+           "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+           "pos": pos + 1}
+    if page_table is not None:
+        out["page_table"] = page_table
+    return logits, out

@@ -180,7 +180,10 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
 
 def decode_step(params: Params, cache: Params, tokens: jax.Array,
                 cfg: ModelConfig, ctx: Ctx) -> tuple[jax.Array, Params]:
+    """A ``"page_table"`` leaf pages the shared-block K/V (the conv/ssm
+    state is per-slot O(1) and stays unpaged)."""
     pos = cache["pos"]
+    page_table = cache.get("page_table")
     x0 = L.embed(params["embed"], tokens, ctx)
     sp = params["shared"]
 
@@ -195,9 +198,14 @@ def decode_step(params: Params, cache: Params, tokens: jax.Array,
         x, new_state = jax.lax.scan(
             mamba_body, x, (gp, g_state))
         h = L.linear(sp["pre_proj"], jnp.concatenate([x, x0], axis=-1), ctx)
-        a, new_kv = L.attention_decode(
-            sp["attn"], L.rms_norm(sp["attn_norm"], h, cfg.norm_eps),
-            cfg, ctx, cache=g_kv, pos=pos)
+        hn = L.rms_norm(sp["attn_norm"], h, cfg.norm_eps)
+        if page_table is not None:
+            a, new_kv = L.attention_decode_paged(
+                sp["attn"], hn, cfg, ctx, cache=g_kv,
+                page_table=page_table, pos=pos)
+        else:
+            a, new_kv = L.attention_decode(
+                sp["attn"], hn, cfg, ctx, cache=g_kv, pos=pos)
         h = h + a
         h = h + L.mlp(sp["mlp"], L.rms_norm(sp["mlp_norm"], h, cfg.norm_eps),
                       cfg, ctx)
@@ -210,5 +218,8 @@ def decode_step(params: Params, cache: Params, tokens: jax.Array,
          {"k": cache["k"], "v": cache["v"]}))
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = L.unembed(params["embed"], x, ctx)
-    return logits, {"conv": new_states["conv"], "ssm": new_states["ssm"],
-                    "k": new_kvs["k"], "v": new_kvs["v"], "pos": pos + 1}
+    out = {"conv": new_states["conv"], "ssm": new_states["ssm"],
+           "k": new_kvs["k"], "v": new_kvs["v"], "pos": pos + 1}
+    if page_table is not None:
+        out["page_table"] = page_table
+    return logits, out

@@ -326,18 +326,21 @@ def _seq_shard4(t: jax.Array, ctx: "Ctx | None") -> jax.Array:
         t, NamedSharding(ctx.mesh, P(b_ax, "model", None, None)))
 
 
-def _lengths_mask(S: int, T: int, lengths: jax.Array,
-                  causal: bool) -> jax.Array:
+def _lengths_mask(S: int, T: int, lengths: jax.Array, causal: bool,
+                  offsets: jax.Array | None = None) -> jax.Array:
     """(B, S, T) validity mask for per-sequence valid lengths.
 
-    Positions are absolute indices (query row i == position i), matching
-    the Pallas kernel's variable-length convention."""
+    Positions are absolute indices (query row i == position
+    ``offsets[b] + i``, offsets defaulting to zero), matching the
+    Pallas kernel's variable-length convention."""
     rows = jnp.arange(S)[:, None]
+    if offsets is not None:
+        rows = rows[None] + offsets[:, None, None]       # (B, S, 1)
     cols = jnp.arange(T)[None, :]
     m = ((rows < lengths[:, None, None]) & (cols < lengths[:, None, None]))
     if causal:
         m = m & (rows >= cols)
-    return m
+    return jnp.broadcast_to(m, (lengths.shape[0], S, T))
 
 
 def _attn_config(config, impl: str):
@@ -360,7 +363,8 @@ def _attn_config(config, impl: str):
 
 def _gqa_full(q, k, v, *, causal: bool, impl: str,
               ctx: "Ctx | None" = None, config="auto",
-              lengths: jax.Array | None = None) -> jax.Array:
+              lengths: jax.Array | None = None,
+              q_offset: jax.Array | None = None) -> jax.Array:
     """q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D).
 
     Under a mesh, KV heads are repeated up to H ("merged-head" form) so
@@ -373,10 +377,12 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
 
     ``lengths``: optional (B,) per-sequence valid lengths (ragged
     serving batches); rows/cols at >= length are masked, fully-masked
-    rows produce zeros.  On the Pallas path this stays on the kernel
-    via its length operands; on the jnp path the score mask gains a
-    batch dimension (the chunked variants are skipped — serving
-    prompts are far below the chunk threshold).
+    rows produce zeros.  ``q_offset``: optional (B,) absolute position
+    of query row 0 (chunked prefill — requires ``lengths``).  On the
+    Pallas path this stays on the kernel via its length/offset
+    operands; on the jnp path the score mask gains a batch dimension
+    (the chunked variants are skipped — serving prompts are far below
+    the chunk threshold).
     """
     B, S, H, D = q.shape
     KV = k.shape[2]
@@ -388,7 +394,8 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
         vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
         o = ops.attention(q.transpose(0, 2, 1, 3), kr, vr,
                           config=_attn_config(config, impl), causal=causal,
-                          q_lens=lengths, kv_lens=lengths)
+                          q_lens=lengths, kv_lens=lengths,
+                          q_offsets=q_offset)
         return o.transpose(0, 2, 1, 3)
     # merged-head path (callers gate via _merged_head_plan):
     if ctx is not None and ctx.mesh is not None:
@@ -401,7 +408,7 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
         logits = jnp.einsum("bshd,bthd->bhst", q, kr,
                             preferred_element_type=jnp.float32) * (D ** -0.5)
         if lengths is not None:
-            m = _lengths_mask(S, T, lengths, causal)
+            m = _lengths_mask(S, T, lengths, causal, q_offset)
             logits = jnp.where(m[:, None], logits, -1e30)
         elif causal:
             mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
@@ -419,7 +426,7 @@ def _gqa_full(q, k, v, *, causal: bool, impl: str,
     logits = jnp.einsum("bskrd,btkd->bkrst", qg, k,
                         preferred_element_type=jnp.float32) * (D ** -0.5)
     if lengths is not None:
-        m = _lengths_mask(S, T, lengths, causal)
+        m = _lengths_mask(S, T, lengths, causal, q_offset)
         logits = jnp.where(m[:, None, None], logits, -1e30)
     elif causal:
         mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
@@ -636,6 +643,61 @@ def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     return linear(p["wo"], o, ctx), {"k": ck, "v": cv}
 
 
+def attention_decode_paged(p: Params, x: jax.Array, cfg: ModelConfig,
+                           ctx: Ctx, *, cache: Params,
+                           page_table: jax.Array, pos: jax.Array
+                           ) -> tuple[jax.Array, Params]:
+    """One-token decode against a *paged* KV pool.
+
+    x: (B, 1, d); cache: {"k": (P, ps, KV, D), "v": ...} — the shared
+    page pool (P physical pages of ps tokens); page_table: (B, T)
+    int32 logical->physical page map; pos: (B,) or scalar write index.
+
+    The new token's K/V are scattered into the page holding position
+    ``pos`` (slots past their allocation clip into the trash page their
+    table points at).  The jnp path then gathers the table back into a
+    contiguous (B, T*ps, KV, D) view and reuses :func:`attention_decode`'s
+    exact masked-einsum math — same shapes, same reduction order, so a
+    paged engine is *bitwise* equal to the unpaged one on this backend
+    (garbage positions mask to exact -1e30 in both).  The
+    pallas/interpret path instead runs :func:`repro.kernels.ops.paged_attention`,
+    whose BlockSpec page gather never materializes the contiguous copy.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, ctx)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    q = rope(q, pos_b[:, None], cfg.rope_theta)
+    k = rope(k, pos_b[:, None], cfg.rope_theta)
+    ck = _scatter_paged(cache["k"], k, page_table, pos_b)
+    cv = _scatter_paged(cache["v"], v, page_table, pos_b)
+    KV = ck.shape[2]
+    rep = cfg.n_heads // KV
+    impl = ops.resolve_impl(ctx.plan.backend)
+    if impl in ("pallas", "interpret"):
+        o = ops.paged_attention(
+            q.reshape(B, cfg.n_heads, hd), ck, cv, page_table,
+            kv_lens=pos_b + 1, config=_attn_config(ctx.plan, impl),
+            scale=hd ** -0.5)
+        o = o.reshape(B, 1, cfg.n_heads * hd)
+        return linear(p["wo"], o, ctx), {"k": ck, "v": cv}
+    ps = ck.shape[1]
+    T = page_table.shape[1]
+    kg = ck[page_table].reshape(B, T * ps, KV, hd)
+    vg = cv[page_table].reshape(B, T * ps, KV, hd)
+    qg = q.reshape(B, 1, KV, rep, hd)
+    # identical math to attention_decode (see the dtype note there)
+    scores = jnp.einsum("bskrd,btkd->bkrst", qg, kg)
+    logits = scores.astype(jnp.float32) * (hd ** -0.5)
+    t_idx = jnp.arange(T * ps)
+    mask = t_idx[None, :] <= pos_b[:, None]
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrst,btkd->bskrd", probs.astype(vg.dtype), vg)
+    o = o.reshape(B, 1, cfg.n_heads * hd)
+    return linear(p["wo"], o, ctx), {"k": ck, "v": cv}
+
+
 def attention_decode_quantized(p: Params, x: jax.Array, cfg: ModelConfig,
                                ctx: Ctx, *, cache: Params, pos: jax.Array
                                ) -> tuple[jax.Array, Params]:
@@ -688,6 +750,24 @@ def attention_decode_quantized(p: Params, x: jax.Array, cfg: ModelConfig,
     o = o.reshape(B, 1, cfg.n_heads * hd)
     out = linear(p["wo"], o, ctx)
     return out, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+
+
+def _scatter_paged(pool: jax.Array, new: jax.Array, page_table: jax.Array,
+                   pos: jax.Array) -> jax.Array:
+    """pool: (P, ps, KV, D); new: (B, 1, KV, D); write row b's token at
+    sequence position ``pos[b]`` through its page table.
+
+    The page index clips to the table length, so a slot decoding past
+    its allocation lands on whatever its table's last entry points at —
+    for retired/overflowing slots that is the trash page (id 0), whose
+    contents are never read unmasked.  Duplicate trash writes across
+    rows are fine for the same reason."""
+    ps = pool.shape[1]
+    T = page_table.shape[1]
+    pos = pos.astype(jnp.int32)
+    idx = jnp.clip(pos // ps, 0, T - 1)
+    pids = jnp.take_along_axis(page_table, idx[:, None], axis=1)[:, 0]
+    return pool.at[pids, pos % ps].set(new[:, 0].astype(pool.dtype))
 
 
 def _scatter_at(c: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:

@@ -64,6 +64,11 @@ class Model:
     # one generic walk covers all five families (weight layout is
     # uniform); a dataclass default, so build_model stays per-family-free
     quantize_weights: Callable[..., Params] = _quantize_weights
+    # incremental prompt ingestion (chunked prefill): (params, tokens,
+    # ctx, *, cache, offset, lengths) -> (logits, cache).  Only the
+    # pure-attention families support it (None elsewhere): SSM/hybrid
+    # conv state and MoE batch-global routing are not chunk-invariant.
+    prefill_chunk: Callable[..., tuple] | None = None
 
 
 def _moe_mlp_fn(cfg: ModelConfig, ctx: Ctx):
@@ -91,6 +96,12 @@ def build_model(cfg: ModelConfig) -> Model:
                 lengths=batch.get("lengths"),
                 frontend_embeds=batch.get("frontend_embeds"))
 
+        def prefill_chunk_fn(params, tokens, ctx, *, cache, offset,
+                             lengths):
+            return transformer.prefill_chunk(
+                params, tokens, cfg, ctx, cache=cache, offset=offset,
+                lengths=lengths)
+
         return Model(
             cfg=cfg,
             init=functools.partial(transformer.init_params, cfg=cfg),
@@ -100,6 +111,7 @@ def build_model(cfg: ModelConfig) -> Model:
                 params, cache, tokens, cfg, ctx),
             prefill_logits=prefill_logits,
             prefill=prefill_fn,
+            prefill_chunk=prefill_chunk_fn,
         )
 
     if fam == "moe":

@@ -19,7 +19,7 @@ from repro.models import layers as L
 from repro.models.layers import Ctx, Params
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
-           "decode_step", "remat_policy"]
+           "prefill_chunk", "decode_step", "remat_policy"]
 
 
 def remat_policy(cfg: ModelConfig):
@@ -156,9 +156,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def _layer_decode(cfg: ModelConfig, ctx: Ctx, mlp_fn: Callable | None,
                   x: jax.Array, lp: Params, layer_cache: Params,
-                  pos: jax.Array) -> tuple[jax.Array, Params]:
+                  pos: jax.Array, page_table: jax.Array | None = None
+                  ) -> tuple[jax.Array, Params]:
     h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
-    if "k_scale" in layer_cache:
+    if page_table is not None:
+        a, new_cache = L.attention_decode_paged(
+            lp["attn"], h, cfg, ctx, cache=layer_cache,
+            page_table=page_table, pos=pos)
+    elif "k_scale" in layer_cache:
         a, new_cache = L.attention_decode_quantized(
             lp["attn"], h, cfg, ctx, cache=layer_cache, pos=pos)
     else:
@@ -175,20 +180,32 @@ def decode_step(params: Params, cache: Params, tokens: jax.Array,
                 cfg: ModelConfig, ctx: Ctx,
                 *, mlp_fn: Callable | None = None
                 ) -> tuple[jax.Array, Params]:
-    """tokens: (B, 1) -> (logits (B, 1, V), updated cache)."""
+    """tokens: (B, 1) -> (logits (B, 1, V), updated cache).
+
+    A ``"page_table"`` leaf switches the attention path to the paged KV
+    pool (:func:`repro.models.layers.attention_decode_paged`); the table
+    rides outside the layer scan like ``"pos"`` and passes through
+    unchanged (the engine rewrites it on admission/retire).
+    """
     pos = cache["pos"]
+    page_table = cache.get("page_table")
     x = L.embed(params["embed"], tokens, ctx)
 
     def scan_body(x, layer):
         lp, lc = layer
-        x, new_lc = _layer_decode(cfg, ctx, mlp_fn, x, lp, lc, pos)
+        x, new_lc = _layer_decode(cfg, ctx, mlp_fn, x, lp, lc, pos,
+                                  page_table)
         return x, new_lc
 
-    lc = {k: v for k, v in cache.items() if k != "pos"}
+    lc = {k: v for k, v in cache.items()
+          if k not in ("pos", "page_table")}
     x, new_kv = jax.lax.scan(scan_body, x, (params["layers"], lc))
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = L.unembed(params["embed"], x, ctx)
-    return logits, {**new_kv, "pos": pos + 1}
+    out = {**new_kv, "pos": pos + 1}
+    if page_table is not None:
+        out["page_table"] = page_table
+    return logits, out
 
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
@@ -256,3 +273,64 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx,
         "pos": pos,
     }
     return logits, cache
+
+
+def prefill_chunk(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                  ctx: Ctx, *, cache: Params, offset: jax.Array,
+                  lengths: jax.Array, mlp_fn: Callable | None = None
+                  ) -> tuple[jax.Array, Params]:
+    """Process one chunk of a long prompt against a KV stripe in place.
+
+    The anti-head-of-line half of paged serving: instead of one fused
+    :func:`prefill` that stalls admission for everyone behind a long
+    prompt, the engine feeds the prompt through this in fixed-size
+    chunks *between* decode dispatches.  tokens: (B, C) — the chunk,
+    zero-padded on the last call; cache: a contiguous
+    ``init_cache(B, max_len)`` stripe (the engine pages it on final
+    insertion); ``offset``: scalar absolute position of chunk row 0;
+    ``lengths``: (B,) absolute valid end after this chunk
+    (``<= offset + C``; strictly less only on the final, padded chunk).
+
+    Each chunk's K/V are written into the stripe at ``offset`` and its
+    queries attend to the whole stripe with ``q_offsets`` shifting the
+    causal frontier — the same absolute-position masking the flash
+    kernel already does for ragged batches, so chunked prefill stays on
+    the Pallas path.  Returns per-row logits at ``lengths - 1`` (only
+    meaningful on the final chunk) and the updated stripe with
+    ``pos = lengths``, exactly the contract of :func:`prefill`.
+    """
+    x = L.embed(params["embed"], tokens, ctx)
+    B, C, _ = x.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
+    off_b = jnp.broadcast_to(offset, (B,))
+    positions = off_b[:, None] + jnp.arange(C)[None, :]
+    hd = cfg.resolved_head_dim
+    zero = jnp.zeros((), jnp.int32)
+
+    def scan_body(x, layer):
+        lp, lc = layer
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], h, cfg, ctx)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(
+            lc["k"], k.astype(lc["k"].dtype), (zero, offset, zero, zero))
+        cv = jax.lax.dynamic_update_slice(
+            lc["v"], v.astype(lc["v"].dtype), (zero, offset, zero, zero))
+        o = L._gqa_full(q, ck, cv, causal=True,
+                        impl=L.ops.resolve_impl(ctx.plan.backend), ctx=ctx,
+                        config=ctx.plan, lengths=lens, q_offset=off_b)
+        x = x + L.linear(lp["attn"]["wo"],
+                         o.reshape(B, C, cfg.n_heads * hd), ctx)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        fn = mlp_fn or (lambda p, v_: (L.mlp(p, v_, cfg, ctx), 0.0))
+        y, _ = fn(lp["mlp"], h)
+        return x + y, {"k": ck, "v": cv}
+
+    lc = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_kv = jax.lax.scan(scan_body, x, (params["layers"], lc))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    x_last = L.gather_last(x, lens - off_b)
+    logits = L.unembed(params["embed"], x_last, ctx)
+    return logits, {**new_kv, "pos": lens}

@@ -43,6 +43,17 @@ rid) and independent of batch composition and block size: a request's
 sample chain advances exactly once per emitted token.  MoE routing is
 batch-global (capacity competition), so MoE serves correctly but is
 not bit-matched to a differently-composed batch.
+
+Paged mode (``page_size=...``) replaces the contiguous per-slot cache
+stripes with a device-resident page pool plus per-slot page tables
+(:mod:`repro.serve.paging`): admission allocates just the pages a
+request needs, identical prompt prefixes share pages copy-on-write via
+a refcounted prefix cache, and decode attention walks the table either
+through a jnp gather or the dedicated Pallas kernel
+(:func:`repro.kernels.paged_attention.paged_attention`).  The
+determinism contract carries over unchanged — on the jnp backend the
+paged gather reproduces the contiguous math bit-for-bit, so paged
+serving matches :func:`lockstep_generate` token-for-token too.
 """
 
 from __future__ import annotations
@@ -57,10 +68,18 @@ import numpy as np
 
 from repro import obs
 from repro.serve import sampling
+from repro.serve.paging import (TRASH_PAGE, OutOfPages, PageAllocator,
+                                PageGeometry, PrefixCache)
 from repro.serve.request import GenerationResult, Request, SlotState
 from repro.serve.stats import EngineStats
 
 __all__ = ["ServeEngine", "lockstep_generate"]
+
+# families whose prefill K/V at position i depends only on tokens <= i
+# AND is batch-composition independent — the prefix-sharing soundness
+# bar.  MoE is out (routing competes batch-globally), encdec is out
+# (every position also depends on the source frames).
+_SHARE_FAMILIES = ("dense", "vlm", "hybrid")
 
 
 def _host(x) -> np.ndarray:
@@ -138,7 +157,25 @@ class ServeEngine:
         plan at load time — error-level diagnostics (slot-reuse
         hazards, int8-in-int8 accumulation, over-budget tiles) raise
         ``ValueError`` before any request is admitted; warnings are
-        reported as a ``RuntimeWarning``.
+        reported as a ``RuntimeWarning``.  With ``page_size`` set, the
+        page geometry is linted too (:func:`repro.analyze.
+        lint_page_geometry`, rules ZS-L008/ZS-S008).
+    page_size : tokens per KV page.  ``None`` (default) keeps the
+        contiguous per-slot cache bit-for-bit; an int switches the
+        sequence-extent cache leaves to a device-resident page pool
+        with per-slot page tables, refcounted prefix sharing and
+        copy-on-write semantics (see :mod:`repro.serve.paging`).  Must
+        divide ``max_len``.
+    num_pages : physical pool size including the reserved trash page 0;
+        defaults to ``num_slots * (max_len // page_size) + 1`` (zero
+        memory saving, full correctness).  Smaller pools oversubscribe:
+        admission falls back to LRU prefix-cache eviction, then to
+        requeueing the request until a decode retires.
+    prefill_chunk : when set, prompts longer than this are ingested
+        ``prefill_chunk`` tokens per engine step (one chunk between
+        decode dispatches) instead of one monolithic prefill, bounding
+        the head-of-line TTFT penalty a long prompt imposes on queued
+        short requests.  Requires ``Model.prefill_chunk`` (dense/vlm).
     """
 
     def __init__(self, model, params, ctx, *, num_slots: int = 4,
@@ -147,7 +184,10 @@ class ServeEngine:
                  bucket_sizes: Sequence[int] | None = None,
                  eos_id: int | None = None, seed: int = 0,
                  cache_kwargs: dict | None = None,
-                 plan=None, validate: bool = False):
+                 plan=None, validate: bool = False,
+                 page_size: int | None = None,
+                 num_pages: int | None = None,
+                 prefill_chunk: int | None = None):
         self.model = model
         self.params = params
         self.num_slots = int(num_slots)
@@ -158,6 +198,11 @@ class ServeEngine:
                 f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
         self.eos_id = eos_id
         self.seed = int(seed)
+        self.page_size = None if page_size is None else int(page_size)
+        self._chunk = None if prefill_chunk is None else int(prefill_chunk)
+        if self._chunk is not None and self._chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
         kw = dict(cache_kwargs or {})
 
         if bucket_sizes is None:
@@ -186,9 +231,35 @@ class ServeEngine:
         c1 = jax.eval_shape(lambda: probe(1))
         c2 = jax.eval_shape(lambda: probe(2))
         self._axes = _batch_axes(c1, c2)
-        self.cache = _vector_pos(
-            model.init_cache(self.num_slots, max_len, cache_dtype, **kw),
-            self.num_slots)
+
+        self._geom: PageGeometry | None = None
+        self._pages_active = False
+        if self.page_size is not None:
+            self._init_paging(model, kw, cache_dtype, num_pages, probe)
+        else:
+            self.cache = _vector_pos(
+                model.init_cache(self.num_slots, max_len, cache_dtype, **kw),
+                self.num_slots)
+        if validate and self._geom is not None:
+            self._validate_pages()
+
+        # chunked prefill: long prompts admitted one fixed-size chunk
+        # per engine step instead of one monolithic prefill, so queued
+        # short requests and active decodes are never head-of-line
+        # blocked behind a long prompt
+        self._chunking: dict[int, dict] = {}
+        if self._chunk is not None:
+            if model.prefill_chunk is None:
+                raise ValueError(
+                    f"family {model.cfg.family!r} does not support chunked "
+                    "prefill (Model.prefill_chunk is None: its prompt state "
+                    "is not chunk-invariant)")
+            self._prefill_chunk_fn: Callable = jax.jit(
+                lambda p, toks, cache, off, lens: model.prefill_chunk(
+                    p, toks, ctx, cache=cache, offset=off, lengths=lens),
+                donate_argnums=(2,))
+            self._chunk_cache_init = lambda: _vector_pos(
+                model.init_cache(1, max_len, cache_dtype, **kw), 1)
 
         # two static block specializations: an all-greedy slot pool
         # (the default, and the determinism-contract path) never pays
@@ -333,12 +404,142 @@ class ServeEngine:
                 + "\n".join(d.format() for d in report.warnings),
                 RuntimeWarning, stacklevel=3)
 
+    # -- paged KV cache ------------------------------------------------
+    def _init_paging(self, model, kw: dict, cache_dtype, num_pages,
+                     probe) -> None:
+        """Replace the contiguous per-slot cache with a page pool.
+
+        Which leaves page is *probed*, not hard-coded: grow ``max_len``
+        by one page and see which leaf shapes move — a leaf that grows
+        by exactly ``page_size`` on the axis right of its batch axis is
+        sequence-extent KV and becomes a ``(num_pages, page_size, ...)``
+        pool; everything else (SSM/conv state, cross-attention K/V,
+        ``pos``) keeps its per-slot form.  A family with no pageable
+        leaves (pure SSM) degrades to the contiguous engine with zero
+        page gauges.
+        """
+        ps = self.page_size
+        if self.max_len % ps:
+            raise ValueError(
+                f"page_size {ps} must divide max_len {self.max_len}")
+        if kw.get("quantize_kv"):
+            raise ValueError("paged serving does not support quantize_kv "
+                             "(int8 page pools are not implemented)")
+        if model.cfg.family == "encdec" and "enc_len" not in kw:
+            raise ValueError(
+                "paged encdec serving requires an explicit enc_len in "
+                "cache_kwargs: with enc_len defaulting to max_len the "
+                "fixed cross-attention extent would probe as a pageable "
+                "sequence axis")
+        T = self.max_len // ps
+        if num_pages is None:
+            num_pages = self.num_slots * T + 1   # +1: reserved trash page
+
+        def probe_len(ml):
+            return _vector_pos(
+                model.init_cache(1, ml, cache_dtype, **kw), 1)
+        cA = jax.eval_shape(lambda: probe_len(self.max_len))
+        cB = jax.eval_shape(lambda: probe_len(self.max_len + ps))
+
+        def page_axis(a, b, bax):
+            diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                     if x != y]
+            if not diffs:
+                return -1
+            if diffs != [bax + 1] or b.shape[bax + 1] - a.shape[bax + 1] != ps:
+                raise ValueError(
+                    f"cannot page cache leaf: shapes {a.shape} vs {b.shape} "
+                    f"(expected growth of {ps} on axis {bax + 1})")
+            return bax + 1
+        self._paged = jax.tree.map(page_axis, cA, cB, self._axes)
+        self._pages_active = any(
+            p >= 0 for p in jax.tree.leaves(self._paged))
+        self._geom = PageGeometry(ps, int(num_pages), T)
+        self._alloc = PageAllocator(self._geom)
+        self._prefix = PrefixCache(self._alloc)
+        self._slot_pages: list[list[int]] = [[] for _ in range(self.num_slots)]
+
+        cS = jax.eval_shape(lambda: probe(self.num_slots))
+
+        def build(leaf, bax, pax):
+            if pax < 0:
+                return jnp.zeros(leaf.shape, leaf.dtype)
+            shape = list(leaf.shape)
+            shape[bax] = self._geom.num_pages
+            shape[pax] = ps
+            return jnp.zeros(shape, leaf.dtype)
+        cache = jax.tree.map(build, cS, self._axes, self._paged)
+        if self._pages_active:
+            # all-zeros table: every slot starts parked on the trash page
+            cache["page_table"] = jnp.zeros((self.num_slots, T), jnp.int32)
+            self._insert_paged: Callable = jax.jit(
+                self._build_paged_insert(), donate_argnums=(0,))
+        self.cache = cache
+
+    def _build_paged_insert(self):
+        """One jitted slot insertion for the paged cache: paged leaves
+        of the contiguous prefill stripe are split into pages and
+        scattered into the pool at ``write_ids`` (physical page per
+        logical page; ``TRASH_PAGE`` for shared prefix hits — their
+        pages already hold the values and must not be rewritten — and
+        for unallocated tail positions), the slot's device table row
+        becomes ``table_ids``, and non-paged leaves take the usual
+        per-leaf dynamic-update-slice."""
+        axes, paged = self._axes, self._paged
+        T, ps = self._geom.table_len, self._geom.page_size
+
+        def insert(cache, cache1, slot, write_ids, table_ids):
+            def ins(dst, src, bax, pax):
+                if pax < 0:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        dst, src.astype(dst.dtype), slot, axis=bax)
+                s = jnp.squeeze(src, axis=bax)
+                s = s.reshape(s.shape[:bax] + (T, ps) + s.shape[bax + 1:])
+                s = jnp.moveaxis(s, bax, 0)       # (T, ..., ps, ...)
+                d = jnp.moveaxis(dst, bax, 0)     # (P, ..., ps, ...)
+                d = d.at[write_ids].set(s.astype(d.dtype))
+                return jnp.moveaxis(d, 0, bax)
+
+            body = {k: v for k, v in cache.items() if k != "page_table"}
+            out = jax.tree.map(ins, body, cache1, axes, paged)
+            out["page_table"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["page_table"], table_ids[None], slot, axis=0)
+            return out
+        return insert
+
+    def _validate_pages(self) -> None:
+        """Load-time page-geometry verification (``validate=True``):
+        :func:`repro.analyze.lint_page_geometry` rejects a page size
+        that does not tile the plan's attention KV blocks (ZS-L008) or
+        a table too short for ``max_len`` (ZS-S008)."""
+        from repro.analyze import lint_page_geometry
+        from repro.plan import Plan
+        plan = self.plan if isinstance(self.plan, Plan) else None
+        report = lint_page_geometry(self._geom.page_size,
+                                    self._geom.table_len,
+                                    max_len=self.max_len, plan=plan)
+        if report.errors:
+            raise ValueError(
+                "ServeEngine(validate=True): page geometry failed static "
+                "analysis:\n" + "\n".join(d.format() for d in report.errors))
+
     # ------------------------------------------------------------------
     def submit(self, request: Request) -> None:
-        budget = len(request.prompt) + request.max_new_tokens
+        n_prompt = len(request.prompt)
         if request.frontend_embeds is not None \
                 and self.model.cfg.family != "encdec":
-            budget += np.asarray(request.frontend_embeds).shape[0]
+            n_prompt += np.asarray(request.frontend_embeds).shape[0]
+        budget = n_prompt + request.max_new_tokens
+        if self._geom is not None:
+            # checked before the budget: a prompt that cannot even be
+            # *stored* gets the structural error, not the generic one
+            cap = self._geom.table_len * self._geom.page_size
+            if n_prompt > cap:
+                raise ValueError(
+                    f"request {request.rid}: prompt ({n_prompt} tokens) "
+                    f"alone exceeds the page-table capacity {cap} "
+                    f"({self._geom.table_len} pages x "
+                    f"{self._geom.page_size} tokens/page)")
         if budget > self.max_len:
             raise ValueError(f"request {request.rid}: prompt + generation "
                              f"({budget}) exceeds max_len {self.max_len}")
@@ -355,7 +556,8 @@ class ServeEngine:
 
     @property
     def idle(self) -> bool:
-        return not self._pending and all(s is None for s in self._slots)
+        return (not self._pending and not self._chunking
+                and all(s is None for s in self._slots))
 
     # ------------------------------------------------------------------
     def _bucket(self, n: int, limit: int) -> int:
@@ -376,7 +578,11 @@ class ServeEngine:
         return jax.random.key_data(key).astype(jnp.uint32)
 
     def _admit(self, req: Request, slot: int) -> int:
-        """Fused prefill into ``slot``; returns the first sampled token."""
+        """Fused prefill into ``slot``; returns the first sampled token.
+
+        Raises :class:`OutOfPages` (paged mode, pool exhausted even
+        after prefix-cache eviction) *before* any engine state mutates,
+        so the caller can requeue the request cleanly."""
         n = len(req.prompt)
         n_front = 0
         if req.frontend_embeds is not None \
@@ -390,10 +596,13 @@ class ServeEngine:
         if req.frontend_embeds is not None:
             batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds)[None]
         logits, cache1 = self._prefill(self.params, batch)
+        self._install(req, slot, cache1, n + n_front)
+        return self._first_token(req, slot, logits)
 
-        # the request's first token is sampled from the prefill logits
-        # with its own knobs/seed — one sync per admission (prefill is
-        # per-request anyway); the advanced key parks in the slot row
+    def _first_token(self, req: Request, slot: int, logits) -> int:
+        """Sample the request's first token from its prefill logits
+        with its own knobs/seed — one sync per admission (prefill is
+        per-request anyway); the advanced key parks in the slot row."""
         key = self._request_key(req)
         new_key, tok_arr = self._sample1(
             logits[:, -1], key[None],
@@ -405,13 +614,74 @@ class ServeEngine:
         self._temp[slot] = req.temperature
         self._topk[slot] = req.top_k
         self._topp[slot] = req.top_p
-
-        def insert(dst, src, ax):
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), slot, axis=ax)
-
-        self.cache = jax.tree.map(insert, self.cache, cache1, self._axes)
         return tok
+
+    def _install(self, req: Request, slot: int, cache1, n_prompt: int
+                 ) -> None:
+        """Insert a prefilled (batch-1, contiguous) cache into ``slot``.
+
+        Contiguous mode: per-leaf dynamic-update-slice.  Paged mode:
+        retain any published prefix pages, allocate the rest (evicting
+        cold prefixes under pressure), scatter the stripe's pages into
+        the pool, write the slot's table row, and publish this prompt's
+        full pages for future sharing."""
+        if self._geom is None or not self._pages_active:
+            def insert(dst, src, ax):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), slot, axis=ax)
+            self.cache = jax.tree.map(insert, self.cache, cache1,
+                                      self._axes)
+            return
+
+        geom = self._geom
+        n_reserve = min(n_prompt + req.max_new_tokens, self.max_len)
+        t_alloc = geom.pages_for(n_reserve)
+        share = (self.model.cfg.family in _SHARE_FAMILIES
+                 and req.frontend_embeds is None)
+        shared: list[int] = []
+        if share:
+            _, shared = self._prefix.lookup(req.prompt)
+            shared = shared[:t_alloc]
+            # hold the hits before allocating: eviction under pressure
+            # must not recycle the very pages this admission is reusing
+            for p in shared:
+                self._alloc.retain(p)
+        try:
+            own = self._alloc_pages(t_alloc - len(shared))
+        except OutOfPages:
+            self._alloc.release_all(shared)
+            raise
+        pages = shared + own
+        write_ids = np.full((geom.table_len,), TRASH_PAGE, np.int32)
+        table_ids = np.full((geom.table_len,), TRASH_PAGE, np.int32)
+        table_ids[:t_alloc] = pages
+        write_ids[len(shared):t_alloc] = pages[len(shared):]
+        self.cache = self._insert_paged(
+            self.cache, cache1, slot,
+            jnp.asarray(write_ids), jnp.asarray(table_ids))
+        self._slot_pages[slot] = pages
+        if share:
+            self._prefix.publish(req.prompt, pages)
+        self._page_gauges()
+
+    def _alloc_pages(self, n: int) -> list[int]:
+        """Atomic n-page allocation, evicting LRU prefix entries on
+        pressure; raises :class:`OutOfPages` only once the prefix cache
+        is empty too."""
+        while True:
+            try:
+                return self._alloc.alloc(n)
+            except OutOfPages:
+                if not self._prefix.evict_lru():
+                    raise
+
+    def _page_gauges(self) -> None:
+        s = self.stats
+        s.pages_in_use = max(s.pages_in_use, self._alloc.in_use)
+        counts = collections.Counter(
+            p for pages in self._slot_pages for p in pages)
+        s.pages_shared = max(
+            s.pages_shared, sum(1 for c in counts.values() if c >= 2))
 
     def _retire(self, slot: int) -> None:
         st = self._slots[slot]
@@ -422,12 +692,91 @@ class ServeEngine:
             ttft_s=st.ttft_s)
         self._slots[slot] = None
         self.stats.retired += 1
+        if self._pages_active and self._slot_pages[slot]:
+            # order matters: point the device table row at the trash
+            # page FIRST, then release the host refs — a freed page can
+            # be re-allocated immediately, and the retired row's frozen
+            # decode writes in the next block must land in trash, never
+            # in a page that now belongs to another request
+            self.cache["page_table"] = \
+                self.cache["page_table"].at[slot].set(TRASH_PAGE)
+            self._alloc.release_all(self._slot_pages[slot])
+            self._slot_pages[slot] = []
         obs.event("serve.retire", rid=st.request.rid, slot=slot,
                   tokens=len(st.tokens), steps=self._step - st.admitted_step)
 
     def _done(self, st: SlotState, tok: int) -> bool:
         return (len(st.tokens) >= st.request.max_new_tokens
                 or (self.eos_id is not None and tok == self.eos_id))
+
+    # -- chunked prefill -----------------------------------------------
+    def _chunkable(self, req: Request) -> bool:
+        return (self._chunk is not None
+                and req.frontend_embeds is None
+                and len(req.prompt) > self._chunk)
+
+    def _start_chunking(self, req: Request, slot: int, queue_wait: float,
+                        t_submit: float) -> None:
+        """Park ``req`` in ``slot`` as an in-flight chunked admission:
+        the prompt is ingested ``prefill_chunk`` tokens per engine step
+        against a private contiguous stripe, which is installed into
+        the shared cache only when the last chunk lands."""
+        self._chunking[slot] = {
+            "req": req, "off": 0, "n": len(req.prompt),
+            "cache": self._chunk_cache_init(),
+            "queue_wait": queue_wait, "t_submit": t_submit,
+        }
+
+    def _advance_chunk(self, slot: int) -> list[tuple[int, int]]:
+        """Ingest one more chunk for the admission parked in ``slot``;
+        on the final chunk, install the stripe, sample the first token
+        and activate the slot.  Returns the streamed events (empty
+        until the first token)."""
+        st = self._chunking[slot]
+        req: Request = st["req"]
+        if "logits" not in st:
+            off, n = st["off"], st["n"]
+            end = min(off + self._chunk, n)
+            toks = np.zeros((1, self._chunk), np.int32)
+            toks[0, :end - off] = req.prompt[off:end]
+            t0 = _now()
+            with obs.span("serve.prefill_chunk", rid=req.rid, slot=slot,
+                          step=self._step, offset=off, end=end):
+                logits, st["cache"] = self._prefill_chunk_fn(
+                    self.params, jnp.asarray(toks), st["cache"],
+                    jnp.asarray(off, jnp.int32),
+                    jnp.asarray([end], jnp.int32))
+            dt = _now() - t0
+            self.stats.prefill_s += dt
+            self.stats.prefill_chunks += 1
+            self._last_prefill_s = max(self._last_prefill_s, dt)
+            st["off"] = end
+            if end < n:
+                return []
+            st["logits"] = logits
+        try:
+            self._install(req, slot, st["cache"], st["n"])
+        except OutOfPages:
+            # the stripe is complete but the pool is full: keep the
+            # parked state and retry next step once decodes retire —
+            # unless nothing is active to ever free a page
+            if not any(s is not None for s in self._slots):
+                raise
+            return []
+        tok = self._first_token(req, slot, st["logits"])
+        del self._chunking[slot]
+        self.stats.prefill_tokens += st["n"]
+        self.stats.admitted += 1
+        ttft = _now() - st["t_submit"]
+        self.stats.queue_wait_s.append(st["queue_wait"])
+        self.stats.ttft_s.append(ttft)
+        slot_st = SlotState(request=req, tokens=[tok], next_token=tok,
+                            admitted_step=self._step,
+                            queue_wait_s=st["queue_wait"], ttft_s=ttft)
+        self._slots[slot] = slot_st
+        if self._done(slot_st, tok):
+            self._retire(slot)
+        return [(req.rid, tok)]
 
     # ------------------------------------------------------------------
     def step(self) -> list[tuple[int, int]]:
@@ -439,15 +788,35 @@ class ServeEngine:
         self._last_prefill_s = 0.0
         self._last_dispatch_s = 0.0
 
+        # in-flight chunked admissions first: one chunk each per step,
+        # interleaved between decode dispatches, so a long prompt never
+        # head-of-line blocks the slots that are already decoding
+        for slot in sorted(self._chunking):
+            events.extend(self._advance_chunk(slot))
+
+        blocked = False
         for slot in range(self.num_slots):
-            if self._slots[slot] is not None or not self._pending:
+            if (self._slots[slot] is not None or slot in self._chunking
+                    or not self._pending):
                 continue
             req = self._pending.popleft()
             t0 = _now()
             queue_wait = t0 - self._submit_t.pop(req.rid, t0)
-            with obs.span("serve.admit", rid=req.rid, slot=slot,
-                          step=self._step, prompt_len=len(req.prompt)):
-                tok = self._admit(req, slot)
+            if self._chunkable(req):
+                self._start_chunking(req, slot, queue_wait, t0 - queue_wait)
+                events.extend(self._advance_chunk(slot))
+                continue
+            try:
+                with obs.span("serve.admit", rid=req.rid, slot=slot,
+                              step=self._step, prompt_len=len(req.prompt)):
+                    tok = self._admit(req, slot)
+            except OutOfPages:
+                # pool exhausted: requeue at the front and stop
+                # admitting — active slots will retire and free pages
+                self._submit_t[req.rid] = t0 - queue_wait
+                self._pending.appendleft(req)
+                blocked = True
+                break
             t1 = _now()
             dt = t1 - t0
             self.stats.prefill_s += dt
@@ -468,6 +837,12 @@ class ServeEngine:
                 self._retire(slot)
 
         active = [i for i, s in enumerate(self._slots) if s is not None]
+        if blocked and not active and not self._chunking:
+            raise OutOfPages(
+                f"page pool exhausted: request {self._pending[0].rid} "
+                f"cannot be admitted and no active request remains to "
+                f"free pages (pool: {self._geom.usable_pages} usable "
+                f"pages of {self._geom.page_size} tokens)")
         self.stats.max_concurrent = max(self.stats.max_concurrent,
                                         len(active))
         if not active:

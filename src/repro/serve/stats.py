@@ -59,6 +59,13 @@ class EngineStats:
     retired: int = 0
     max_concurrent: int = 0
 
+    # paged-KV gauges (peak values; stay 0 when the engine runs the
+    # contiguous per-slot cache).  Deliberately NOT in _LEGACY_KEYS:
+    # the deprecation shim serves exactly the original dict's keys.
+    pages_in_use: int = 0
+    pages_shared: int = 0
+    prefill_chunks: int = 0
+
     # per-request / per-dispatch samples
     ttft_s: list[float] = field(default_factory=list)
     queue_wait_s: list[float] = field(default_factory=list)
@@ -100,6 +107,9 @@ class EngineStats:
             "prefill_tok_s": self.prefill_tok_s,
             "decode_tok_s": self.decode_tok_s,
             "mean_dispatch_occupancy": self.mean_dispatch_occupancy,
+            "pages_in_use": self.pages_in_use,
+            "pages_shared": self.pages_shared,
+            "prefill_chunks": self.prefill_chunks,
         })
         out.update(self.latency_summary())
         return out

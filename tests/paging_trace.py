@@ -1,0 +1,98 @@
+"""Shared trace interpreter for the paged-KV allocator tests.
+
+Interprets random op traces against a :class:`PageAllocator` +
+:class:`PrefixCache` pair exactly the way the engine drives them
+(retain-before-alloc on shared hits, LRU eviction under pressure,
+release-all at retire), asserting the refcount/ledger invariants
+after every step.  Used by both the always-on seeded sweep in
+``test_paging.py`` and the hypothesis property suite in
+``test_paging_props.py``.
+"""
+
+from repro.serve.paging import (TRASH_PAGE, OutOfPages, PageAllocator,
+                                PageGeometry, PrefixCache)
+
+
+def check_invariants(alloc: PageAllocator, prefix: PrefixCache,
+                     slots: dict) -> None:
+    """The refcount/ledger invariants, asserted after every trace step."""
+    g = alloc.geometry
+    # conservation: every usable page is either free or allocated
+    assert alloc.in_use + alloc.free_count == g.usable_pages
+    # refcount == live references (slot tables + prefix entries,
+    # counting multiplicity across entries)
+    refs: dict[int, int] = {}
+    for pages in slots.values():
+        for p in pages:
+            refs[p] = refs.get(p, 0) + 1
+    for pages in prefix._entries.values():
+        for p in pages:
+            refs[p] = refs.get(p, 0) + 1
+    for p in range(1, g.num_pages):
+        assert alloc.refcount(p) == refs.get(p, 0), (
+            f"page {p}: refcount {alloc.refcount(p)} != "
+            f"{refs.get(p, 0)} live references")
+    # the trash page is never handed out
+    assert TRASH_PAGE not in refs
+    assert alloc.refcount(TRASH_PAGE) == 0
+
+
+def run_trace(ops, num_pages: int) -> None:
+    """Interpret one ``(kind, a, b)`` op trace; asserts invariants
+    after every step and a leak-free drain at the end."""
+    g = PageGeometry(page_size=2, num_pages=num_pages, table_len=8)
+    alloc = PageAllocator(g)
+    prefix = PrefixCache(alloc)
+    slots: dict[int, list[int]] = {}
+    prompts: dict[int, tuple[int, ...]] = {}
+    state = {"next_slot": 0}
+
+    def admit(prompt, n_pages):
+        covered, shared = prefix.lookup(prompt)
+        shared = shared[:n_pages]
+        for p in shared:
+            alloc.retain(p)
+        try:
+            while True:
+                try:
+                    own = alloc.alloc(n_pages - len(shared))
+                    break
+                except OutOfPages:
+                    if not prefix.evict_lru():
+                        raise
+        except OutOfPages:
+            alloc.release_all(shared)
+            return          # requeued in the real engine
+        pages = shared + own
+        slots[state["next_slot"]] = pages
+        prompts[state["next_slot"]] = prompt
+        prefix.publish(prompt, pages)
+        state["next_slot"] += 1
+
+    for kind, a, b in ops:
+        if kind == "admit":
+            # prompt tokens deterministic in (a, b) so prefixes collide
+            # across admissions — that's what exercises sharing
+            prompt = tuple(range(a, a + b * g.page_size))
+            admit(prompt, b)
+        elif kind == "fork" and slots:
+            # re-admit an existing prompt: maximal prefix hit
+            src = sorted(prompts)[a % len(prompts)]
+            admit(prompts[src], len(slots[src]))
+        elif kind == "release" and slots:
+            victim = sorted(slots)[a % len(slots)]
+            alloc.release_all(slots.pop(victim))
+            prompts.pop(victim)
+        elif kind == "evict":
+            prefix.evict_lru()
+        check_invariants(alloc, prefix, slots)
+
+    # drain: release every slot and evict every prefix entry ->
+    # zero leaked pages
+    for pages in slots.values():
+        alloc.release_all(pages)
+    slots.clear()
+    prefix.clear()
+    check_invariants(alloc, prefix, slots)
+    assert alloc.in_use == 0
+    assert alloc.free_count == g.usable_pages

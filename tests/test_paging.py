@@ -1,0 +1,242 @@
+"""Paged-KV allocator and prefix cache: deterministic suite.
+
+Unit contracts for :mod:`repro.serve.paging` (geometry validation,
+atomic allocation, double-free detection, prefix LRU semantics), a
+seeded randomized-trace sweep through the shared interpreter in
+``paging_trace.py`` (the hypothesis-guided version of the same sweep
+lives in ``test_paging_props.py`` behind an importorskip), and the
+engine-level lockdowns: the copy-on-write guarantee (decoding in a
+forked slot never mutates a shared page), the page-capacity submit
+error, and the ZS-L008/ZS-S008 geometry lint rules.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from paging_trace import run_trace
+from repro.serve.paging import (TRASH_PAGE, OutOfPages, PageAllocator,
+                                PageGeometry, PrefixCache)
+
+
+# ----------------------------------------------------------------------
+# geometry contract
+# ----------------------------------------------------------------------
+def test_geometry_validates_and_derives():
+    g = PageGeometry(page_size=4, num_pages=9, table_len=8)
+    assert g.usable_pages == 8
+    assert g.pages_for(1) == 1 and g.pages_for(4) == 1
+    assert g.pages_for(5) == 2 and g.pages_for(32) == 8
+    with pytest.raises(ValueError, match="page_size"):
+        PageGeometry(page_size=0, num_pages=4, table_len=2)
+    with pytest.raises(ValueError, match="trash"):
+        PageGeometry(page_size=4, num_pages=1, table_len=2)
+    with pytest.raises(ValueError, match="table_len"):
+        PageGeometry(page_size=4, num_pages=4, table_len=0)
+
+
+def test_allocator_basic_lifecycle():
+    g = PageGeometry(page_size=4, num_pages=5, table_len=4)
+    a = PageAllocator(g)
+    assert a.free_count == 4 and a.in_use == 0
+    pages = a.alloc(3)
+    assert len(pages) == 3 and TRASH_PAGE not in pages
+    assert a.in_use == 3 and a.free_count == 1
+    a.retain(pages[0])
+    assert a.refcount(pages[0]) == 2
+    a.release(pages[0])
+    assert a.refcount(pages[0]) == 1 and a.in_use == 3
+    a.release_all(pages)
+    assert a.in_use == 0 and a.free_count == 4
+
+
+def test_alloc_is_atomic_on_failure():
+    a = PageAllocator(PageGeometry(page_size=4, num_pages=4, table_len=4))
+    a.alloc(2)
+    before = (a.free_count, a.in_use)
+    with pytest.raises(OutOfPages, match="need 2 pages"):
+        a.alloc(2)
+    assert (a.free_count, a.in_use) == before
+
+
+def test_double_free_and_bad_retain_raise():
+    a = PageAllocator(PageGeometry(page_size=4, num_pages=4, table_len=4))
+    (p,) = a.alloc(1)
+    a.release(p)
+    with pytest.raises(ValueError, match="double free"):
+        a.release(p)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.retain(p)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.retain(TRASH_PAGE)
+
+
+# ----------------------------------------------------------------------
+# seeded randomized traces (the engine's exact usage pattern)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_seeded_traces_never_leak_or_double_free(seed):
+    """64 random traces per seed through the shared interpreter: no
+    step may break the conservation/refcount invariants, and every
+    drained trace leaves the pool fully free.  (The hypothesis suite
+    runs the same interpreter with guided search and shrinking.)"""
+    rng = np.random.default_rng(seed)
+    kinds = np.array(["admit", "fork", "release", "evict"])
+    for _ in range(64):
+        n_ops = int(rng.integers(1, 40))
+        ops = list(zip(kinds[rng.integers(0, 4, n_ops)],
+                       rng.integers(0, 8, n_ops).tolist(),
+                       rng.integers(1, 7, n_ops).tolist()))
+        run_trace(ops, num_pages=int(rng.integers(3, 18)))
+
+
+# ----------------------------------------------------------------------
+# prefix cache semantics
+# ----------------------------------------------------------------------
+def test_prefix_cache_longest_match_and_lru():
+    g = PageGeometry(page_size=2, num_pages=12, table_len=8)
+    alloc = PageAllocator(g)
+    prefix = PrefixCache(alloc)
+    pages = alloc.alloc(3)
+    prompt = (1, 2, 3, 4, 5, 6)
+    prefix.publish(prompt, pages)          # entries for 2, 4, 6 tokens
+    assert len(prefix) == 3
+    covered, hit = prefix.lookup((1, 2, 3, 4, 9, 9))
+    assert covered == 4 and hit == pages[:2]
+    assert prefix.lookup((7, 7)) == (0, [])
+    # the 4-token entry was just touched -> it is evicted LAST
+    assert prefix.evict_lru() and prefix.evict_lru()
+    assert prefix.lookup((1, 2, 3, 4))[0] == 4
+    alloc.release_all(pages)
+    prefix.clear()
+    assert alloc.in_use == 0 and not prefix.evict_lru()
+
+
+def test_publish_only_full_pages():
+    g = PageGeometry(page_size=4, num_pages=8, table_len=4)
+    alloc = PageAllocator(g)
+    prefix = PrefixCache(alloc)
+    pages = alloc.alloc(2)                 # covers 5 tokens -> 1 full page
+    prefix.publish((1, 2, 3, 4, 5), pages)
+    assert len(prefix) == 1
+    covered, hit = prefix.lookup((1, 2, 3, 4, 5))
+    assert covered == 4 and hit == pages[:1]
+
+
+# ----------------------------------------------------------------------
+# engine-level: copy-on-write + capacity rejection + geometry lint
+# ----------------------------------------------------------------------
+@functools.lru_cache(maxsize=1)
+def _gemma_bundle():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return model, params
+
+
+def _ctx():
+    from repro.models import Ctx
+    return Ctx(plan="jnp", dtype=jnp.float32)
+
+
+def test_cow_decode_in_forked_slot_never_mutates_shared_pages():
+    """Admit A (publishes its prefix pages), snapshot those physical
+    pages, then run B — which maps the same pages into its table — to
+    completion.  The shared pages' pool content must be bit-identical
+    afterwards: B's decode writes land in B's own pages only."""
+    from repro.serve import Request, ServeEngine
+    model, params = _gemma_bundle()
+    eng = ServeEngine(model, params, _ctx(), num_slots=2, max_len=32,
+                      page_size=4)
+    sys_prompt = tuple(range(10, 22))                  # 3 full pages
+    eng.run([Request(rid=0, prompt=sys_prompt + (1, 2), max_new_tokens=3)])
+    covered, shared = eng._prefix.lookup(sys_prompt)
+    assert covered == len(sys_prompt) and len(shared) == 3
+    before = {leaf: np.asarray(eng.cache[leaf][:, shared])
+              for leaf in ("k", "v")}
+    eng.run([Request(rid=1, prompt=sys_prompt + (7, 8, 9),
+                     max_new_tokens=6)])
+    # A peaked at 5 pages; B retained the 3 shared ones and allocated
+    # 3 own (21-token reservation = 6 pages).  Without sharing the
+    # pool peak would be 9 (3 published + 6 fresh).
+    assert eng.stats.pages_in_use == 6
+    for leaf, snap in before.items():
+        np.testing.assert_array_equal(
+            snap, np.asarray(eng.cache[leaf][:, shared]),
+            err_msg=f"shared {leaf} pages were mutated by the fork")
+
+
+def test_submit_rejects_prompt_exceeding_page_capacity():
+    """The satellite fix: a prompt that cannot even be *stored* gets a
+    structural error naming the page-table capacity, not the generic
+    prompt+generation budget message."""
+    from repro.serve import Request, ServeEngine
+    model, params = _gemma_bundle()
+    eng = ServeEngine(model, params, _ctx(), num_slots=2, max_len=16,
+                      page_size=4)
+    with pytest.raises(ValueError, match=r"page-table capacity 16 "
+                                         r"\(4 pages x 4 tokens/page\)"):
+        eng.submit(Request(rid=0, prompt=tuple(range(20)),
+                           max_new_tokens=1))
+    # an over-budget (but storable) prompt still gets the budget error
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(Request(rid=1, prompt=tuple(range(10)),
+                           max_new_tokens=10))
+
+
+def test_engine_rejects_bad_page_geometry():
+    from repro.serve import ServeEngine
+    model, params = _gemma_bundle()
+    with pytest.raises(ValueError, match="must divide max_len"):
+        ServeEngine(model, params, _ctx(), max_len=32, page_size=5)
+    with pytest.raises(ValueError, match="quantize_kv"):
+        ServeEngine(model, params, _ctx(), max_len=32, page_size=4,
+                    cache_kwargs={"quantize_kv": True})
+
+
+def test_validate_lints_page_geometry():
+    """ZS-L008 through the engine: a plan whose attention KV block is
+    not tiled by the page size fails validate=True at load time."""
+    from repro.plan import Plan
+    from repro.plan.config import KernelConfig
+    from repro.serve import ServeEngine
+    model, params = _gemma_bundle()
+    plan = Plan(backend="jnp", default=KernelConfig(bkv=12))
+    with pytest.raises(ValueError, match="ZS-L008"):
+        ServeEngine(model, params, _ctx(), max_len=32, page_size=8,
+                    plan=plan, validate=True)
+    # a compatible geometry passes
+    ServeEngine(model, params, _ctx(), max_len=32, page_size=4,
+                plan=Plan(backend="jnp"), validate=True)
+
+
+def test_lint_page_geometry_rules():
+    from repro.analyze import RULES, lint_page_geometry
+    assert RULES["ZS-L008"][0] == "error"
+    assert RULES["ZS-S008"][0] == "error"
+    assert not lint_page_geometry(4, 8, max_len=32).rules()
+    assert lint_page_geometry(3, 16, max_len=32).rules() == {"ZS-L008"}
+    assert lint_page_geometry(4, 4, max_len=32).rules() == {"ZS-S008"}
+
+
+def test_pages_in_use_matches_allocator_and_frees_on_retire():
+    from repro.serve import Request, ServeEngine
+    model, params = _gemma_bundle()
+    eng = ServeEngine(model, params, _ctx(), num_slots=2, max_len=32,
+                      page_size=4)
+    eng.run([Request(rid=0, prompt=(1, 2, 3, 4, 5), max_new_tokens=3)])
+    # prompt 5 + budget 3 = 8 tokens -> 2 pages, peak gauge recorded
+    assert eng.stats.pages_in_use == math.ceil((5 + 3) / 4)
+    # retire released the slot's refs; only the published prefix pages
+    # (held by the prefix cache itself) remain allocated
+    assert eng._alloc.in_use == len(eng._prefix.pages)
+    eng._prefix.clear()
+    assert eng._alloc.in_use == 0
+    # the retired slot's device table row points at the trash page
+    assert np.all(np.asarray(eng.cache["page_table"]) == TRASH_PAGE)

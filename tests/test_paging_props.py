@@ -1,0 +1,60 @@
+"""Hypothesis property suite for the paged-KV allocator.
+
+The tentpole's acceptance bar: no randomized trace of
+admit / fork(share) / release / evict operations may ever leak a page,
+double-free one, or let a refcount drift from the number of live table
+references.  ``paging_trace.run_trace`` interprets each generated
+trace the way :class:`repro.serve.engine.ServeEngine` drives the
+allocator and asserts the invariants after *every* step; hypothesis
+shrinks any violation to a minimal trace.
+
+A seeded (non-hypothesis) sweep of the same interpreter always runs in
+``test_paging.py``; this module adds the guided 500-example search
+when the optional dev dependency is present.
+"""
+
+import pytest
+
+from paging_trace import run_trace
+from repro.serve.paging import OutOfPages, PageAllocator, PageGeometry
+
+hypothesis = pytest.importorskip(
+    "hypothesis")  # optional dev dep (requirements-dev.txt)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+# one trace op: (kind, a, b) with kind-specific operand meaning
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "fork", "release", "evict"]),
+              st.integers(0, 7), st.integers(1, 6)),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=500, deadline=None)
+@given(ops=_OPS, num_pages=st.integers(3, 17))
+def test_random_traces_never_leak_or_double_free(ops, num_pages):
+    run_trace(ops, num_pages)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=12))
+def test_interleaved_alloc_release_conserves_pool(sizes):
+    """Pure alloc/release interleaving (no sharing): the free list plus
+    the live set always partition the usable pool."""
+    g = PageGeometry(page_size=4, num_pages=24, table_len=8)
+    a = PageAllocator(g)
+    live: list[list[int]] = []
+    for i, n in enumerate(sizes):
+        try:
+            live.append(a.alloc(n))
+        except OutOfPages:
+            pass
+        if i % 2 and live:
+            a.release_all(live.pop(0))
+        seen = [p for pages in live for p in pages]
+        assert len(seen) == len(set(seen))          # no page given twice
+        assert a.in_use == len(seen)
+        assert a.in_use + a.free_count == g.usable_pages
+    for pages in live:
+        a.release_all(pages)
+    assert a.free_count == g.usable_pages
