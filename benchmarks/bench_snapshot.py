@@ -1,8 +1,9 @@
 """Schema-versioned benchmark snapshots: the repo's perf trajectory.
 
-Writes four JSON files — ``BENCH_serve.json``, ``BENCH_tune.json``,
-``BENCH_quant.json``, ``BENCH_analysis.json`` — capturing, on the
-CPU-reproducible paths, the numbers every future PR must not regress:
+Writes five JSON files — ``BENCH_serve.json``, ``BENCH_cluster.json``,
+``BENCH_tune.json``, ``BENCH_quant.json``, ``BENCH_analysis.json`` —
+capturing, on the CPU-reproducible paths, the numbers every future PR
+must not regress:
 
 * **serve** (interpret backend, reduced gemma-7b): engine scheduling
   metrics per ``steps_per_dispatch`` — decode steps, dispatches,
@@ -14,6 +15,14 @@ CPU-reproducible paths, the numbers every future PR must not regress:
   counts are exact by the engine's determinism contract; wall-clock
   fields (incl. the TTFT p50/p99 summaries) ride along as
   informational context only.
+* **cluster** (interpret backend, reduced gemma-7b): the replica
+  router's fleet schedule — 3 replicas x 2 slots over the same trace,
+  with replica 0 deterministically killed mid-run.  Placement,
+  re-queue count, deaths, per-replica dispatch counts and the fleet
+  token totals are exact under the router's determinism contract
+  (placement-independent tokens, at-most-once emission), so a future
+  PR that changes admission order or the fault path shifts these
+  gated ints; tok/s and the checksum ride along informationally.
 * **tune** (analytic): tuned-vs-default predicted utilization for the
   dominant GEMMs of every registered arch
   (``benchmarks.autotune_report.collect``).
@@ -51,6 +60,13 @@ MAX_NEW = (5, 3, 4, 6, 2, 4)
 NUM_SLOTS = 2
 MAX_LEN = 32
 SWEEP_K = (1, 4)
+
+# the cluster workload: the serve trace routed over 3 replicas, with
+# replica 0 killed at a fixed router step (its in-flight requests
+# re-queue onto the survivors)
+CLUSTER_REPLICAS = 3
+KILL_REPLICA = 0
+KILL_AT_STEP = 2
 
 
 def _serve_payload() -> dict:
@@ -148,6 +164,63 @@ def _serve_payload() -> dict:
             "runs": runs, "op_utilization": util}
 
 
+def _cluster_payload() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import Ctx, build_model
+    from repro.plan import KernelConfig
+    from repro.serve import Request, Router, ServeEngine
+
+    cfg = get_config(SERVE_ARCH, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    ctx = Ctx(plan=KernelConfig(backend="interpret"), dtype=jnp.float32)
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (len(PROMPT_LENS), max(PROMPT_LENS)),
+        0, cfg.vocab_size))
+    engines = [ServeEngine(model, params, ctx, num_slots=NUM_SLOTS,
+                           max_len=MAX_LEN)
+               for _ in range(CLUSTER_REPLICAS)]
+    router = Router(engines)
+    for i, (n, m) in enumerate(zip(PROMPT_LENS, MAX_NEW)):
+        router.submit(Request(rid=i, prompt=toks[i, :n].tolist(),
+                              max_new_tokens=m))
+    step = 0
+    while not router.idle:
+        if step == KILL_AT_STEP:
+            router.kill(KILL_REPLICA)
+        router.step()
+        step += 1
+    results = router.results
+    fleet = router.stats()
+    snap = router.snapshot()
+    return {
+        "arch": SERVE_ARCH, "num_slots": NUM_SLOTS, "max_len": MAX_LEN,
+        "prompt_lens": list(PROMPT_LENS), "max_new": list(MAX_NEW),
+        "kill_replica": KILL_REPLICA, "kill_at_step": KILL_AT_STEP,
+        # deterministic fleet schedule (gated exact)
+        "replicas": snap["router"]["replicas"],
+        "alive": snap["router"]["alive"],
+        "deaths": snap["router"]["deaths"],
+        "requeues": snap["router"]["requeues"],
+        "admitted": fleet.admitted, "retired": fleet.retired,
+        "prefill_tokens": fleet.prefill_tokens,
+        "decode_tokens": fleet.decode_tokens,
+        "per_replica_dispatches": [r["dispatches"]
+                                   for r in snap["per_replica"]],
+        "mean_dispatch_occupancy": fleet.mean_dispatch_occupancy,
+        "result_replicas": [results[i].replica
+                            for i in sorted(results)],
+        # informational (wall-clock; not gated)
+        "prefill_tok_s": fleet.prefill_tok_s,
+        "decode_tok_s": fleet.decode_tok_s,
+        "tokens_checksum": int(sum(sum(r.tokens)
+                                   for r in results.values())),
+    }
+
+
 def _analysis_payload() -> dict:
     """Static-analysis coverage: every family representative freshly
     plan-traced and run through all three `repro.analyze` layers.
@@ -191,6 +264,7 @@ def write_snapshots(out_dir: str) -> list[str]:
     paths = []
     for kind, backend, payload in (
             ("serve", "interpret", _serve_payload),
+            ("cluster", "interpret", _cluster_payload),
             ("tune", "analytic", _tune_payload),
             ("quant", "analytic", _quant_payload),
             ("analysis", "static", _analysis_payload)):

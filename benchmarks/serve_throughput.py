@@ -48,7 +48,7 @@ import numpy as np
 from repro import obs
 from repro.configs import get_config
 from repro.models import Ctx, build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, Router, ServeEngine
 
 ARCHS = ("gemma-7b", "mamba2-130m", "zamba2-2.7b")
 NUM_SLOTS = 4
@@ -84,6 +84,25 @@ def _run_continuous(model, params, ctx, reqs, *, num_slots, max_len,
                       prefill_chunk=prefill_chunk)
     eng.run(reqs, step_timeout_s=step_timeout_s)
     return eng.throughput(), _occupancy(eng), eng.stats
+
+
+def _run_routed(model, params, ctx, reqs, *, replicas, num_slots,
+                max_len, steps_per_dispatch, step_timeout_s=None):
+    """The same trace behind the cluster Router: `replicas` engines,
+    load-aware placement.  Occupancy/stats are fleet aggregates."""
+    engines = [ServeEngine(model, params, ctx, num_slots=num_slots,
+                           max_len=max_len,
+                           steps_per_dispatch=steps_per_dispatch)
+               for _ in range(replicas)]
+    router = Router(engines, step_timeout_s=step_timeout_s)
+    router.run(reqs)
+    fleet = router.stats()
+    occ = (fleet.decode_tokens
+           / max(fleet.decode_steps * num_slots, 1))
+    tp = {"prefill_tok_s": fleet.prefill_tok_s,
+          "decode_tok_s": fleet.decode_tok_s,
+          "prefill_s": fleet.prefill_s, "decode_s": fleet.decode_s}
+    return tp, occ, fleet, router
 
 
 def _run_lockstep(model, params, ctx, reqs, *, num_slots, max_len,
@@ -128,6 +147,10 @@ def main():
                          "request ever waits on pages)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill width for the continuous runs")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="also run the trace through a cluster Router "
+                         "over N data-parallel replicas (adds 'routed' "
+                         "rows; fills the replicas/requeues columns)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -145,15 +168,19 @@ def main():
     obs.reset_records()
 
     ctx = Ctx(plan="jnp", dtype=jnp.float32)
-    print("arch,mode,steps_per_dispatch,page_size,prefill_tok_s,"
-          "decode_tok_s,decode_steps,dispatches,occupancy,"
+    print("arch,mode,steps_per_dispatch,page_size,replicas,requeues,"
+          "prefill_tok_s,decode_tok_s,decode_steps,dispatches,occupancy,"
           "pages_in_use,pages_shared,prefill_chunks,"
           "ttft_p50_s,ttft_p99_s,tok_p50_s,tok_p99_s")
 
-    def _row(arch, mode, k, page_size, tp, occ, st):
+    def _row(arch, mode, k, page_size, tp, occ, st, *,
+             replicas=None, requeues=None):
         lat = st.latency_summary()
         ps = "" if page_size is None else page_size
-        print(f"{arch},{mode},{k},{ps},{tp['prefill_tok_s']:.1f},"
+        nr = "" if replicas is None else replicas
+        rq = "" if requeues is None else requeues
+        print(f"{arch},{mode},{k},{ps},{nr},{rq},"
+              f"{tp['prefill_tok_s']:.1f},"
               f"{tp['decode_tok_s']:.1f},{st.decode_steps},"
               f"{st.dispatches},{occ:.2f},"
               f"{st.pages_in_use},{st.pages_shared},{st.prefill_chunks},"
@@ -182,6 +209,14 @@ def main():
             paged = st.pages_in_use > 0
             _row(arch, "paged" if paged else "continuous", k,
                  args.page_size if paged else None, tp, occ, st)
+            if args.replicas:
+                tp, occ, st, router = _run_routed(
+                    model, params, ctx, reqs, replicas=args.replicas,
+                    num_slots=NUM_SLOTS, max_len=max_len,
+                    steps_per_dispatch=k,
+                    step_timeout_s=args.step_timeout)
+                _row(arch, "routed", k, None, tp, occ, st,
+                     replicas=args.replicas, requeues=router.requeues)
         tp, occ, st = _run_lockstep(model, params, ctx, reqs,
                                     num_slots=NUM_SLOTS, max_len=max_len,
                                     step_timeout_s=args.step_timeout)

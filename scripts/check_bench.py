@@ -32,7 +32,7 @@ import json
 import os
 import sys
 
-KINDS = ("serve", "tune", "quant", "analysis")
+KINDS = ("serve", "cluster", "tune", "quant", "analysis")
 
 # leaf/subtree key names that are informational (host-dependent):
 # compared never, reported never

@@ -27,13 +27,14 @@ from __future__ import annotations
 from repro.analyze.diagnostics import SEVERITIES, Diagnostic, Report
 from repro.analyze.driver import FAMILY_ARCHS, analyze_arch, analyze_families
 from repro.analyze.hazards import bank_access_pattern, check_config, simulate_schedule
-from repro.analyze.plan_lint import lint_page_geometry, lint_plan
+from repro.analyze.plan_lint import lint_cluster, lint_page_geometry, lint_plan
 from repro.analyze.program_lint import DEFAULT_ALLOW, lint_program
 
 __all__ = [
     "Diagnostic", "Report", "SEVERITIES", "RULES",
     "check_config", "simulate_schedule", "bank_access_pattern",
-    "lint_plan", "lint_page_geometry", "lint_program", "DEFAULT_ALLOW",
+    "lint_plan", "lint_page_geometry", "lint_cluster", "lint_program",
+    "DEFAULT_ALLOW",
     "FAMILY_ARCHS", "analyze_arch", "analyze_families",
 ]
 
@@ -78,12 +79,19 @@ RULES = {
     "ZS-L008": ("error", "plan",
                 "paged KV: page_size tiles every attention entry's KV "
                 "block (bkv % page_size == 0)"),
+    "ZS-L009": ("error", "plan",
+                "every serving replica executes one plan (all "
+                "Plan.fingerprint()s equal — divergent configs make "
+                "tokens placement-dependent)"),
     "ZS-F001": ("warning", "plan+policy",
                 "transient failures get at least one in-place retry"),
     "ZS-F002": ("error", "plan+policy", "retry backoff is well-formed"),
     "ZS-F003": ("warning", "plan+policy",
                 "replica restarts resolve configs by lookup, not by "
                 "re-tuning"),
+    "ZS-F004": ("error", "plan+policy",
+                "router fault policy bounds total re-queue backoff "
+                "below the request timeout"),
     "ZS-P001": ("error", "program",
                 "every matmul routes through the zero-stall kernels "
                 "(no silent jnp fallback)"),

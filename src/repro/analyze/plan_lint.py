@@ -22,7 +22,7 @@ from repro.analyze.hazards import check_config
 from repro.core.cyclemodel import TpuParams
 from repro.plan.config import KernelConfig, OpKey, _dtype_bytes
 
-__all__ = ["lint_plan", "lint_page_geometry"]
+__all__ = ["lint_plan", "lint_page_geometry", "lint_cluster"]
 
 #: MXU lane alignment by backend (mirror of the tuner spaces).
 _ALIGN = {"pallas": 128, "interpret": 8, "auto": 128, "jnp": 1}
@@ -212,6 +212,60 @@ def lint_page_geometry(page_size: int, table_len: int, *,
                     f"({table_len} pages x {page_size}) is below "
                     f"max_len {max_len}",
             hint="size table_len to ceil(max_len / page_size)"))
+    return report
+
+
+def lint_cluster(plans, *, policy=None,
+                 request_timeout_s: float | None = None) -> Report:
+    """Validate a replica fleet's (plans, fault policy) configuration.
+
+    Rules:
+
+    * ``ZS-L009`` (error) — every replica must execute the *same* plan:
+      all ``Plan.fingerprint()``s equal.  Replicas with divergent plans
+      produce placement-dependent numerics (different kernel configs →
+      different reduction orders), silently breaking the router's
+      determinism contract.  ``Router(validate=True)`` runs this and
+      rejects mismatched fleets at construction.
+    * ``ZS-F004`` (error) — the fault policy's worst-case total
+      re-queue backoff (:meth:`RetryPolicy.total_delay_s`) must stay
+      below the request timeout; otherwise a request re-queued off a
+      dead replica can exhaust its deadline sleeping, never finishing
+      even though survivors have capacity.
+
+    ``policy``/``request_timeout_s`` are optional: ZS-F004 only fires
+    when both are given (no timeout means no deadline to bound).
+    """
+    report = Report()
+    plans = list(plans)
+    # engines running a builtin backend string ("jnp"/"interpret")
+    # instead of a typed Plan still have an identity to compare
+    prints = [p.fingerprint() if hasattr(p, "fingerprint")
+              else f"builtin:{p!r}" for p in plans]
+    if len(set(prints)) > 1:
+        listing = ", ".join(f"replica {i}: {fp}"
+                            for i, fp in enumerate(prints))
+        report.add(Diagnostic(
+            rule="ZS-L009", severity="error",
+            where=f"cluster({len(plans)} replicas)",
+            message=f"replica plans diverge ({listing})",
+            hint="ship ONE saved plan artifact to every replica "
+                 "(--plan path); divergent kernel configs make tokens "
+                 "placement-dependent"))
+    if policy is not None and request_timeout_s is not None:
+        total = policy.total_delay_s()
+        if total >= request_timeout_s:
+            report.add(Diagnostic(
+                rule="ZS-F004", severity="error",
+                where=f"RetryPolicy(max_retries={policy.max_retries}, "
+                      f"backoff_base_s={policy.backoff_base_s}, "
+                      f"backoff_factor={policy.backoff_factor})",
+                message=f"worst-case re-queue backoff "
+                        f"({total:.1f}s) reaches the request timeout "
+                        f"({request_timeout_s:.1f}s)",
+                hint="lower max_retries/backoff so total_delay_s() < "
+                     "request timeout — a re-queued request must still "
+                     "have time to finish on a survivor"))
     return report
 
 

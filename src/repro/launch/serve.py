@@ -24,9 +24,20 @@ import numpy as np
 from repro import obs
 from repro.configs import get_config
 from repro.models import Ctx, build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, Router, ServeEngine, ShardedEngine
 
 __all__ = ["serve_batch"]
+
+
+def _parse_mesh(spec: str):
+    """``"DxM"`` -> a ('data', 'model') mesh over the local devices."""
+    from repro.launch.mesh import make_mesh_compat
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh must look like 'DxM' (e.g. 1x8), "
+                         f"got {spec!r}") from None
+    return make_mesh_compat((d, m), ("data", "model"))
 
 
 def _make_requests(cfg, key, batch: int, prompt_len: int, gen_len: int,
@@ -68,7 +79,10 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
                 step_timeout_s: float | None = None,
                 page_size: int | None = None,
                 num_pages: int | None = None,
-                prefill_chunk: int | None = None) -> dict:
+                prefill_chunk: int | None = None,
+                replicas: int = 1, mesh: str | None = None,
+                kill_replica: int | None = None,
+                kill_at_step: int = 2) -> dict:
     """Run a synthetic request batch through the serving engine.
 
     ``impl`` is the backend; ``plan`` is forwarded to
@@ -88,6 +102,15 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
     ``num_pages`` sizes the pool (default: no oversubscription), and
     ``prefill_chunk`` ingests long prompts chunk-by-chunk between
     decode dispatches.
+
+    Cluster knobs (:mod:`repro.serve.cluster`): ``replicas`` fronts N
+    data-parallel engine replicas with a :class:`repro.serve.Router`
+    (load-aware placement, fault-tolerant re-queue); ``mesh`` (e.g.
+    ``"1x8"``) runs each engine as a :class:`repro.serve.ShardedEngine`
+    over a ('data', 'model') device mesh (model-parallel decode);
+    ``kill_replica`` fails that replica at router step
+    ``kill_at_step`` — the CI smoke's fault injection, proving its
+    in-flight requests finish on survivors.
     """
     from repro.plan import Plan
     cfg = get_config(arch, reduced=reduced)
@@ -107,23 +130,61 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
     frontier = prompt_len + (cfg.frontend_tokens if cfg.frontend else 0)
     max_len = frontier + gen_len
     cache_kwargs = {"enc_len": prompt_len} if cfg.family == "encdec" else None
-    engine = ServeEngine(model, params, ctx, num_slots=slots,
-                         max_len=max_len, cache_dtype=dtype,
-                         steps_per_dispatch=steps_per_dispatch, seed=seed,
-                         cache_kwargs=cache_kwargs, plan=plan,
-                         validate=validate_plan, page_size=page_size,
-                         num_pages=num_pages, prefill_chunk=prefill_chunk)
+    device_mesh = _parse_mesh(mesh) if mesh is not None else None
+
+    def make_engine():
+        kw = dict(num_slots=slots, max_len=max_len, cache_dtype=dtype,
+                  steps_per_dispatch=steps_per_dispatch, seed=seed,
+                  cache_kwargs=cache_kwargs, plan=plan,
+                  validate=validate_plan, page_size=page_size,
+                  num_pages=num_pages, prefill_chunk=prefill_chunk)
+        if device_mesh is not None:
+            return ShardedEngine(model, params, ctx, mesh=device_mesh, **kw)
+        return ServeEngine(model, params, ctx, **kw)
+
     reqs = _make_requests(cfg, key, batch, prompt_len, gen_len, mixed,
                           temperature=temperature, top_k=top_k, top_p=top_p)
-    results = engine.run(reqs, step_timeout_s=step_timeout_s)
+    cluster: dict | None = None
+    if replicas > 1:
+        engines = [make_engine() for _ in range(replicas)]
+        router = Router(engines, validate=validate_plan,
+                        step_timeout_s=step_timeout_s)
+        for r in reqs:
+            router.submit(r)
+        step = 0
+        while not router.idle:
+            if kill_replica is not None and step == kill_at_step:
+                router.kill(kill_replica)
+            router.step()
+            step += 1
+        if kill_replica is not None and router.deaths == 0:
+            raise RuntimeError(
+                f"kill_replica={kill_replica} never fired: the run "
+                f"finished in {step} steps (<= kill_at_step="
+                f"{kill_at_step}) — the fault-injection smoke was "
+                f"vacuous; raise --gen-len or lower --kill-at-step")
+        results = router.results
+        fleet = router.stats()
+        snap = router.snapshot()
+        cluster = snap["router"]
+        cluster["per_replica_dispatches"] = [
+            r["dispatches"] for r in snap["per_replica"]]
+        active_plan, stats_snap = engines[0].plan, snap
+        tp = {"prefill_tok_s": fleet.prefill_tok_s,
+              "decode_tok_s": fleet.decode_tok_s,
+              "prefill_s": fleet.prefill_s, "decode_s": fleet.decode_s}
+    else:
+        engine = make_engine()
+        results = engine.run(reqs, step_timeout_s=step_timeout_s)
+        active_plan, stats_snap = engine.plan, engine.stats.snapshot()
+        tp = engine.throughput()
     if plan_out:
-        engine.plan.save(plan_out)
+        active_plan.save(plan_out)
 
     gen = np.full((batch, gen_len), -1, np.int64)
     for rid, res in results.items():
         gen[rid, :len(res.tokens)] = res.tokens
-    tp = engine.throughput()
-    return {
+    out = {
         "generated": jnp.asarray(gen),
         "prefill_s": tp["prefill_s"],
         "decode_s": tp["decode_s"],
@@ -133,9 +194,13 @@ def serve_batch(arch: str, *, reduced: bool = True, batch: int = 4,
         # reported separately; the old metric ignored it entirely)
         "tokens_per_s": tp["decode_tok_s"],
         # full EngineStats snapshot: the legacy aggregate keys plus
-        # derived throughput, occupancy, and latency summaries
-        "stats": engine.stats.snapshot(),
+        # derived throughput, occupancy, and latency summaries (the
+        # fleet aggregate + per-replica/router sections when routed)
+        "stats": stats_snap,
     }
+    if cluster is not None:
+        out["cluster"] = cluster
+    return out
 
 
 def main():
@@ -184,6 +249,21 @@ def main():
                          "head-of-line TTFT of long prompts)")
     ap.add_argument("--step-timeout", type=float, default=None,
                     help="fail if any engine step exceeds this many seconds")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N data-parallel engine replicas with the "
+                         "cluster Router (load-aware placement, "
+                         "fault-tolerant re-queue)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run each engine model-parallel over a "
+                         "('data','model') device mesh, e.g. 1x8 (pair "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 on CPU)")
+    ap.add_argument("--kill-replica", type=int, default=None,
+                    help="fail this replica mid-run (fault-injection "
+                         "smoke; its in-flight requests re-queue onto "
+                         "survivors)")
+    ap.add_argument("--kill-at-step", type=int, default=2,
+                    help="router step at which --kill-replica fires")
     ap.add_argument("--metrics", action="store_true",
                     help="print per-request latency percentiles (TTFT, "
                          "queue wait, per-token p50/p99) and the per-op "
@@ -213,7 +293,10 @@ def main():
                           step_timeout_s=args.step_timeout,
                           page_size=args.page_size,
                           num_pages=args.num_pages,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          replicas=args.replicas, mesh=args.mesh,
+                          kill_replica=args.kill_replica,
+                          kill_at_step=args.kill_at_step)
         s = out["stats"]
         print(f"generated shape: {out['generated'].shape}")
         print(f"prefill: {out['prefill_s']:.2f}s "
@@ -227,6 +310,13 @@ def main():
             print(f"pages in use (peak): {s['pages_in_use']}  "
                   f"shared: {s['pages_shared']}  "
                   f"prefill chunks: {s['prefill_chunks']}")
+        if "cluster" in out:
+            c = out["cluster"]
+            print(f"cluster: replicas: {c['replicas']}  "
+                  f"alive: {c['alive']}  deaths: {c['deaths']}  "
+                  f"requeues: {c['requeues']}  "
+                  f"per-replica dispatches: "
+                  f"{c['per_replica_dispatches']}")
         if args.metrics:
             for name in ("ttft", "queue_wait", "token_latency"):
                 m = s[name]

@@ -18,6 +18,7 @@ a traced plan performs **zero** tuner calls at run time), a
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from pathlib import Path
@@ -166,6 +167,21 @@ class Plan:
             default=default,
             entries={OpKey.from_str(k): KernelConfig.from_json(v)
                      for k, v in d.get("entries", {}).items()})
+
+    def fingerprint(self) -> str:
+        """Short content hash of the serialized plan (16 hex chars).
+
+        Two plans fingerprint equal iff their JSON forms match —
+        backend, quant, default, and the full entry table.  Because an
+        ``"auto"`` plan memoizes tuner results into its table, the
+        fingerprint of such a plan can change as it resolves call
+        sites; fingerprint *saved* plan artifacts (or traced plans)
+        when identity must be stable, e.g. the replica-consistency
+        check in ``repro.serve.cluster.Router`` (rule ZS-L009).
+        """
+        blob = json.dumps(self.to_json(), sort_keys=True,
+                          separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
     def save(self, path: str | os.PathLike) -> None:
         Path(path).write_text(

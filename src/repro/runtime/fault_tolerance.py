@@ -88,6 +88,14 @@ class RetryPolicy:
                    * self.backoff_factor ** max(attempt - 1, 0),
                    self.max_backoff_s)
 
+    def total_delay_s(self) -> float:
+        """Worst-case total backoff a payload can accumulate before the
+        policy gives up: the sum of every per-attempt delay.  The
+        serving router's admission-to-failure latency bound —
+        ``repro.analyze`` rule ZS-F004 requires this to stay below the
+        request timeout, so a re-queued request can still finish."""
+        return sum(self.delay_s(i) for i in range(1, self.max_retries + 1))
+
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
 
@@ -155,7 +163,20 @@ class StragglerDetector:
 
 
 class ResilientExecutor:
-    """Run steps with retry + checkpoint-restart semantics."""
+    """Run steps with retry + checkpoint-restart semantics.
+
+    Two recovery paths when in-place retries exhaust:
+
+    * **restart** (training) — ``restore_fn`` + the policy's
+      ``restart_on_exhaustion`` reload the latest checkpoint and keep
+      stepping in place.
+    * **re-queue** (serving) — ``requeue_fn`` hands the step's
+      ``payload`` (whatever unit of work the caller threads through
+      ``run_step(..., payload=...)``, e.g. a replica's in-flight
+      requests) back to the caller *before* the failure propagates, so
+      a higher-level scheduler can reassign the work to a survivor.
+      The executor stays generic: it never inspects the payload.
+    """
 
     def __init__(self, step_fn: Callable, *, max_retries: int = 3,
                  policy: RetryPolicy | None = None,
@@ -163,7 +184,8 @@ class ResilientExecutor:
                  heartbeat: Heartbeat | None = None,
                  detector: StragglerDetector | None = None,
                  host_id: int = 0,
-                 failure_hook: Callable[[int], None] | None = None):
+                 failure_hook: Callable[[int], None] | None = None,
+                 requeue_fn: Callable[[Any], None] | None = None):
         if policy is None:
             policy = RetryPolicy(max_retries=max_retries)
         policy.validate()
@@ -175,10 +197,12 @@ class ResilientExecutor:
         self.detector = detector
         self.host_id = host_id
         self.failure_hook = failure_hook  # test injection point
+        self.requeue_fn = requeue_fn      # exhaustion re-queue hook
         self.retries_total = 0
         self.restarts_total = 0
+        self.exhausted_total = 0
 
-    def run_step(self, step: int, state, *args):
+    def run_step(self, step: int, state, *args, payload: Any = None):
         attempt = 0
         while True:
             try:
@@ -201,12 +225,18 @@ class ResilientExecutor:
                     if delay > 0.0:
                         time.sleep(delay)
                     continue
-                if self.restore_fn is None or \
-                        not self.policy.restart_on_exhaustion:
-                    raise
-                state = self.restore_fn()   # checkpoint restart
-                self.restarts_total += 1
-                attempt = 0
+                if self.restore_fn is not None and \
+                        self.policy.restart_on_exhaustion:
+                    state = self.restore_fn()   # checkpoint restart
+                    self.restarts_total += 1
+                    attempt = 0
+                    continue
+                # exhausted with no restart path: hand the payload back
+                # to the caller (serving re-queue), then propagate
+                self.exhausted_total += 1
+                if self.requeue_fn is not None:
+                    self.requeue_fn(payload)
+                raise
 
 
 def elastic_restore(ckpt: Checkpointer, template_state: Any, new_mesh,

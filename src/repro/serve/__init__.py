@@ -30,6 +30,10 @@ Pieces:
 * :mod:`repro.serve.sampling` — on-device batched greedy/temperature/
   top-k/top-p sampling over per-slot PRNG key rows.
 * :mod:`repro.serve.request`  — `Request` / `GenerationResult` types.
+* :mod:`repro.serve.cluster`  — the fleet tier: `ShardedEngine`
+  (model-parallel decode over a device mesh) and `Router` (N
+  data-parallel replicas, load-aware admission, fault-tolerant
+  re-queue with at-most-once token emission).
 
 Observability: the engine emits `serve.admit` / `serve.dispatch` spans
 and `serve.retire` events through :mod:`repro.obs` when tracing is
@@ -42,9 +46,10 @@ ragged continuous batches stay on the Pallas kernel.
 """
 
 from repro.serve import sampling
+from repro.serve.cluster import Router, ShardedEngine
 from repro.serve.engine import ServeEngine, lockstep_generate
 from repro.serve.request import GenerationResult, Request
 from repro.serve.stats import EngineStats
 
 __all__ = ["ServeEngine", "EngineStats", "Request", "GenerationResult",
-           "lockstep_generate", "sampling"]
+           "Router", "ShardedEngine", "lockstep_generate", "sampling"]

@@ -559,6 +559,33 @@ class ServeEngine:
         return (not self._pending and not self._chunking
                 and all(s is None for s in self._slots))
 
+    # -- router-facing load/result hooks -------------------------------
+    # (consumed by repro.serve.cluster; trivially true standalone too)
+    @property
+    def free_slots(self) -> int:
+        """Slots neither occupied nor parked on a chunked admission."""
+        return sum(1 for i, s in enumerate(self._slots)
+                   if s is None and i not in self._chunking)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted but not yet placed into a slot."""
+        return len(self._pending)
+
+    @property
+    def pages_in_use_now(self) -> int:
+        """Current page-pool occupancy (0 for the contiguous cache) —
+        an instantaneous gauge, unlike ``stats.pages_in_use`` (peak)."""
+        return self._alloc.in_use if self._geom is not None else 0
+
+    def pop_results(self) -> dict[int, GenerationResult]:
+        """Hand over (and clear) finished results.  The router drains
+        results after every replica step; a rid stays live against
+        duplicate submission only until its result is popped."""
+        out = self._results
+        self._results = {}
+        return out
+
     # ------------------------------------------------------------------
     def _bucket(self, n: int, limit: int) -> int:
         """Smallest bucket >= n, clamped to ``limit`` (submit() already

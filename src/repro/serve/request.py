@@ -56,6 +56,8 @@ class GenerationResult:
     ``ttft_s``: submit -> first token on the host (queue wait plus the
     admission prefill+sample).  Both read the engine clock
     (``repro.serve.engine._now``), so fake-clock tests see exact values.
+    ``replica``: which engine replica produced the result when routed
+    through :class:`repro.serve.cluster.Router` (``None`` standalone).
     """
     rid: int
     prompt_len: int
@@ -64,6 +66,7 @@ class GenerationResult:
     finished_step: int
     queue_wait_s: float = 0.0
     ttft_s: float = 0.0
+    replica: int | None = None
 
 
 @dataclasses.dataclass

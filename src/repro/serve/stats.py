@@ -44,9 +44,15 @@ def _warn_dict_access() -> None:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Serving-engine statistics (see module docstring)."""
+    """Serving-engine statistics (see module docstring).
+
+    ``replica_id`` tags the stats of one engine behind a
+    :class:`repro.serve.cluster.Router` (``None`` for a standalone
+    engine or a fleet aggregate built by :meth:`merge`).
+    """
 
     num_slots: int = 0
+    replica_id: int | None = None
 
     # aggregates (the legacy dict keys)
     prefill_s: float = 0.0
@@ -89,6 +95,32 @@ class EngineStats:
         occ = self.dispatch_occupancy
         return sum(occ) / len(occ) if occ else 0.0
 
+    # -- fleet aggregation -------------------------------------------------
+    @classmethod
+    def merge(cls, parts: "list[EngineStats]") -> "EngineStats":
+        """Fold per-replica stats into one fleet snapshot.
+
+        Counters, time totals, and pool gauges sum; the sample lists
+        concatenate so ``latency_summary()`` summarizes the whole
+        fleet's requests.  ``max_concurrent`` also sums — replicas run
+        concurrently, so the fleet-wide peak is bounded by (and in the
+        steady state equals) the sum of per-replica peaks.  The merged
+        snapshot is a fleet aggregate, so ``replica_id`` is ``None``.
+        """
+        out = cls()
+        for p in parts:
+            out.num_slots += p.num_slots
+            for k in _LEGACY_KEYS:
+                setattr(out, k, getattr(out, k) + getattr(p, k))
+            out.pages_in_use += p.pages_in_use
+            out.pages_shared += p.pages_shared
+            out.prefill_chunks += p.prefill_chunks
+            out.ttft_s.extend(p.ttft_s)
+            out.queue_wait_s.extend(p.queue_wait_s)
+            out.token_latency_s.extend(p.token_latency_s)
+            out.dispatch_occupancy.extend(p.dispatch_occupancy)
+        return out
+
     # -- summaries ---------------------------------------------------------
     def latency_summary(self) -> dict[str, dict[str, float]]:
         """{ttft, queue_wait, token_latency} -> {n, mean, p50, p99, max}."""
@@ -104,6 +136,7 @@ class EngineStats:
         out = {k: getattr(self, k) for k in _LEGACY_KEYS}
         out.update({
             "num_slots": self.num_slots,
+            "replica_id": self.replica_id,
             "prefill_tok_s": self.prefill_tok_s,
             "decode_tok_s": self.decode_tok_s,
             "mean_dispatch_occupancy": self.mean_dispatch_occupancy,

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.analyze import (RULES, SEVERITIES, Diagnostic, Report,
-                           bank_access_pattern, check_config, lint_plan,
-                           lint_program, simulate_schedule)
+                           bank_access_pattern, check_config, lint_cluster,
+                           lint_plan, lint_program, simulate_schedule)
 from repro.configs import get_config
 from repro.core.pipeline import RevolvingSchedule
 from repro.models import Ctx, build_model
@@ -231,6 +231,41 @@ def test_lint_plan_policy_pair_rules():
     rules = {d.rule for d in report}
     assert "ZS-F001" in rules and "ZS-F002" in rules
     assert not report.ok("error")
+
+
+def test_lint_cluster_rejects_divergent_plans():
+    """ZS-L009: replicas must share one Plan.fingerprint() — divergent
+    kernel configs make tokens placement-dependent."""
+    a = Plan(backend="jnp")
+    b = Plan(backend="interpret")
+    assert a.fingerprint() != b.fingerprint()
+    report = lint_cluster([a, a.copy(), b])
+    errs = [d for d in report if d.rule == "ZS-L009"]
+    assert len(errs) == 1 and errs[0].severity == "error"
+    assert "replica 2" in errs[0].message
+    # a uniform fleet is clean (copies fingerprint identically)
+    assert lint_cluster([a, a.copy(), a.copy()]).ok("error")
+    # builtin backend strings still have an identity to compare
+    assert lint_cluster(["jnp", "jnp"]).ok("error")
+    assert not lint_cluster(["jnp", "interpret"]).ok("error")
+
+
+def test_lint_cluster_bounds_requeue_backoff():
+    """ZS-F004: the policy's worst-case total re-queue backoff must
+    stay below the request timeout, else a re-queued request can spend
+    its whole deadline sleeping."""
+    plan = Plan(backend="jnp")
+    slow = RetryPolicy(max_retries=3, backoff_base_s=10.0,
+                       restart_on_exhaustion=False)
+    report = lint_cluster([plan, plan.copy()], policy=slow,
+                          request_timeout_s=30.0)
+    assert any(d.rule == "ZS-F004" and d.severity == "error"
+               for d in report)
+    # bounded backoff passes; no timeout means no deadline to check
+    ok = RetryPolicy(max_retries=3, backoff_base_s=0.5,
+                     restart_on_exhaustion=False)
+    assert lint_cluster([plan], policy=ok, request_timeout_s=30.0).ok("error")
+    assert lint_cluster([plan], policy=slow).ok("error")
 
 
 def test_retry_policy_delay_schedule_and_json():

@@ -1,0 +1,146 @@
+"""Direct unit tests for repro.runtime.fault_tolerance.
+
+The serving router (repro.serve.cluster) leans on this module for its
+fault path — the re-queue hook, the backoff budget (ZS-F004), and the
+heartbeat/staleness probes — so each piece gets pinned down here in
+isolation, without an engine in the loop.
+"""
+
+import pytest
+
+from repro.runtime.fault_tolerance import (Heartbeat, ResilientExecutor,
+                                           RetryPolicy, StragglerDetector,
+                                           TransientError)
+
+
+# ----------------------------------------------------------------------
+# RetryPolicy backoff budget
+# ----------------------------------------------------------------------
+def test_total_delay_sums_per_attempt_backoff():
+    p = RetryPolicy(max_retries=3, backoff_base_s=1.0, backoff_factor=2.0,
+                    max_backoff_s=30.0)
+    # attempts 1..3 sleep 1, 2, 4 seconds
+    assert p.total_delay_s() == pytest.approx(1.0 + 2.0 + 4.0)
+
+
+def test_total_delay_respects_cap_and_zero_base():
+    capped = RetryPolicy(max_retries=4, backoff_base_s=1.0,
+                         backoff_factor=10.0, max_backoff_s=5.0)
+    # 1, 5(cap of 10), 5(100), 5(1000)
+    assert capped.total_delay_s() == pytest.approx(16.0)
+    assert RetryPolicy(max_retries=5).total_delay_s() == 0.0
+
+
+# ----------------------------------------------------------------------
+# ResilientExecutor re-queue hook
+# ----------------------------------------------------------------------
+def _always_fail(step):
+    raise TransientError("wedged")
+
+
+def test_requeue_hook_receives_payload_on_exhaustion():
+    got = []
+    ex = ResilientExecutor(lambda s, *a: s, max_retries=2,
+                           failure_hook=_always_fail,
+                           requeue_fn=got.append)
+    with pytest.raises(TransientError):
+        ex.run_step(0, None, payload={"rid": 7})
+    assert got == [{"rid": 7}]        # handed back exactly once
+    assert ex.exhausted_total == 1
+    assert ex.retries_total == 3      # initial + 2 retries all burned
+
+
+def test_requeue_hook_not_called_when_retry_succeeds():
+    calls = {"n": 0}
+
+    def flaky(step):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise TransientError("blip")
+
+    got = []
+    ex = ResilientExecutor(lambda s, *a: s, max_retries=2,
+                           failure_hook=flaky, requeue_fn=got.append)
+    ex.run_step(0, 1, payload="work")
+    assert got == []
+    assert ex.exhausted_total == 0
+
+
+def test_restart_path_takes_precedence_over_requeue():
+    restored = {"n": 0}
+
+    def fail_until_restored(step):
+        if restored["n"] == 0:
+            raise TransientError("dead host")
+
+    def restore():
+        restored["n"] += 1
+        return 100
+
+    got = []
+    ex = ResilientExecutor(lambda s, *a: s + 1, max_retries=1,
+                           restore_fn=restore,
+                           failure_hook=fail_until_restored,
+                           requeue_fn=got.append)
+    assert ex.run_step(0, 0, payload="work") == 101
+    assert ex.restarts_total == 1
+    assert got == [] and ex.exhausted_total == 0
+
+
+def test_exhaustion_without_hook_still_raises_and_counts():
+    ex = ResilientExecutor(lambda s, *a: s, max_retries=1,
+                           failure_hook=_always_fail,
+                           policy=RetryPolicy(max_retries=1,
+                                              restart_on_exhaustion=False))
+    with pytest.raises(TransientError):
+        ex.run_step(0, None)
+    assert ex.exhausted_total == 1
+
+
+# ----------------------------------------------------------------------
+# Heartbeat
+# ----------------------------------------------------------------------
+def test_heartbeat_roundtrip_and_staleness(tmp_path):
+    hb = Heartbeat(str(tmp_path), host_id=3)
+    assert hb.last() is None          # never beat: no file yet
+    assert hb.stale(timeout_s=1e9)    # ...and "stale" by convention
+    hb.beat(11)
+    last = hb.last()
+    assert last["step"] == 11 and last["t"] > 0
+    assert not hb.stale(timeout_s=60)
+    assert hb.stale(timeout_s=0)
+
+
+def test_heartbeat_files_are_per_host(tmp_path):
+    a = Heartbeat(str(tmp_path), host_id=0)
+    b = Heartbeat(str(tmp_path), host_id=1)
+    a.beat(5)
+    assert b.last() is None           # host 1 never beat
+    assert a.last()["step"] == 5
+    b.beat(9)
+    assert a.last()["step"] == 5      # unchanged by host 1's beat
+
+
+# ----------------------------------------------------------------------
+# StragglerDetector
+# ----------------------------------------------------------------------
+def test_straggler_ewma_and_fleet_median():
+    d = StragglerDetector(alpha=0.5, factor=2.0)
+    d.observe(0, 1.0)
+    d.observe(0, 3.0)                 # ewma: 0.5*3 + 0.5*1 = 2.0
+    assert d.fleet_ewma() == pytest.approx(2.0)
+    d.observe(1, 1.0)
+    d.observe(2, 1.0)
+    assert d.fleet_ewma() == pytest.approx(1.0)   # median of {2,1,1}
+
+
+def test_straggler_flagging_and_rebalance():
+    d = StragglerDetector(alpha=1.0, factor=2.0)
+    assert d.stragglers() == [] and d.rebalance_weights() == {}
+    for h in range(3):
+        d.observe(h, 1.0)
+    d.observe(2, 5.0)                 # host 2 now 5x the fleet median
+    assert d.stragglers() == [2]
+    w = d.rebalance_weights()
+    assert sum(w.values()) == pytest.approx(1.0)
+    assert w[2] < w[0] == w[1]        # slow host gets the smallest share
