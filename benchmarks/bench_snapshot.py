@@ -31,8 +31,10 @@ must not regress:
   W8A8 max relative logit error per serve arch (informational —
   last-ulp float behavior varies across BLAS builds).
 * **analysis** (static): ``repro.analyze`` coverage over the five
-  family representatives — plan entries checked, programs linted,
-  hazards found (gated at 0) and per-rule counts.
+  family representatives (plus the dense jnp-backend probe) — plan
+  entries checked, programs linted, hazards found (gated at 0),
+  per-rule counts, stale allowlist entries (gated at 0), and the
+  kernel-IR sweep (kernels verified, ``zs_k_errors`` gated at 0).
 
 ``scripts/check_bench.py`` diffs a fresh run against the committed
 snapshots (exact on ints/strings, rtol on analytic floats, ignore on
@@ -223,12 +225,15 @@ def _cluster_payload() -> dict:
 
 def _analysis_payload() -> dict:
     """Static-analysis coverage: every family representative freshly
-    plan-traced and run through all three `repro.analyze` layers.
-    The gated contract: zero hazards, zero errors, full coverage —
-    a future PR that introduces a hazardous config or a silent
-    fallback matmul shifts these exact ints."""
-    from repro.analyze import analyze_families
+    plan-traced and run through the `repro.analyze` layers, plus the
+    kernel-IR sweep over INTERPRET_SPACE.  The gated contract: zero
+    hazards, zero errors, zero stale allowlist entries, full coverage
+    — a future PR that introduces a hazardous config, a silent
+    fallback matmul or a schedule-divergent kernel shifts these exact
+    ints."""
+    from repro.analyze import DEFAULT_ALLOW, analyze_families, lint_kernels
     reports = analyze_families()
+    allowlist = reports.pop("allowlist", None)
     per_arch = []
     for arch, rep in sorted(reports.items()):
         per_arch.append({
@@ -238,10 +243,17 @@ def _analysis_payload() -> dict:
             "errors": len(rep.errors), "warnings": len(rep.warnings),
             "rule_counts": rep.rule_counts(),
         })
+    kernels = lint_kernels()
     return {"configs_checked": len(per_arch),
             "hazards_found": sum(r["errors"] for r in per_arch),
             "warnings_found": sum(r["warnings"] for r in per_arch),
-            "per_arch": per_arch}
+            "per_arch": per_arch,
+            "allow_entries": len(DEFAULT_ALLOW),
+            "stale_allow_entries": (len(allowlist.diagnostics)
+                                    if allowlist is not None else 0),
+            "kernels_verified": kernels.meta.get("kernels_verified", 0),
+            "kernel_families": kernels.meta.get("families", {}),
+            "zs_k_errors": kernels.meta.get("zs_k_errors", 0)}
 
 
 def _tune_payload() -> dict:

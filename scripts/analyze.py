@@ -1,20 +1,31 @@
 #!/usr/bin/env python
 """Static zero-stall verification over the model-family configs.
 
-Runs all three ``repro.analyze`` layers — plan lint + revolving-buffer
+Runs the ``repro.analyze`` layers — plan lint + revolving-buffer
 hazard simulation, and jaxpr program lint over the prefill / decode /
-fused K-step dispatch programs — for one architecture per model family
-(dense, moe, ssm, hybrid, encdec), each freshly plan-traced on the
-interpret backend (real tiled configs, no TPU needed, no FLOPs).
+loss / fused K-step dispatch programs — for one architecture per model
+family (dense, moe, ssm, hybrid, encdec), each freshly plan-traced on
+the interpret backend (real tiled configs, no TPU needed, no FLOPs).
+Full-family sweeps also audit the program-lint allowlist for stale
+entries (ZS-P004).
 
-CI runs ``--all-families --fail-on warning``: the repo must prove its
-own schedules hazard-free and its programs fallback-free on every
-merge, the static complement of the ``repro.obs`` runtime counters.
+``--kernels`` runs the kernel-IR verifier instead: every kernel family
+is traced across the INTERPRET_SPACE tuning space and each emitted
+``pallas_call`` is proven to realize the revolving-buffer schedule
+(ZS-K001..K005 — residency timeline, slot WAR, bank conflicts, HBM
+streaming order, alias liveness).
+
+CI runs ``--all-families --fail-on warning`` and
+``--kernels --fail-on warning``: the repo must prove its schedules
+hazard-free, its programs fallback-free and its kernel IR
+schedule-true on every merge — the static complement of the
+``repro.obs`` runtime counters.
 
 Usage:
   PYTHONPATH=src python scripts/analyze.py --all-families
   PYTHONPATH=src python scripts/analyze.py --arch gemma-7b --json
   PYTHONPATH=src python scripts/analyze.py --all-families --quant int8
+  PYTHONPATH=src python scripts/analyze.py --kernels
 """
 
 from __future__ import annotations
@@ -40,6 +51,14 @@ def main() -> int:
     ap.add_argument("--fused-steps", type=int, default=4,
                     help="K of the fused decode+sample block to lint "
                          "(<=1 skips the fused-block lint)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the kernel-IR verifier: sweep every "
+                         "kernel family across INTERPRET_SPACE and "
+                         "prove each pallas_call realizes its schedule")
+    ap.add_argument("--kernel-family", action="append", default=None,
+                    choices=["zero_stall", "grouped", "quantized",
+                             "attention"],
+                    help="restrict --kernels to one family (repeatable)")
     ap.add_argument("--fail-on", default="error",
                     choices=["error", "warning"],
                     help="exit nonzero when any diagnostic at or above "
@@ -48,12 +67,24 @@ def main() -> int:
                     help="emit one JSON object (reports keyed by arch)")
     args = ap.parse_args()
 
+    if args.kernels:
+        return _run_kernels(args)
+
     from repro.analyze import FAMILY_ARCHS, analyze_families
+    from repro.configs import get_config
 
     if args.all_families or not args.arch:
         families = list(FAMILY_ARCHS)
     else:
         families = args.arch
+        for name in families:
+            arch = FAMILY_ARCHS.get(name, name)
+            try:
+                get_config(arch, reduced=True)
+            except (KeyError, ValueError) as e:
+                print(f"analyze: unknown arch {name!r}: {e}",
+                      file=sys.stderr)
+                return 2
     reports = analyze_families(families, backend=args.backend,
                                quant=args.quant,
                                fused_steps=args.fused_steps)
@@ -76,6 +107,24 @@ def main() -> int:
                 ok = False
         verdict = "PASS" if ok else f"FAIL (fail-on={args.fail_on})"
         print(f"analyze: {len(reports)} config(s) checked -> {verdict}")
+    return 0 if ok else 1
+
+
+def _run_kernels(args) -> int:
+    from repro.analyze import lint_kernels
+
+    report = lint_kernels(args.kernel_family)
+    ok = report.ok(args.fail_on)
+    if args.json:
+        print(json.dumps({"kernels": report.to_json()}, indent=2))
+    else:
+        meta = report.meta
+        print(f"kernel-ir: {meta.get('kernels_verified', 0)} kernels "
+              f"verified across {meta.get('families', {})} -> {report!r}")
+        if len(report):
+            print(report.format())
+        verdict = "PASS" if ok else f"FAIL (fail-on={args.fail_on})"
+        print(f"analyze --kernels: {verdict}")
     return 0 if ok else 1
 
 

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Fail CI when the rule catalog and the docs drift apart.
+
+``repro.analyze.RULES`` is the authoritative registry of diagnostic
+rule ids (stable API); ``docs/ARCHITECTURE.md`` carries the
+human-readable catalog table.  This script asserts they describe the
+same set of rules:
+
+* **bijection** — every rule id in ``RULES`` has exactly one table
+  row, and every ``ZS-*`` table row names a registered rule;
+* **layer** — the row's layer column equals the rule's layer;
+* **severity** — the row's parenthesized severity names the rule's
+  severity (rows may list escalation alternatives, e.g.
+  ``(warn/error)`` for rules that upgrade under stricter settings).
+
+Exit status: 0 when the catalog and the docs agree, 1 otherwise
+(each mismatch printed with the offending rule id).
+
+Run from the repo root: ``PYTHONPATH=src python scripts/check_rules.py``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOC = Path(__file__).resolve().parent.parent / "docs" / "ARCHITECTURE.md"
+
+# | `ZS-K001` (error) | kernel-ir | description |
+_ROW = re.compile(
+    r"^\|\s*`(ZS-[A-Z]\d{3})`\s*\(([^)]+)\)\s*\|\s*([^|]+?)\s*\|")
+
+# docs shorthand -> canonical severity names
+_SEV = {"warn": "warning", "warning": "warning", "error": "error",
+        "info": "info"}
+
+
+def parse_doc_rows(text: str) -> dict[str, tuple[set[str], str]]:
+    rows: dict[str, tuple[set[str], str]] = {}
+    errors = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        m = _ROW.match(line.strip())
+        if not m:
+            continue
+        rule, sev_field, layer = m.group(1), m.group(2), m.group(3)
+        if rule in rows:
+            errors.append(f"{DOC.name}:{lineno}: duplicate row for {rule}")
+            continue
+        sevs = set()
+        for part in sev_field.split("/"):
+            part = part.strip()
+            if part not in _SEV:
+                errors.append(f"{DOC.name}:{lineno}: {rule}: unknown "
+                              f"severity {part!r}")
+                continue
+            sevs.add(_SEV[part])
+        rows[rule] = (sevs, layer)
+    if errors:
+        raise SystemExit("\n".join(errors))
+    return rows
+
+
+def check() -> list[str]:
+    from repro.analyze import RULES, SEVERITIES
+
+    rows = parse_doc_rows(DOC.read_text())
+    problems = []
+    for rule in sorted(set(RULES) - set(rows)):
+        problems.append(f"{rule}: registered in repro.analyze.RULES but "
+                        f"missing from the {DOC.name} catalog table")
+    for rule in sorted(set(rows) - set(RULES)):
+        problems.append(f"{rule}: documented in {DOC.name} but not "
+                        f"registered in repro.analyze.RULES")
+    for rule in sorted(set(RULES) & set(rows)):
+        severity, layer, _ = RULES[rule]
+        doc_sevs, doc_layer = rows[rule]
+        if severity not in SEVERITIES:
+            problems.append(f"{rule}: RULES severity {severity!r} is not "
+                            f"one of {sorted(SEVERITIES)}")
+        if severity not in doc_sevs:
+            problems.append(f"{rule}: RULES severity {severity!r} not "
+                            f"among documented {sorted(doc_sevs)}")
+        if layer != doc_layer:
+            problems.append(f"{rule}: layer mismatch — RULES says "
+                            f"{layer!r}, {DOC.name} says {doc_layer!r}")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for p in problems:
+        print(p, file=sys.stderr)
+    n_rules = len(__import__("repro.analyze", fromlist=["RULES"]).RULES)
+    if problems:
+        print(f"check_rules: FAIL ({len(problems)} mismatch(es) across "
+              f"{n_rules} rules)", file=sys.stderr)
+        return 1
+    print(f"check_rules: OK ({n_rules} rules, catalog and docs agree)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,12 +14,18 @@ observe a stall after the fact).  Three layers:
    safety, decode-path buffer depth, replica fault-policy pairing.
    ``ServeEngine(plan=..., validate=True)`` runs it at load time.
 3. **Program lint** (:func:`lint_program`) — jaxpr walk over traced
-   prefill/decode/train programs: non-Pallas fallback matmuls, host
+   prefill/decode/loss programs: non-Pallas fallback matmuls, host
    sync points inside fused dispatches, fp32 upcasts on the quantized
-   path.
+   path, stale allowlist entries across full-family sweeps.
+4. **Kernel-IR verification** (:func:`lint_kernels`) — trace each
+   kernel family's ``pallas_call`` IR, replay the body's DMA/compute
+   events per grid step, and prove the emitted kernel realizes the
+   schedule layers 1–2 reason about: residency timeline, prefetch
+   look-ahead, VMEM bank pattern, HBM streaming order, alias liveness.
 
-``scripts/analyze.py`` runs all three over the model-family configs;
-CI gates on it.  Rule ids (``RULES``) are stable API.
+``scripts/analyze.py`` runs all four over the model-family configs
+(``--kernels`` selects layer 4's INTERPRET_SPACE sweep); CI gates on
+it.  Rule ids (``RULES``) are stable API.
 """
 
 from __future__ import annotations
@@ -27,14 +33,23 @@ from __future__ import annotations
 from repro.analyze.diagnostics import SEVERITIES, Diagnostic, Report
 from repro.analyze.driver import FAMILY_ARCHS, analyze_arch, analyze_families
 from repro.analyze.hazards import bank_access_pattern, check_config, simulate_schedule
+from repro.analyze.kernel_lint import (
+    KERNEL_FAMILIES,
+    KernelIR,
+    lint_kernel_ir,
+    lint_kernels,
+    trace_kernel_irs,
+)
 from repro.analyze.plan_lint import lint_cluster, lint_page_geometry, lint_plan
-from repro.analyze.program_lint import DEFAULT_ALLOW, lint_program
+from repro.analyze.program_lint import DEFAULT_ALLOW, check_allowlist, lint_program
 
 __all__ = [
     "Diagnostic", "Report", "SEVERITIES", "RULES",
     "check_config", "simulate_schedule", "bank_access_pattern",
     "lint_plan", "lint_page_geometry", "lint_cluster", "lint_program",
-    "DEFAULT_ALLOW",
+    "check_allowlist", "DEFAULT_ALLOW",
+    "KERNEL_FAMILIES", "KernelIR", "trace_kernel_irs", "lint_kernel_ir",
+    "lint_kernels",
     "FAMILY_ARCHS", "analyze_arch", "analyze_families",
 ]
 
@@ -100,4 +115,25 @@ RULES = {
     "ZS-P003": ("warning", "program",
                 "the quantized path never dequantizes into a "
                 "full-precision matmul"),
+    "ZS-P004": ("warning", "program",
+                "the fallback allowlist stays live: every sanctioned "
+                "site still exists across the full-family sweep"),
+    "ZS-K001": ("error", "kernel-ir",
+                "kernel/config schedule coherence: the IR-derived "
+                "residency timeline matches RevolvingSchedule, the "
+                "hazard simulation and the declared contract"),
+    "ZS-K002": ("error", "kernel-ir",
+                "no overlapping VMEM windows across in-flight grid "
+                "steps (a DMA never lands in a slot a step still "
+                "reads)"),
+    "ZS-K003": ("error", "kernel-ir",
+                "the derived compute/DMA access pattern stays "
+                "bank-disjoint under the Dobu mapping"),
+    "ZS-K004": ("error", "kernel-ir",
+                "HBM streaming: the grid walk never revisits an "
+                "output block after eviction (accumulation runs are "
+                "contiguous)"),
+    "ZS-K005": ("error", "kernel-ir",
+                "input_output_aliases never overwrite an input window "
+                "a later grid step still reads"),
 }

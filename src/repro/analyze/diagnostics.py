@@ -33,15 +33,22 @@ class Diagnostic:
     where: str
     message: str
     hint: str = ""
+    #: occurrences collapsed into this record (see ``Report.dedupe``)
+    count: int = 1
 
     def __post_init__(self):
         if self.severity not in SEVERITIES:
             raise ValueError(f"Diagnostic.severity must be one of "
                              f"{SEVERITIES}, got {self.severity!r}")
+        if not isinstance(self.count, int) or self.count < 1:
+            raise ValueError(f"Diagnostic.count must be a positive "
+                             f"integer, got {self.count!r}")
 
     def format(self) -> str:
         line = f"{self.severity.upper():7s} {self.rule} [{self.where}] " \
                f"{self.message}"
+        if self.count > 1:
+            line += f"  (x{self.count})"
         if self.hint:
             line += f"  (fix: {self.hint})"
         return line
@@ -89,8 +96,39 @@ class Report:
     def rule_counts(self) -> dict[str, int]:
         counts: dict[str, int] = {}
         for d in self.diagnostics:
-            counts[d.rule] = counts.get(d.rule, 0) + 1
+            counts[d.rule] = counts.get(d.rule, 0) + d.count
         return dict(sorted(counts.items()))
+
+    def dedupe(self) -> "Report":
+        """Collapse identical ``(rule, where, message)`` findings.
+
+        Configuration sweeps (INTERPRET_SPACE × kernel families) repeat
+        the same finding per swept config; a deduped report emits each
+        once with an occurrence ``count`` so real findings are not
+        drowned.  Order of first occurrence is preserved; the worst
+        severity and the first non-empty hint win.  ``meta`` is carried
+        over and gains ``dedup`` (collapsed occurrence counts per
+        ``rule@where``) so the totals survive serialization.
+        """
+        merged: dict[tuple, Diagnostic] = {}
+        for d in self.diagnostics:
+            key = (d.rule, d.where, d.message)
+            prev = merged.get(key)
+            if prev is None:
+                merged[key] = d
+                continue
+            sev = min(prev.severity, d.severity,
+                      key=SEVERITIES.index)
+            merged[key] = dataclasses.replace(
+                prev, severity=sev, hint=prev.hint or d.hint,
+                count=prev.count + d.count)
+        out = Report(merged.values())
+        out.meta = dict(self.meta)
+        dup = {f"{d.rule}@{d.where}": d.count
+               for d in merged.values() if d.count > 1}
+        if dup:
+            out.meta["dedup"] = dup
+        return out
 
     def worst(self) -> str | None:
         """The most severe level present (None when clean)."""

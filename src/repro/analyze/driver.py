@@ -8,13 +8,21 @@ three analyzer layers over the result:
 
   1. :func:`repro.analyze.lint_plan` — plan artifact legality plus the
      per-entry revolving-buffer hazard simulation (ZS-S*/ZS-L* rules);
-  2. :func:`repro.analyze.lint_program` over the ``prefill`` and
-     ``decode`` jaxprs — non-kernel fallback matmuls, host callbacks
-     (ZS-P* rules);
+  2. :func:`repro.analyze.lint_program` over the ``prefill``,
+     ``decode`` and ``loss`` jaxprs — non-kernel fallback matmuls,
+     host callbacks (ZS-P* rules);
   3. the same program lint over a fused K-step decode+sample block
      (scan of decode + greedy argmax), the dispatch shape
      ``ServeEngine(steps_per_dispatch=K)`` executes — any host sync
      inside it would serialize the zero-stall decode loop.
+
+``analyze_families`` additionally audits the program-lint allowlist:
+across a full five-family sweep every ``DEFAULT_ALLOW`` entry must
+sanction at least one real ``dot_general`` site, or it is stale
+(``ZS-P004``).  The kernel-IR verifier
+(:func:`repro.analyze.kernel_lint.lint_kernels`) is a separate sweep —
+``scripts/analyze.py --kernels`` — because it traces kernels directly
+rather than whole models.
 
 All model/JAX imports are deferred so ``import repro.analyze`` stays
 cheap for users who only want the checkers.
@@ -53,7 +61,7 @@ def analyze_arch(arch: str, *, backend: str = "interpret",
 
     from repro.analyze.diagnostics import Report
     from repro.analyze.plan_lint import lint_plan
-    from repro.analyze.program_lint import lint_program
+    from repro.analyze.program_lint import lint_program, merge_allow_hits
     from repro.configs import get_config
     from repro.models import Ctx, build_model
     from repro.plan import Plan, trace_model
@@ -87,18 +95,35 @@ def analyze_arch(arch: str, *, backend: str = "interpret",
     is_quant = quant is not None
 
     jaxprs = 0
+    allow_hits: dict = {}
+
+    def run_lint(jaxpr):
+        nonlocal jaxprs, allow_hits
+        sub = lint_program(jaxpr, quant=is_quant)
+        report.extend(sub)
+        allow_hits = merge_allow_hits(allow_hits,
+                                      sub.meta.get("allow_hits"))
+        jaxprs += 1
+
     pre = jax.make_jaxpr(
         lambda p, b: model.prefill(p, b, ctx, max_len))(params, batch)
-    report.extend(lint_program(pre, quant=is_quant))
-    jaxprs += 1
+    run_lint(pre)
 
     cache = jax.eval_shape(lambda: model.init_cache(
         1, max_len, jnp.float32, **dict(cache_kwargs or {})))
     tok = jax.ShapeDtypeStruct((1, 1), jnp.int32)
     dec = jax.make_jaxpr(
         lambda p, c, t: model.decode(p, c, t, ctx))(params, cache, tok)
-    report.extend(lint_program(dec, quant=is_quant))
-    jaxprs += 1
+    run_lint(dec)
+
+    # the training objective: exercises the loss-side sanctioned sites
+    # (cross_entropy) no serving trace reaches
+    loss_batch = dict(batch)
+    loss_batch["targets"] = jax.ShapeDtypeStruct(
+        (1, prompt_len), jnp.int32)
+    loss = jax.make_jaxpr(
+        lambda p, b: model.loss(p, b, ctx))(params, loss_batch)
+    run_lint(loss)
 
     if fused_steps > 1:
         # the fused K-step dispatch ServeEngine builds: scan of
@@ -115,14 +140,16 @@ def analyze_arch(arch: str, *, backend: str = "interpret",
             return toks
 
         fused = jax.make_jaxpr(block)(params, cache, tok)
-        report.extend(lint_program(fused, quant=is_quant))
-        jaxprs += 1
+        run_lint(fused)
 
     out = Report()
     out.extend(report)
-    out.meta = {"arch": arch, "family": cfg.family, "backend": backend,
-                "quant": quant, "plan_entries": len(plan.entries),
-                "jaxprs_linted": jaxprs}
+    out = out.dedupe()
+    out.meta.update({"arch": arch, "family": cfg.family,
+                     "backend": backend, "quant": quant,
+                     "plan_entries": len(plan.entries),
+                     "jaxprs_linted": jaxprs,
+                     "allow_hits": allow_hits})
     return out
 
 
@@ -132,11 +159,34 @@ def analyze_families(families=None, *, backend: str = "interpret",
     """Run :func:`analyze_arch` over the family representatives.
 
     Returns ``{arch: Report}`` for ``families`` (all five by default —
-    names may be family keys or explicit arch names).
+    names may be family keys or explicit arch names).  When the sweep
+    covers every family, two audit entries are added:
+
+    * ``"<dense-arch>@jnp"`` — the dense representative re-linted on
+      the explicit jnp backend, whose reference paths
+      (``repro/kernels/`` dot_generals, the ``_gqa_full`` einsums)
+      never appear under pallas/interpret tracing;
+    * ``"allowlist"`` — the merged ``DEFAULT_ALLOW`` hit counts
+      audited for stale entries (``ZS-P004``).
+
+    Partial sweeps skip both — a single-family run legitimately leaves
+    other families' sanctioned sites unmatched.
     """
+    from repro.analyze.program_lint import check_allowlist, merge_allow_hits
+
     picks = []
     for name in (families or list(FAMILY_ARCHS)):
         picks.append(FAMILY_ARCHS.get(name, name))
-    return {arch: analyze_arch(arch, backend=backend, quant=quant,
-                               fused_steps=fused_steps, policy=policy)
-            for arch in picks}
+    out = {arch: analyze_arch(arch, backend=backend, quant=quant,
+                              fused_steps=fused_steps, policy=policy)
+           for arch in picks}
+    covered = {rep.meta.get("family") for rep in out.values()}
+    if covered >= set(FAMILY_ARCHS):
+        dense = FAMILY_ARCHS["dense"]
+        out[f"{dense}@jnp"] = analyze_arch(
+            dense, backend="jnp", quant=quant, fused_steps=fused_steps,
+            policy=policy)
+        merged = merge_allow_hits(*(rep.meta.get("allow_hits", {})
+                                    for rep in out.values()))
+        out["allowlist"] = check_allowlist(merged)
+    return out

@@ -18,7 +18,12 @@ jaxpr of a ``trace_model``-style abstract eval and flags:
 Known-intentional sites (the SSD recurrence einsums, the O(1) decode
 attention against the cache, the tiny MoE router, the loss) are
 allowlisted by source location; the allowlist is an explicit,
-reviewable constant.
+reviewable constant.  Every lint records how often each allowlist
+entry actually sanctioned a ``dot_general``
+(``report.meta["allow_hits"]``); :func:`check_allowlist` turns
+entries that matched nothing across a full-family sweep into
+``ZS-P004`` warnings — a stale entry is a hole the next silent
+fallback walks through unseen.
 """
 
 from __future__ import annotations
@@ -30,7 +35,8 @@ import jax
 
 from repro.analyze.diagnostics import Diagnostic, Report
 
-__all__ = ["lint_program", "DEFAULT_ALLOW"]
+__all__ = ["lint_program", "check_allowlist", "merge_allow_hits",
+           "DEFAULT_ALLOW"]
 
 #: Source-location substrings whose dot_generals are sanctioned.
 #: `repro/kernels/` is the dispatch layer itself (its jnp reference
@@ -112,7 +118,8 @@ def _is_float(aval) -> bool:
 
 
 def _walk(jaxpr, diags: list[Diagnostic], *, allow: tuple[str, ...],
-          min_flops: float, quant: bool) -> None:
+          min_flops: float, quant: bool,
+          hits: dict[str, int] | None = None) -> None:
     # taint: vars holding values dequantized from int8-class storage
     # (convert_element_type int->float), propagated through the
     # elementwise/layout glue a dequant typically runs through
@@ -122,7 +129,11 @@ def _walk(jaxpr, diags: list[Diagnostic], *, allow: tuple[str, ...],
     for eqn in jaxpr.eqns:
         name = eqn.primitive.name
         src = _source_of(eqn)
-        allowed = any(a in src for a in allow)
+        matched = [a for a in allow if a in src]
+        allowed = bool(matched)
+        if hits is not None and name == "dot_general":
+            for a in matched:
+                hits[a] += 1
 
         if "callback" in name or name in _CALLBACK_PRIMS:
             diags.append(Diagnostic(
@@ -166,7 +177,8 @@ def _walk(jaxpr, diags: list[Diagnostic], *, allow: tuple[str, ...],
                          "ahead of the kernel"))
 
         for sub in _sub_jaxprs(eqn):
-            _walk(sub, diags, allow=allow, min_flops=min_flops, quant=quant)
+            _walk(sub, diags, allow=allow, min_flops=min_flops,
+                  quant=quant, hits=hits)
 
 
 def lint_program(target: Callable | Any, *args,
@@ -188,6 +200,43 @@ def lint_program(target: Callable | Any, *args,
         target = jax.make_jaxpr(target)(*args, **kwargs)
     jaxpr = _jaxpr_of(target)
     diags: list[Diagnostic] = []
+    hits = {a: 0 for a in allow}
     _walk(jaxpr, diags, allow=tuple(allow), min_flops=float(min_flops),
-          quant=quant)
-    return Report(diags)
+          quant=quant, hits=hits)
+    report = Report(diags)
+    report.meta["allow_hits"] = hits
+    return report
+
+
+def merge_allow_hits(*hit_maps: dict) -> dict:
+    """Sum per-entry allowlist hit counts across several lints."""
+    out: dict[str, int] = {}
+    for hm in hit_maps:
+        for entry, n in (hm or {}).items():
+            out[entry] = out.get(entry, 0) + int(n)
+    return out
+
+
+def check_allowlist(hits: dict, *, allow: tuple[str, ...] = DEFAULT_ALLOW,
+                    where: str = "program-lint") -> Report:
+    """Flag allowlist entries that sanctioned nothing (``ZS-P004``).
+
+    ``hits`` is a (merged) ``allow_hits`` map from :func:`lint_program`
+    runs.  Only meaningful over a sweep that exercises every model
+    family — a single-arch run legitimately leaves other families'
+    entries unmatched, so the driver arms this check only for
+    full-family sweeps.  Stale entries are warnings: they don't break
+    the build, but each one is a sanctioned site that no longer exists,
+    silently widening what a future fallback may hide behind.
+    """
+    report = Report()
+    for entry in allow:
+        if hits.get(entry, 0) == 0:
+            report.add(Diagnostic(
+                rule="ZS-P004", severity="warning", where=where,
+                message=f"allowlist entry {entry!r} matched no "
+                        f"dot_general site across the sweep (stale)",
+                hint="remove the entry from DEFAULT_ALLOW, or restore "
+                     "the sanctioned site it used to cover"))
+    report.meta["allow_hits"] = dict(hits)
+    return report

@@ -120,6 +120,25 @@ class RevolvingSchedule:
                 prefetch_slot=None if nxt is None else self.slot_of(nxt),
             )
 
+    def timeline(self) -> dict:
+        """Canonical event timeline the emitted kernels must realize.
+
+        Returns ``{"prologue": [(step, slot), ...], "phases":
+        [(t, compute_slot, prefetch_step, prefetch_slot), ...]}`` — the
+        reference the kernel-IR verifier
+        (:mod:`repro.analyze.kernel_lint`) diffs an observed DMA/compute
+        trace against.  The prologue lists the steps primed before any
+        compute; each phase names the slot step t computes from and the
+        step/slot its concurrent prefetch targets (None when the
+        schedule issues none).
+        """
+        return {
+            "prologue": [(s, self.slot_of(s))
+                         for s in self.prologue_steps()],
+            "phases": [(ph.step, ph.compute_slot, ph.prefetch_step,
+                        ph.prefetch_slot) for ph in self.phases()],
+        }
+
     def live_slots(self, t: int) -> set[int]:
         """Slots still holding un-consumed operands when step t issues
         its prefetch: this step's own slot plus the slots primed for

@@ -37,6 +37,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.meta import kernel_name, register_family
+
+# pipeline-managed double buffering (BlockSpec windows, no manual DMA);
+# only the kv streaming axis (last) must stay sequential — m/l/acc are
+# re-initialized at every j == 0
+_META = register_family("flash_attention", grid_rank=3,
+                        managed_dma=False, sequential_axes="last")
 
 __all__ = ["flash_attention"]
 
@@ -161,7 +168,7 @@ def flash_attention(
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-        name="flash_attention",
+        name=kernel_name("flash_attention"),
     )(q_lens.astype(jnp.int32), kv_lens.astype(jnp.int32),
       q_offsets.astype(jnp.int32), qf, kf, vf)
     return of.reshape(B, H, Sq, D)

@@ -27,7 +27,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.meta import kernel_name, register_family
 from repro.kernels.zero_stall_matmul import resolve_slots
+
+_META = register_family("grouped_zero_stall_matmul", grid_rank=4,
+                        managed_dma=True, sequential_axes="all")
 
 __all__ = ["grouped_zero_stall_matmul"]
 
@@ -147,5 +151,5 @@ def grouped_zero_stall_matmul(
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",) * 4),
         interpret=interpret,
-        name=f"grouped_zero_stall_matmul_s{slots}",
+        name=kernel_name("grouped_zero_stall_matmul", slots=slots),
     )(a, b)

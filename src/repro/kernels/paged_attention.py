@@ -35,6 +35,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.meta import kernel_name, register_family
+
+_META = register_family("paged_attention", grid_rank=2,
+                        managed_dma=False, sequential_axes="last")
 
 __all__ = ["paged_attention"]
 
@@ -141,6 +145,6 @@ def paged_attention(
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-        name="paged_attention",
+        name=kernel_name("paged_attention"),
     )(pt_flat, kv_lens.astype(jnp.int32), qf, k_pool, v_pool)
     return of.reshape(B, H, D)

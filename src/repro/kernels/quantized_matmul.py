@@ -36,7 +36,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.meta import kernel_name, register_family
 from repro.kernels.zero_stall_matmul import resolve_slots
+
+_META = register_family("quantized_zero_stall_matmul", grid_rank=3,
+                        managed_dma=True, sequential_axes="all")
+_GROUPED_META = register_family("quantized_grouped_zero_stall_matmul",
+                                grid_rank=4, managed_dma=True,
+                                sequential_axes="all")
 
 __all__ = ["quantized_zero_stall_matmul", "quantized_grouped_zero_stall_matmul"]
 
@@ -198,7 +205,8 @@ def quantized_zero_stall_matmul(
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-        name=f"quantized_zero_stall_matmul_s{slots}_{grid_order}",
+        name=kernel_name("quantized_zero_stall_matmul", slots=slots,
+                         grid_order=grid_order),
     )(a, b, a_scale.astype(jnp.float32), b_scale.astype(jnp.float32))
 
 
@@ -327,5 +335,6 @@ def quantized_grouped_zero_stall_matmul(
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",) * 4),
         interpret=interpret,
-        name=f"quantized_grouped_zero_stall_matmul_s{slots}",
+        name=kernel_name("quantized_grouped_zero_stall_matmul",
+                         slots=slots),
     )(a, b, a_scale.astype(jnp.float32), b_scale.astype(jnp.float32))

@@ -54,12 +54,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.meta import kernel_name, register_family
 # canonical (variant, slots) rules — shared with KernelConfig validation
 from repro.plan.config import resolve_slots
 
 __all__ = ["zero_stall_matmul", "DEFAULT_TILES", "resolve_slots"]
 
 DEFAULT_TILES = (128, 128, 128)  # MXU-aligned (multiples of 128)
+
+# manual-DMA revolving buffer: every grid axis carries DMA/accumulator
+# state, so all three must stay sequential ("arbitrary")
+_META = register_family("zero_stall_matmul", grid_rank=3,
+                        managed_dma=True, sequential_axes="all")
 
 
 def _kernel(a_hbm, b_hbm, c_ref, a_vmem, b_vmem, acc, sem_a, sem_b, *,
@@ -211,5 +217,6 @@ def zero_stall_matmul(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-        name=f"zero_stall_matmul_s{slots}_{grid_order}",
+        name=kernel_name("zero_stall_matmul", slots=slots,
+                         grid_order=grid_order),
     )(a, b)

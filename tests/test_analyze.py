@@ -403,3 +403,79 @@ def test_serve_engine_validate_accepts_good_plan():
     eng = ServeEngine(model, params, ctx, num_slots=2, max_len=16,
                       plan=good, validate=True)
     assert eng.plan is good
+
+
+# ----------------------------------------------------------------------
+# report deduplication (sweeps repeat identical findings per config)
+# ----------------------------------------------------------------------
+def test_report_dedupe_collapses_with_counts():
+    rep = Report()
+    for _ in range(3):
+        rep.add(Diagnostic(rule="ZS-S001", severity="error", where="k",
+                           message="same finding"))
+    rep.add(Diagnostic(rule="ZS-S001", severity="error", where="k",
+                       message="different finding"))
+    out = rep.dedupe()
+    assert len(out) == 2
+    collapsed = next(d for d in out.diagnostics
+                     if d.message == "same finding")
+    assert collapsed.count == 3
+    # totals survive: rule_counts sums counts, not records
+    assert out.rule_counts() == {"ZS-S001": 4}
+    # ...and serialization: the collapsed occurrences land in meta
+    assert out.meta["dedup"] == {"ZS-S001@k": 3}
+    assert "(x3)" in collapsed.format()
+
+
+def test_report_dedupe_keeps_worst_severity_and_meta():
+    rep = Report()
+    rep.meta["arch"] = "gemma-7b"
+    rep.add(Diagnostic(rule="ZS-L003", severity="warning", where="p",
+                       message="m"))
+    rep.add(Diagnostic(rule="ZS-L003", severity="error", where="p",
+                       message="m", hint="fix it"))
+    out = rep.dedupe()
+    assert len(out) == 1
+    d = out.diagnostics[0]
+    assert d.severity == "error" and d.count == 2 and d.hint == "fix it"
+    assert out.meta["arch"] == "gemma-7b"
+
+
+# ----------------------------------------------------------------------
+# allowlist staleness (ZS-P004)
+# ----------------------------------------------------------------------
+def test_lint_program_counts_allow_hits():
+    from repro.analyze.program_lint import DEFAULT_ALLOW
+
+    def f(x):                       # raw jnp matmul: sanctioned nowhere
+        return jnp.dot(x, x)
+
+    rep = lint_program(jax.make_jaxpr(f)(jnp.ones((64, 64))))
+    hits = rep.meta["allow_hits"]
+    assert set(hits) == set(DEFAULT_ALLOW)
+    assert all(n == 0 for n in hits.values())
+
+
+def test_check_allowlist_flags_stale_entry():
+    from repro.analyze.program_lint import check_allowlist
+
+    allow = ("repro/kernels/", "in _does_not_exist")
+    rep = check_allowlist({"repro/kernels/": 7, "in _does_not_exist": 0},
+                          allow=allow)
+    assert rep.rules() == {"ZS-P004"}
+    assert len(rep.warnings) == 1
+    assert "_does_not_exist" in rep.warnings[0].message
+
+
+def test_check_allowlist_clean_when_every_entry_hits():
+    from repro.analyze.program_lint import DEFAULT_ALLOW, check_allowlist
+
+    rep = check_allowlist({a: 1 for a in DEFAULT_ALLOW})
+    assert not len(rep)
+
+
+def test_merge_allow_hits_sums_per_entry():
+    from repro.analyze.program_lint import merge_allow_hits
+
+    merged = merge_allow_hits({"a": 1, "b": 0}, {"a": 2, "c": 5}, None)
+    assert merged == {"a": 3, "b": 0, "c": 5}

@@ -1,0 +1,99 @@
+"""scripts/analyze.py: the CLI contract CI relies on.
+
+Exit codes are API — the CI gates (`--all-families --fail-on warning`,
+`--kernels --fail-on warning`) turn them into merge blockers:
+
+  * 0  — analysis ran and nothing at/above the threshold was found;
+  * 1  — diagnostics at/above ``--fail-on`` severity;
+  * 2  — usage error (unknown arch) before any analysis runs.
+
+The full-sweep paths are exercised in-process (monkeypatched
+reporters) so tier-1 stays fast; the real sweeps run as dedicated CI
+steps.
+"""
+
+import importlib.util
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPT = REPO / "scripts" / "analyze.py"
+ENV = {**os.environ, "JAX_PLATFORMS": "cpu",
+       "PYTHONPATH": str(REPO / "src")}
+
+
+def run_cli(*args, timeout=600):
+    return subprocess.run([sys.executable, str(SCRIPT), *args],
+                          capture_output=True, text=True, env=ENV,
+                          timeout=timeout)
+
+
+def load_main():
+    spec = importlib.util.spec_from_file_location("analyze_cli", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ----------------------------------------------------------------------
+# subprocess: real exit codes
+# ----------------------------------------------------------------------
+def test_unknown_arch_exits_2_before_analyzing():
+    res = run_cli("--arch", "not-a-model")
+    assert res.returncode == 2, res.stderr
+    assert "unknown arch 'not-a-model'" in res.stderr
+
+
+def test_kernels_attention_family_passes_fail_on_warning():
+    res = run_cli("--kernels", "--kernel-family", "attention",
+                  "--fail-on", "warning")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "kernels verified" in res.stdout
+    assert "PASS" in res.stdout
+
+
+def test_kernels_rejects_unknown_family_as_usage_error():
+    res = run_cli("--kernels", "--kernel-family", "warp")
+    assert res.returncode == 2
+    assert "invalid choice" in res.stderr
+
+
+# ----------------------------------------------------------------------
+# in-process: --fail-on thresholding (sweeps monkeypatched out)
+# ----------------------------------------------------------------------
+@pytest.fixture
+def warning_report(monkeypatch):
+    import repro.analyze
+    from repro.analyze import Diagnostic, Report
+
+    rep = Report([Diagnostic(rule="ZS-K001", severity="warning",
+                             where="k", message="synthetic warning")])
+    rep.meta.update({"kernels_verified": 1, "families": {"fake": 1},
+                     "zs_k_errors": 0})
+    monkeypatch.setattr(repro.analyze, "lint_kernels",
+                        lambda families=None: rep)
+    return rep
+
+
+def test_fail_on_warning_fails_on_warning_report(warning_report,
+                                                 monkeypatch, capsys):
+    mod = load_main()
+    monkeypatch.setattr(sys, "argv",
+                        ["analyze.py", "--kernels", "--fail-on",
+                         "warning"])
+    assert mod.main() == 1
+    assert "FAIL (fail-on=warning)" in capsys.readouterr().out
+
+
+def test_fail_on_error_tolerates_warning_report(warning_report,
+                                                monkeypatch, capsys):
+    mod = load_main()
+    monkeypatch.setattr(sys, "argv",
+                        ["analyze.py", "--kernels", "--fail-on",
+                         "error"])
+    assert mod.main() == 0
+    assert "PASS" in capsys.readouterr().out
